@@ -1,0 +1,122 @@
+"""Ablation: which of Sponge's three pillars carries the result?
+
+The paper motivates (1) in-place vertical scaling, (2) EDF reordering,
+(3) dynamic batching, but only evaluates the full system.  This ablation
+removes one pillar at a time, plus the paper's own future-work extension
+(joint vertical+horizontal under an overload ramp).
+"""
+from __future__ import annotations
+
+import heapq
+import time
+from dataclasses import dataclass
+
+import numpy as np
+
+from repro.core.baselines import SpongePolicy, StaticPolicy
+from repro.core.multidim import MultiDimPolicy
+from repro.core.perf_model import yolov5s_like
+from repro.core.queueing import EDFQueue
+from repro.core.scaler import SpongeScaler
+from repro.core.slo import Request
+from repro.core.solver import DEFAULT_B, DEFAULT_C
+from repro.network.traces import synth_4g_trace
+from repro.serving.simulator import ClusterSimulator
+from repro.serving.workload import WorkloadGenerator
+
+
+class FIFOQueue(EDFQueue):
+    """No-reordering ablation: service order = arrival order (deadlines are
+    still tracked for the solver's budget snapshot)."""
+
+    def push(self, req: Request) -> None:
+        heapq.heappush(self._heap, (req.arrival, req.id, req))
+
+    def snapshot_remaining(self, now: float):
+        return sorted(r.deadline - now for _, _, r in self._heap)
+
+
+@dataclass
+class FixedBatchSponge(SpongePolicy):
+    """No-dynamic-batching ablation: vertical scaling + EDF, b pinned."""
+    b_fixed: int = 1
+    name: str = "sponge-b1"
+
+    def on_tick(self, now: float, sim) -> None:
+        super().on_tick(now, sim)
+        sim.set_batch(self.b_fixed)
+
+
+def _run(perf, policy, reqs, c0=16, fifo=False, rps=20.0):
+    sim = ClusterSimulator(perf, policy, DEFAULT_C, DEFAULT_B, c0=c0)
+    if fifo:
+        sim.queue = FIFOQueue()
+    sim.monitor.rate.prior_rps = rps
+    return sim.run(reqs)
+
+
+def run() -> list[tuple[str, float, str]]:
+    t0 = time.perf_counter()
+    perf = yolov5s_like()
+    trace = synth_4g_trace(600, seed=42)
+    # heterogeneous client classes: half tight (0.6 s), half loose (1.6 s)
+    # SLOs — the regime where EDF reordering can matter at all (with
+    # uniform SLOs FIFO == EDF up to ties)
+    wl_tight = WorkloadGenerator(rps=10, slo=0.6, size_kb=100, seed=1)
+    wl_loose = WorkloadGenerator(rps=10, slo=1.6, size_kb=400, seed=2)
+    mixed = sorted(wl_tight.generate(trace) + wl_loose.generate(trace),
+                   key=lambda r: r.arrival)
+    rows = []
+    print("\n== Ablation: Sponge's three pillars "
+          "(2x10 RPS, SLOs 0.6s/1.6s mixed) ==")
+    variants = [
+        ("full", SpongePolicy(SpongeScaler(perf)), False),
+        ("no-EDF (FIFO)", SpongePolicy(SpongeScaler(perf)), True),
+        ("no-dyn-batch (b=1)",
+         FixedBatchSponge(SpongeScaler(perf, b_set=(1,)),
+                          name="sponge-b1"), False),
+        ("no-vertical (static-16)", StaticPolicy(perf, cores=16), False),
+    ]
+    print(f"{'variant':<26} {'viol %':>8} {'avg cores':>10}")
+    for name, pol, fifo in variants:
+        r = _run(perf, pol, [Request.make(arrival=q.arrival,
+                                          comm_latency=q.comm_latency,
+                                          slo=q.slo, size_kb=q.size_kb)
+                             for q in mixed], fifo=fifo)
+        print(f"{name:<26} {r['violation_rate']*100:>8.2f} "
+              f"{r['avg_cores']:>10.2f}")
+        rows.append((f"ablation_{name.split()[0]}",
+                     (time.perf_counter() - t0) * 1e6,
+                     f"viol={r['violation_rate']*100:.2f};"
+                     f"cores={r['avg_cores']:.2f}"))
+
+    # --- overload ramp: the paper's multidimensional-scaling future work --
+    print("\n== Overload ramp (20 -> 60 RPS at t=200): single vs multidim ==")
+    reqs = []
+    rng = np.random.default_rng(0)
+    from repro.network.latency import comm_latency
+    for t_ in np.arange(0, 600, 1.0):
+        rate = 20.0 if t_ < 200 else 60.0
+        for i in range(int(rate)):
+            ts = t_ + i / rate
+            cl = comm_latency(200, trace, ts)
+            reqs.append(Request.make(arrival=ts + cl, comm_latency=cl,
+                                     slo=1.0))
+    single = _run(perf, SpongePolicy(SpongeScaler(perf)),
+                  list(reqs), rps=20)
+    multi = _run(perf, MultiDimPolicy(SpongeScaler(perf)),
+                 list(reqs), rps=20)
+    print(f"{'sponge-single':<26} {single['violation_rate']*100:>8.2f} "
+          f"{single['avg_cores']:>10.2f}")
+    print(f"{'sponge-multidim':<26} {multi['violation_rate']*100:>8.2f} "
+          f"{multi['avg_cores']:>10.2f}")
+    rows.append(("ablation_ramp_single", (time.perf_counter() - t0) * 1e6,
+                 f"viol={single['violation_rate']*100:.2f}"))
+    rows.append(("ablation_ramp_multidim", (time.perf_counter() - t0) * 1e6,
+                 f"viol={multi['violation_rate']*100:.2f};"
+                 f"cores={multi['avg_cores']:.2f}"))
+    return rows
+
+
+if __name__ == "__main__":
+    run()

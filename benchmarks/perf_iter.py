@@ -1,0 +1,53 @@
+"""§Perf iteration reproducer: baseline vs tuned roofline terms for the
+three hillclimbed pairs, read from the dry-run artifacts (re-run
+`python -m repro.launch.dryrun --arch A --shape S [--opt tuned]` to
+regenerate; full narrative in EXPERIMENTS.md §Perf)."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+import time
+
+DIRS = {"baseline": "experiments/dryrun", "tuned": "experiments/perf"}
+PAIRS = [("smollm-135m", "train_4k"),
+         ("rwkv6-1.6b", "decode_32k"),
+         ("kimi-k2-1t-a32b", "decode_32k"),
+         ("deepseek-v3-671b", "decode_32k")]
+ROOT = os.path.join(os.path.dirname(__file__), "..")
+
+
+def _load(d, arch, shape, suffix):
+    pat = os.path.join(ROOT, d, f"{arch}_{shape}_16x16{suffix}.json")
+    fs = glob.glob(pat)
+    return json.load(open(fs[0])) if fs else None
+
+
+def run() -> list[tuple[str, float, str]]:
+    t0 = time.perf_counter()
+    rows = []
+    print("\n== Perf iterations: baseline vs tuned (16x16) ==")
+    print(f"{'pair':<34} {'step_ms base':>13} {'step_ms tuned':>14} {'gain':>6}")
+    for arch, shape in PAIRS:
+        b = _load(DIRS["baseline"], arch, shape, "")
+        t = _load(DIRS["tuned"], arch, shape, "-tuned")
+        if not (b and t):
+            continue
+        def step(r):
+            rf = r["roofline"]
+            return (max(rf["compute_s"], rf["memory_s"])
+                    + rf["collective_s"]) * 1e3
+        sb, st_ = step(b), step(t)
+        gain = sb / max(st_, 1e-9)
+        print(f"{arch + ' x ' + shape:<34} {sb:>13.1f} {st_:>14.1f} "
+              f"{gain:>5.1f}x")
+        rows.append((f"perf_{arch}_{shape}_gain",
+                     (time.perf_counter() - t0) * 1e6, f"{gain:.2f}"))
+    if not rows:
+        print("(no artifacts; run the dry-runs first)")
+        rows.append(("perf_pairs", 0.0, "0"))
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,52 @@
+"""Beyond-paper study: reactive Sponge vs predictive Sponge under deep
+fades (the regime where reactive control is structurally late)."""
+from __future__ import annotations
+
+import time
+
+from repro.core.baselines import SpongePolicy
+from repro.core.perf_model import yolov5s_like
+from repro.core.predictive import (PredictivePolicy, PredictiveSpongeScaler,
+                                   TelemetryPolicy)
+from repro.core.scaler import SpongeScaler
+from repro.core.solver import DEFAULT_B, DEFAULT_C
+from repro.network.traces import synth_4g_trace
+from repro.serving.simulator import ClusterSimulator
+from repro.serving.workload import WorkloadGenerator
+
+
+def _run(perf, policy, trace, rps=20.0):
+    wl = WorkloadGenerator(rps=rps, slo=1.0, size_kb=200)
+    sim = ClusterSimulator(perf, policy, DEFAULT_C, DEFAULT_B, c0=16)
+    sim.monitor.rate.prior_rps = rps
+    return sim.run(wl.generate(trace))
+
+
+def run() -> list[tuple[str, float, str]]:
+    t0 = time.perf_counter()
+    perf = yolov5s_like()
+    rows = []
+    print("\n== Beyond-paper: reactive vs predictive Sponge ==")
+    print(f"{'trace':>10} {'reactive':>9} {'holt-pred':>10} {'telemetry':>10} "
+          f"{'cores r/h/t':>20}")
+    for lo, seed in ((0.5, 42), (0.3, 42), (0.3, 7)):
+        trace = synth_4g_trace(600, seed=seed, lo=lo)
+        r1 = _run(perf, SpongePolicy(SpongeScaler(perf)), trace)
+        r2 = _run(perf, PredictivePolicy(PredictiveSpongeScaler(perf)),
+                  trace)
+        r3 = _run(perf, TelemetryPolicy(SpongeScaler(perf), trace), trace)
+        print(f"{lo:>6.1f}/{seed:<3d} {r1['violation_rate']*100:>8.2f}% "
+              f"{r2['violation_rate']*100:>9.2f}% "
+              f"{r3['violation_rate']*100:>9.2f}% "
+              f"{r1['avg_cores']:>6.2f}/{r2['avg_cores']:.2f}/"
+              f"{r3['avg_cores']:.2f}")
+        rows.append((f"predictive_lo{lo}_s{seed}_viol_pct",
+                     (time.perf_counter() - t0) * 1e6,
+                     f"react={r1['violation_rate']*100:.2f};"
+                     f"holt={r2['violation_rate']*100:.2f};"
+                     f"telem={r3['violation_rate']*100:.2f}"))
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,53 @@
+"""Roofline table from the dry-run artifacts (experiments/dryrun/*.json).
+
+Single-pod (16x16) rows per §Roofline: the three terms in ms, dominant
+bottleneck, MODEL_FLOPS/HLO_FLOPS useful ratio.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+import time
+
+DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                          "dryrun")
+
+
+def load(mesh: str = "16x16") -> list[dict]:
+    recs = []
+    for f in sorted(glob.glob(os.path.join(DRYRUN_DIR, f"*_{mesh}.json"))):
+        with open(f) as fh:
+            recs.append(json.load(fh))
+    return recs
+
+
+def run() -> list[tuple[str, float, str]]:
+    t0 = time.perf_counter()
+    recs = load()
+    rows = []
+    if not recs:
+        print("\n== Roofline: no dry-run artifacts found "
+              "(run python -m repro.launch.dryrun --all) ==")
+        return [("roofline_rows", 0.0, "0")]
+    print("\n== Roofline (single-pod 16x16 = 256 chips, TPU v5e terms) ==")
+    print(f"{'arch':<18} {'shape':<12} {'comp ms':>9} {'mem ms':>10} "
+          f"{'coll ms':>9} {'dominant':>10} {'useful':>7}")
+    dom_count = {}
+    for r in recs:
+        rf = r["roofline"]
+        dom_count[rf["dominant"]] = dom_count.get(rf["dominant"], 0) + 1
+        print(f"{r['arch']:<18} {r['shape']:<12} "
+              f"{rf['compute_s']*1e3:>9.2f} {rf['memory_s']*1e3:>10.2f} "
+              f"{rf['collective_s']*1e3:>9.2f} {rf['dominant']:>10} "
+              f"{rf['useful_ratio']:>7.2f}")
+    dt = (time.perf_counter() - t0) * 1e6
+    print(f"dominant-term distribution: {dom_count}")
+    rows.append(("roofline_rows", dt, str(len(recs))))
+    for k, v in dom_count.items():
+        rows.append((f"roofline_dominant_{k}", dt, str(v)))
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,53 @@
+"""Benchmark harness: one entry per paper table/figure + system benches.
+
+Prints ``name,us_per_call,derived`` CSV at the end (per harness contract).
+
+    PYTHONPATH=src python -m benchmarks.run [--only fig4]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+from benchmarks import (ablation_bench, fig1_dynamic_slo, fig3_perf_model,
+                        fig4_e2e, perf_iter, predictive_bench,
+                        roofline_report, solver_bench, table1_latency_grid)
+
+BENCHES = [
+    ("table1", table1_latency_grid),
+    ("fig1", fig1_dynamic_slo),
+    ("fig3", fig3_perf_model),
+    ("fig4", fig4_e2e),
+    ("solver", solver_bench),
+    ("roofline", roofline_report),
+    ("predictive", predictive_bench),
+    ("perf", perf_iter),
+    ("ablation", ablation_bench),
+]
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default="")
+    args = ap.parse_args(argv)
+    rows = []
+    failed = []
+    for name, mod in BENCHES:
+        if args.only and args.only != name:
+            continue
+        try:
+            rows.extend(mod.run())
+        except Exception as e:
+            traceback.print_exc()
+            failed.append((name, repr(e)))
+    print("\nname,us_per_call,derived")
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived}")
+    if failed:
+        print(f"FAILED benches: {failed}", file=sys.stderr)
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,40 @@
+"""Solver micro-benchmark: faithful Algorithm 1 vs the vectorized exact
+solver (same optimum, different asymptotics) across queue sizes."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core.perf_model import yolov5s_like
+from repro.core.solver import solve_bruteforce, solve_pruned
+
+
+def run() -> list[tuple[str, float, str]]:
+    perf = yolov5s_like()
+    rng = np.random.default_rng(0)
+    rows = []
+    print("\n== Solver: Algorithm 1 (bruteforce) vs vectorized ==")
+    print(f"{'queue':>6} {'bruteforce us':>14} {'pruned us':>10} "
+          f"{'same optimum':>13}")
+    for n in (0, 10, 50, 200, 1000):
+        rem = np.clip(rng.normal(0.7, 0.2, n), 0.05, 2.0).tolist()
+        reps = 20
+        t0 = time.perf_counter()
+        for _ in range(reps):
+            d1 = solve_bruteforce(rem, 20.0, perf)
+        t_bf = (time.perf_counter() - t0) / reps * 1e6
+        t0 = time.perf_counter()
+        for _ in range(reps):
+            d2 = solve_pruned(rem, 20.0, perf)
+        t_pr = (time.perf_counter() - t0) / reps * 1e6
+        same = (d1.c, d1.b, d1.feasible) == (d2.c, d2.b, d2.feasible)
+        print(f"{n:>6} {t_bf:>14.0f} {t_pr:>10.0f} {str(same):>13}")
+        rows.append((f"solver_bruteforce_q{n}", t_bf,
+                     f"c={d1.c};b={d1.b}"))
+        rows.append((f"solver_pruned_q{n}", t_pr, f"same={same}"))
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,46 @@
+"""Table 1 reproduction: execution latency / throughput / total cores of the
+profiled model across (cores, batch) while guaranteeing a 1000 ms SLO under
+100 RPS — the paper's motivating example."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core.perf_model import TABLE1_SAMPLES, fit_table1
+
+SLO = 1.0
+RPS = 100.0
+
+
+def run() -> list[tuple[str, float, str]]:
+    t0 = time.perf_counter()
+    pm = fit_table1()
+    rows = []
+    print("\n== Table 1: latency(b,c) of the ResNet human detector ==")
+    print(f"(model fit on the paper's measured points: r2={pm.r2:.3f}, "
+          f"rmse={pm.rmse*1e3:.2f}ms)")
+    print(f"{'cores':>6} {'batch':>6} {'lat ms (paper)':>15} "
+          f"{'lat ms (fit)':>13} {'thr/inst':>9} {'inst':>5} {'total':>6}")
+    for b, c, l_paper in TABLE1_SAMPLES:
+        l_fit = float(pm.latency(b, c))
+        thr = b / l_fit
+        n_inst = int(np.ceil(RPS / thr))
+        print(f"{int(c):>6} {int(b):>6} {l_paper*1e3:>15.0f} "
+              f"{l_fit*1e3:>13.1f} {thr:>9.1f} {n_inst:>5} "
+              f"{int(c)*n_inst:>6}")
+    # paper's §2.1 claim: with 600ms network delay, (c=8, b=4) still works
+    rem = [0.4] * 16
+    from repro.core.solver import solve_bruteforce
+    d = solve_bruteforce(rem, RPS, pm)
+    dt = (time.perf_counter() - t0) * 1e6
+    print(f"600ms-delay scenario -> solver picks c={d.c}, b={d.b} "
+          f"(feasible={d.feasible}; paper: 8 cores, batch 4)")
+    rows.append(("table1_fit_r2", dt, f"{pm.r2:.4f}"))
+    rows.append(("table1_600ms_solution", dt,
+                 f"c={d.c};b={d.b};feasible={d.feasible}"))
+    return rows
+
+
+if __name__ == "__main__":
+    run()

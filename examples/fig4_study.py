@@ -1,0 +1,17 @@
+"""The paper's Fig. 4 study as a runnable example: Sponge vs FA2 vs static
+instances on a 10-minute 4G trace (discrete-event simulation calibrated
+with the YOLOv5s-class perf model).
+
+    PYTHONPATH=src python examples/fig4_study.py [--duration 600]
+"""
+import argparse
+
+from repro.launch.serve import main
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--duration", type=float, default=600.0)
+    ap.add_argument("--rps", type=float, default=20.0)
+    a = ap.parse_args()
+    main(["--mode", "sim", "--duration", str(a.duration),
+          "--rps", str(a.rps)])

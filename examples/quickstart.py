@@ -1,0 +1,41 @@
+"""Quickstart: the Sponge control plane in ~40 lines.
+
+Builds the paper's performance model, submits requests with dynamic
+network-dependent SLO budgets, and watches the scaler pick (cores, batch)
+via the Integer Program (Algorithm 1).
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+from repro.core.perf_model import fit_table1
+from repro.core.queueing import EDFQueue
+from repro.core.scaler import SpongeScaler
+from repro.core.slo import Request
+
+# 1. performance model l(b, c) fitted on the paper's Table 1 measurements
+perf = fit_table1()
+print(f"l(b=4, c=8) = {perf.latency(4, 8)*1e3:.1f} ms "
+      f"(paper measured: 37 ms)")
+
+# 2. EDF queue with requests whose network latency ate part of the SLO
+queue = EDFQueue()
+for i, comm_latency in enumerate([0.05, 0.30, 0.60, 0.12, 0.45]):
+    queue.push(Request.make(arrival=0.0, comm_latency=comm_latency, slo=1.0))
+print(f"queue remaining budgets: "
+      f"{[round(r, 2) for r in queue.snapshot_remaining(0.0)]}")
+
+# 3. the scaler solves the IP: minimal cores + batch meeting every deadline
+scaler = SpongeScaler(perf)
+decision = scaler.decide(now=0.0, queue=queue, lam=100.0)
+print(f"scaler decision: c={decision.c} cores, b={decision.b}, "
+      f"feasible={decision.feasible} "
+      f"({decision.solver_iters} IP iterations, "
+      f"{decision.solver_time*1e6:.0f} us)")
+
+# 4. in-place vertical scaling: apply without cold start
+from repro.core.vertical import VerticalScaledInstance
+inst = VerticalScaledInstance(range(1, 17), range(1, 17), perf, c0=1)
+penalty = inst.resize(decision.c, now=0.0)
+print(f"resized 1 -> {inst.c} cores in-place "
+      f"(penalty {penalty*1e3:.1f} ms; a horizontal cold start is ~10 s)")
+print(f"batch of {decision.b} now serves in "
+      f"{inst.latency(decision.b)*1e3:.0f} ms")

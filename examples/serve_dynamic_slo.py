@@ -1,0 +1,23 @@
+"""End-to-end serving driver (deliverable b): a real reduced model served
+with batched requests behind the full Sponge pipeline — EDF queue, dynamic
+batching, IP-solver scaler, executable-table vertical scaling — under a
+synthetic 4G bandwidth trace.
+
+    PYTHONPATH=src python examples/serve_dynamic_slo.py \
+        [--arch smollm-135m-reduced] [--rps 12] [--duration 8]
+"""
+import argparse
+import sys
+
+sys.argv = [sys.argv[0]] + (sys.argv[1:] or [])
+from repro.launch.serve import main  # noqa: E402
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="smollm-135m-reduced")
+    ap.add_argument("--rps", type=float, default=12.0)
+    ap.add_argument("--duration", type=float, default=8.0)
+    a = ap.parse_args()
+    main(["--mode", "live", "--arch", a.arch, "--rps", str(a.rps),
+          "--duration", str(a.duration), "--slo", "3.0",
+          "--prompt-len", "16", "--gen-tokens", "4"])

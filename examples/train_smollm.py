@@ -1,0 +1,18 @@
+"""Train a ~1M-param SmolLM-family model for a few hundred steps on the
+synthetic pipeline and checkpoint it (deliverable b, training driver).
+The identical code path drives the full 135M config on real hardware.
+
+    PYTHONPATH=src python examples/train_smollm.py [--steps 200]
+"""
+import argparse
+
+from repro.launch.train import main
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--ckpt", default="out/smollm_ckpt")
+    a = ap.parse_args()
+    main(["--arch", "smollm-135m-reduced", "--steps", str(a.steps),
+          "--batch", "8", "--seq", "64", "--lr", "1e-3",
+          "--ckpt", a.ckpt, "--log-every", "20"])

@@ -1,0 +1,73 @@
+"""Pytree checkpointing on np.savez (no external deps).
+
+Layout: one .npz per checkpoint with flattened path->array entries plus a
+metadata json.  Restores to the exemplar pytree's structure and dtypes.
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+from repro.utils.tree import tree_map_with_path
+
+_SEP = "::"
+
+
+def _flatten(tree: Any) -> dict:
+    out = {}
+    tree_map_with_path(lambda p, x: out.__setitem__(p.replace("/", _SEP),
+                                                    np.asarray(x)), tree)
+    return out
+
+
+def save_checkpoint(path: str, tree: Any, step: int = 0,
+                    metadata: Optional[dict] = None) -> str:
+    os.makedirs(path, exist_ok=True)
+    fname = os.path.join(path, f"ckpt_{step:08d}.npz")
+    flat = _flatten(tree)
+    # bfloat16 is not a numpy-native dtype: view as uint16 and tag it
+    tagged = {}
+    bf16_keys = []
+    for k, v in flat.items():
+        if v.dtype == jax.numpy.bfloat16:
+            tagged[k] = v.view(np.uint16)
+            bf16_keys.append(k)
+        else:
+            tagged[k] = v
+    np.savez(fname, **tagged)
+    meta = dict(metadata or {})
+    meta.update({"step": step, "bf16_keys": bf16_keys})
+    with open(fname + ".json", "w") as f:
+        json.dump(meta, f)
+    return fname
+
+
+def latest_checkpoint(path: str) -> Optional[str]:
+    if not os.path.isdir(path):
+        return None
+    cks = sorted(f for f in os.listdir(path)
+                 if re.match(r"ckpt_\d+\.npz$", f))
+    return os.path.join(path, cks[-1]) if cks else None
+
+
+def restore_checkpoint(fname: str, exemplar: Any) -> tuple[Any, dict]:
+    """Restore into the structure of ``exemplar`` (shape pytree ok)."""
+    with open(fname + ".json") as f:
+        meta = json.load(f)
+    bf16 = set(meta.get("bf16_keys", []))
+    data = np.load(fname)
+
+    def fn(path, x):
+        key = path.replace("/", _SEP)
+        arr = data[key]
+        if key in bf16:
+            arr = arr.view(jax.numpy.bfloat16)
+        assert arr.shape == tuple(x.shape), (key, arr.shape, x.shape)
+        return jax.numpy.asarray(arr, dtype=x.dtype)
+
+    return tree_map_with_path(fn, exemplar), meta

@@ -1,0 +1,2 @@
+from repro.configs.base import ModelConfig, InputShape, INPUT_SHAPES
+from repro.configs.registry import get_config, list_archs, ARCH_IDS

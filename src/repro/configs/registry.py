@@ -1,0 +1,41 @@
+"""Architecture registry: ``--arch <id>`` resolution.
+
+Every assigned architecture (plus the paper's own serving model, a small
+ResNet-class stand-in served as ``smollm-135m`` in the Sponge experiments) is
+selectable by id.
+"""
+from __future__ import annotations
+
+import importlib
+
+from repro.configs.base import ModelConfig
+
+# arch id -> module name
+_MODULES = {
+    "deepseek-v3-671b": "deepseek_v3_671b",
+    "whisper-large-v3": "whisper_large_v3",
+    "qwen2-vl-2b": "qwen2_vl_2b",
+    "kimi-k2-1t-a32b": "kimi_k2_1t_a32b",
+    "gemma-2b": "gemma_2b",
+    "zamba2-2.7b": "zamba2_2p7b",
+    "smollm-135m": "smollm_135m",
+    "h2o-danube-1.8b": "h2o_danube_1p8b",
+    "rwkv6-1.6b": "rwkv6_1p6b",
+    "smollm-360m": "smollm_360m",
+}
+
+ARCH_IDS = tuple(_MODULES)
+
+
+def get_config(arch_id: str, reduced: bool = False) -> ModelConfig:
+    if arch_id.endswith("-reduced"):
+        arch_id, reduced = arch_id[: -len("-reduced")], True
+    if arch_id not in _MODULES:
+        raise KeyError(f"unknown arch {arch_id!r}; known: {sorted(_MODULES)}")
+    mod = importlib.import_module(f"repro.configs.{_MODULES[arch_id]}")
+    cfg: ModelConfig = mod.CONFIG
+    return cfg.reduced() if reduced else cfg
+
+
+def list_archs() -> list[str]:
+    return list(ARCH_IDS)

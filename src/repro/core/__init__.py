@@ -1,0 +1,6 @@
+from repro.core.slo import Request, Decision
+from repro.core.perf_model import PerfModel
+from repro.core.solver import solve_bruteforce, solve_pruned
+from repro.core.queueing import EDFQueue, DynamicBatcher
+from repro.core.scaler import SpongeScaler
+from repro.core.vertical import VerticalScaledInstance

@@ -1,0 +1,139 @@
+"""Baseline autoscalers the paper compares against (§4 "Baseline").
+
+* ``FA2Policy`` — an FA2-style horizontal autoscaler: fixed one-core
+  instances, batch chosen for max throughput under the *static* SLO
+  (it does not see per-request network latency — exactly its failure mode),
+  reconfiguration every ~10 s, new instances pay a cold start.
+* ``StaticPolicy`` — statically assigned c (8 or 16 cores), dynamic batching
+  via the same solver with c pinned.
+* ``SpongePolicy`` — the paper's system: single instance, in-place vertical
+  scaling + EDF + dynamic batching via the IP solver.
+
+All three implement ``on_tick(now, sim)`` against the discrete-event
+simulator in ``repro.serving.simulator``.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Optional, Sequence
+
+from repro.core.perf_model import PerfModel
+from repro.core.scaler import SpongeScaler
+from repro.core.slo import Decision
+from repro.core.solver import DEFAULT_B, DEFAULT_C, solve_bruteforce
+
+
+class Policy:
+    name = "base"
+    def on_tick(self, now: float, sim) -> None:  # pragma: no cover
+        raise NotImplementedError
+
+
+@dataclass
+class SpongePolicy(Policy):
+    scaler: SpongeScaler
+    name: str = "sponge"
+
+    def on_tick(self, now: float, sim) -> None:
+        if not self.scaler.due(now):
+            return
+        lam = sim.monitor.rate.rate(now)
+        srv = sim.pool[0]
+        wait0 = max(srv.busy_until - now, 0.0)
+        d = self.scaler.decide(now, sim.queue, lam, initial_wait=wait0)
+        sim.set_batch(d.b)
+        penalty = srv.instance.resize(d.c, now)
+        if penalty:
+            srv.busy_until = max(srv.busy_until, now) + penalty
+
+
+@dataclass
+class StaticPolicy(Policy):
+    perf: PerfModel
+    cores: int = 16
+    b_set: Sequence[int] = DEFAULT_B
+    interval: float = 1.0
+    name: str = "static"
+    _next_t: float = 0.0
+
+    def __post_init__(self):
+        self.name = f"static-{self.cores}"
+
+    def on_tick(self, now: float, sim) -> None:
+        if now + 1e-12 < self._next_t:
+            return
+        self._next_t = now + self.interval
+        lam = sim.monitor.rate.rate(now)
+        rem = sim.queue.snapshot_remaining(now)
+        wait0 = max(sim.pool[0].busy_until - now, 0.0)
+        d = solve_bruteforce(rem, lam, self.perf, (self.cores,), self.b_set,
+                             initial_wait=wait0)
+        sim.set_batch(d.b)
+
+
+@dataclass
+class FA2Policy(Policy):
+    """Horizontal autoscaling with one-core instances (paper §2.1).
+
+    Chooses b* = argmax_b h(b, 1) s.t. l(b,1) <= slo_budget (FA2 plans with
+    the nominal SLO; it cannot see per-request comm latency), targets
+    n = ceil(lambda / h(b*, 1)) instances.  Scale-ups pay ``cold_start``
+    seconds before the instance serves; reconfiguration happens every
+    ``reconfig_interval`` (~10 s to find + adjust + stabilize per the paper).
+    """
+    perf: PerfModel
+    slo: float = 1.0
+    instance_cores: int = 1
+    b_set: Sequence[int] = DEFAULT_B
+    reconfig_interval: float = 10.0
+    cold_start: float = 10.0
+    slo_budget_frac: float = 0.7        # FA2 plans within the NOMINAL SLO (it
+                                        # cannot see per-request comm latency)
+    max_instances: int = 32
+    expected_rps: float = 0.0           # warm-start provisioning (deployed
+                                        # pre-stabilized, as in the paper)
+    drain_horizon: float = 10.0         # drain backlog within this window
+    name: str = "fa2"
+    _next_t: float = 0.0
+    _warmed: bool = False
+
+    def best_batch(self) -> int:
+        budget = self.slo * self.slo_budget_frac
+        best_b, best_h = 1, -1.0
+        for b in sorted(self.b_set):
+            l = float(self.perf.latency(b, self.instance_cores))
+            if l > budget:
+                continue
+            h = b / l
+            if h > best_h:
+                best_b, best_h = b, h
+        return best_b
+
+    def on_tick(self, now: float, sim) -> None:
+        b = self.best_batch()
+        h = float(self.perf.throughput(b, self.instance_cores))
+        if not self._warmed:
+            self._warmed = True
+            if self.expected_rps > 0:
+                n0 = max(1, math.ceil(self.expected_rps / max(h, 1e-9)))
+                sim.set_batch(b)
+                for _ in range(n0 - len(sim.pool)):
+                    sim.add_server(self.instance_cores, ready_at=now)
+        if now + 1e-12 < self._next_t:
+            return
+        self._next_t = now + self.reconfig_interval
+        lam = sim.monitor.rate.rate(now)
+        # backlog-aware target: serve the arrival rate AND drain the queue
+        # within the reconfiguration horizon
+        lam_eff = lam + len(sim.queue) / self.drain_horizon
+        n = max(1, min(self.max_instances,
+                       math.ceil(lam_eff / max(h, 1e-9)) if lam_eff > 0 else 1))
+        sim.set_batch(b)
+        cur = len(sim.pool)
+        if n > cur:
+            for _ in range(n - cur):
+                sim.add_server(self.instance_cores,
+                               ready_at=now + self.cold_start)
+        elif n < cur:
+            sim.remove_servers(cur - n, now)

@@ -1,0 +1,86 @@
+"""Monitoring component (paper §3.1): arrival-rate estimation, SLO-violation
+accounting, perf-model residual tracking (the Prometheus stand-in)."""
+from __future__ import annotations
+
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Deque, List, Optional
+
+from repro.core.slo import Request
+
+
+class RateEstimator:
+    """Sliding-window arrival-rate (lambda) estimate in requests/second.
+
+    ``prior_rps`` is the deployment-time expected rate; it is blended out as
+    the observation window fills (prevents the t=0 scale-to-zero artifact —
+    the serving analogue of FA2's pre-stabilized start)."""
+
+    def __init__(self, window_s: float = 5.0, prior_rps: float = 0.0):
+        self.window_s = window_s
+        self.prior_rps = prior_rps
+        self._t0: float | None = None
+        self._arrivals: Deque[float] = deque()
+
+    def observe(self, t: float) -> None:
+        if self._t0 is None:
+            self._t0 = t
+        self._arrivals.append(t)
+
+    def rate(self, now: float) -> float:
+        while self._arrivals and self._arrivals[0] < now - self.window_s:
+            self._arrivals.popleft()
+        if not self._arrivals:
+            obs = 0.0
+        else:
+            span = min(self.window_s, max(now - self._arrivals[0], 1e-6))
+            obs = len(self._arrivals) / span
+        if self.prior_rps <= 0:
+            return obs
+        seen = 0.0 if self._t0 is None else max(now - self._t0, 0.0)
+        w = min(seen / self.window_s, 1.0)
+        return obs * w + self.prior_rps * (1.0 - w)
+
+
+@dataclass
+class Monitor:
+    rate: RateEstimator = field(default_factory=RateEstimator)
+    completed: List[Request] = field(default_factory=list)
+    dropped: List[Request] = field(default_factory=list)
+    perf_residuals: List[float] = field(default_factory=list)
+
+    def observe_arrival(self, req: Request) -> None:
+        self.rate.observe(req.arrival)
+
+    def observe_completion(self, req: Request) -> None:
+        self.completed.append(req)
+
+    def observe_drop(self, req: Request) -> None:
+        self.dropped.append(req)
+
+    def observe_perf_residual(self, predicted: float, measured: float) -> None:
+        self.perf_residuals.append(measured - predicted)
+
+    # -- aggregate metrics -------------------------------------------------
+    @property
+    def n_total(self) -> int:
+        return len(self.completed) + len(self.dropped)
+
+    @property
+    def n_violations(self) -> int:
+        return (sum(1 for r in self.completed if r.violated)
+                + len(self.dropped))
+
+    @property
+    def violation_rate(self) -> float:
+        return self.n_violations / max(self.n_total, 1)
+
+    def e2e_latencies(self) -> List[float]:
+        return [r.finish - (r.arrival - r.comm_latency)
+                for r in self.completed if r.finish is not None]
+
+    def p(self, q: float) -> float:
+        ls = sorted(self.e2e_latencies())
+        if not ls:
+            return float("nan")
+        return ls[min(int(q * len(ls)), len(ls) - 1)]

@@ -1,0 +1,134 @@
+"""Beyond-paper extension: predictive scaling.
+
+Sponge is reactive — it sees shrunken budgets only when requests *arrive*
+(after the network delay), so the first ~1 adaptation interval of every
+bandwidth fade is served under a stale allocation.  This scaler forecasts
+the near-future communication latency with double exponential smoothing
+(Holt, damped trend) over observed per-request comm latencies and tightens
+the solver's budgets by the predicted *increase*, scaling up BEFORE the
+slow requests land.  Evaluated in benchmarks/predictive_bench.py.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Optional
+
+from repro.core.queueing import EDFQueue
+from repro.core.scaler import SpongeScaler
+from repro.core.slo import Decision
+
+
+class HoltForecaster:
+    """Double exponential smoothing with trend damping."""
+
+    def __init__(self, alpha: float = 0.4, beta: float = 0.2,
+                 phi: float = 0.9):
+        self.alpha, self.beta, self.phi = alpha, beta, phi
+        self.level: Optional[float] = None
+        self.trend: float = 0.0
+
+    def observe(self, x: float) -> None:
+        if self.level is None:
+            self.level = x
+            return
+        prev = self.level
+        self.level = (self.alpha * x
+                      + (1 - self.alpha) * (self.level + self.phi * self.trend))
+        self.trend = (self.beta * (self.level - prev)
+                      + (1 - self.beta) * self.phi * self.trend)
+
+    def forecast(self, steps: float = 1.0) -> float:
+        if self.level is None:
+            return 0.0
+        return self.level + self.phi * self.trend * steps
+
+
+@dataclass
+class PredictiveSpongeScaler(SpongeScaler):
+    """SpongeScaler + comm-latency forecast folded into the budgets."""
+    horizon_s: float = 1.0
+    forecaster: HoltForecaster = field(default_factory=HoltForecaster)
+
+    def observe_comm_latency(self, cl: float) -> None:
+        self.forecaster.observe(cl)
+
+    def forecast_increase(self) -> float:
+        lvl = self.forecaster.level or 0.0
+        return max(self.forecaster.forecast(self.horizon_s) - lvl, 0.0)
+
+    def decide(self, now: float, queue: EDFQueue, lam: float,
+               initial_wait: float = 0.0) -> Decision:
+        saved = self.headroom
+        self.headroom = saved + self.forecast_increase()
+        try:
+            return super().decide(now, queue, lam, initial_wait)
+        finally:
+            self.headroom = saved
+
+
+@dataclass
+class PredictivePolicy:
+    """Simulator policy wrapping the predictive scaler: feeds each observed
+    request's comm latency to the forecaster exactly once (in arrival
+    order — the signal a real gateway has)."""
+    scaler: PredictiveSpongeScaler
+    name: str = "sponge-pred"
+    _seen: set = field(default_factory=set)
+
+    def _feed(self, sim) -> None:
+        pending = [req for _, _, req in sim.queue._heap
+                   if req.id not in self._seen]
+        done = [r for r in sim.monitor.completed if r.id not in self._seen]
+        for r in sorted(pending + done, key=lambda r: r.arrival):
+            self.scaler.observe_comm_latency(r.comm_latency)
+            self._seen.add(r.id)
+
+    def on_tick(self, now: float, sim) -> None:
+        self._feed(sim)
+        if not self.scaler.due(now):
+            return
+        lam = sim.monitor.rate.rate(now)
+        srv = sim.pool[0]
+        wait0 = max(srv.busy_until - now, 0.0)
+        d = self.scaler.decide(now, sim.queue, lam, initial_wait=wait0)
+        sim.set_batch(d.b)
+        penalty = srv.instance.resize(d.c, now)
+        if penalty:
+            srv.busy_until = max(srv.busy_until, now) + penalty
+
+
+@dataclass
+class TelemetryPolicy:
+    """Bandwidth-telemetry predictive scaling (beyond-paper, second attempt
+    after the Holt-forecast hypothesis was refuted — see EXPERIMENTS.md).
+
+    The serving gateway KNOWS the instantaneous link bandwidth (it is its
+    own link).  Requests currently in flight were sent under the *current*
+    bandwidth and will arrive with budget ~ SLO - cl(bw_now); during a fade
+    that is less than every queued request's budget, so the reactive solver
+    under-provisions for one round-trip.  This policy injects the expected
+    in-flight requests (count ~ lam * cl_now) as synthetic budget entries.
+    """
+    scaler: SpongeScaler
+    trace: object               # BandwidthTrace
+    size_kb: float = 200.0
+    slo: float = 1.0
+    name: str = "sponge-telem"
+
+    def on_tick(self, now: float, sim) -> None:
+        if not self.scaler.due(now):
+            return
+        from repro.network.latency import comm_latency
+        lam = sim.monitor.rate.rate(now)
+        cl_now = comm_latency(self.size_kb, self.trace, now)
+        n_inflight = int(lam * cl_now)
+        extra = tuple(max(self.slo - cl_now, 0.0) + i / max(lam, 1e-6)
+                      for i in range(n_inflight))
+        srv = sim.pool[0]
+        wait0 = max(srv.busy_until - now, 0.0)
+        d = self.scaler.decide(now, sim.queue, lam, initial_wait=wait0,
+                               extra_budgets=extra)
+        sim.set_batch(d.b)
+        penalty = srv.instance.resize(d.c, now)
+        if penalty:
+            srv.busy_until = max(srv.busy_until, now) + penalty

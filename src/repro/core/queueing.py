@@ -1,0 +1,72 @@
+"""EDF queue + dynamic batcher (paper §3.1 "Queuing").
+
+Requests are reordered by remaining SLO (earliest absolute deadline first);
+the batcher emits batches of the solver's current b.
+"""
+from __future__ import annotations
+
+import heapq
+from typing import Iterable, List, Optional
+
+from repro.core.slo import Request
+
+
+class EDFQueue:
+    def __init__(self):
+        self._heap: list[tuple[float, int, Request]] = []
+
+    def __len__(self):
+        return len(self._heap)
+
+    def push(self, req: Request) -> None:
+        heapq.heappush(self._heap, (req.deadline, req.id, req))
+
+    def extend(self, reqs: Iterable[Request]) -> None:
+        for r in reqs:
+            self.push(r)
+
+    def pop(self) -> Request:
+        return heapq.heappop(self._heap)[2]
+
+    def peek(self) -> Optional[Request]:
+        return self._heap[0][2] if self._heap else None
+
+    def pop_batch(self, b: int) -> List[Request]:
+        return [self.pop() for _ in range(min(b, len(self._heap)))]
+
+    def snapshot_remaining(self, now: float) -> List[float]:
+        """Remaining budgets (sorted ascending) — the solver's input."""
+        return sorted(r.deadline - now for _, _, r in self._heap)
+
+    def drop_expired(self, now: float) -> List[Request]:
+        """Remove requests whose deadline already passed (counted as
+        violations by the caller)."""
+        dropped = []
+        keep = []
+        for item in self._heap:
+            if item[0] < now:
+                dropped.append(item[2])
+            else:
+                keep.append(item)
+        if dropped:
+            self._heap = keep
+            heapq.heapify(self._heap)
+        return dropped
+
+
+class DynamicBatcher:
+    """Forms batches of the scaler's current b from the EDF queue."""
+
+    def __init__(self, queue: EDFQueue, b: int = 1):
+        self.queue = queue
+        self.b = b
+
+    def set_batch_size(self, b: int) -> None:
+        assert b >= 1
+        self.b = b
+
+    def next_batch(self) -> List[Request]:
+        return self.queue.pop_batch(self.b)
+
+    def has_work(self) -> bool:
+        return len(self.queue) > 0

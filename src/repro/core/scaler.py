@@ -1,0 +1,43 @@
+"""The Sponge scaler (paper §3.1 "Scaler"): every adaptation interval, read
+the queue snapshot + lambda estimate, solve the IP, and emit a Decision the
+engine applies via in-place vertical scaling."""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Callable, List, Optional, Sequence
+
+from repro.core.perf_model import PerfModel
+from repro.core.queueing import EDFQueue
+from repro.core.slo import Decision
+from repro.core.solver import DEFAULT_B, DEFAULT_C, solve_bruteforce, solve_pruned
+
+
+@dataclass
+class SpongeScaler:
+    perf: PerfModel
+    c_set: Sequence[int] = DEFAULT_C
+    b_set: Sequence[int] = DEFAULT_B
+    adaptation_interval: float = 1.0
+    solver: str = "bruteforce"          # bruteforce (paper Alg.1) | pruned
+    delta_pen: float = 1e-3
+    headroom: float = 0.05              # latency safety margin (seconds)
+    lam_headroom: float = 1.05          # provision for lam * this factor
+    decisions: List[tuple[float, Decision]] = field(default_factory=list)
+    _next_t: float = 0.0
+
+    def due(self, now: float) -> bool:
+        return now + 1e-12 >= self._next_t
+
+    def decide(self, now: float, queue: EDFQueue, lam: float,
+               initial_wait: float = 0.0,
+               extra_budgets: tuple = ()) -> Decision:
+        self._next_t = now + self.adaptation_interval
+        remaining = [max(r - self.headroom, 0.0)
+                     for r in queue.snapshot_remaining(now)]
+        remaining += [max(r - self.headroom, 0.0) for r in extra_budgets]
+        remaining.sort()
+        fn = solve_bruteforce if self.solver == "bruteforce" else solve_pruned
+        d = fn(remaining, lam * self.lam_headroom, self.perf, self.c_set,
+               self.b_set, self.delta_pen, initial_wait=initial_wait)
+        self.decisions.append((now, d))
+        return d

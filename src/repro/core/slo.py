@@ -1,0 +1,57 @@
+"""Request / decision dataclasses shared by the Sponge control plane.
+
+Times are seconds (floats, absolute simulation/wall clock).  A request's
+end-to-end SLO covers communication + queuing + processing (paper §3.3):
+
+    deadline = send_time + SLO = arrival - cl + SLO
+
+so the *remaining* budget when the request reaches the server is SLO - cl —
+the dynamic-SLO quantity that varies with network bandwidth.
+"""
+from __future__ import annotations
+
+import itertools
+from dataclasses import dataclass, field
+from typing import Optional
+
+_ids = itertools.count()
+
+
+@dataclass(order=True)
+class Request:
+    deadline: float                      # absolute; sort key for EDF
+    id: int = field(compare=False, default_factory=lambda: next(_ids))
+    arrival: float = field(compare=False, default=0.0)   # at server
+    comm_latency: float = field(compare=False, default=0.0)
+    slo: float = field(compare=False, default=1.0)
+    size_kb: float = field(compare=False, default=200.0)
+    # lifecycle (filled by the system)
+    start_proc: Optional[float] = field(compare=False, default=None)
+    finish: Optional[float] = field(compare=False, default=None)
+
+    @classmethod
+    def make(cls, arrival: float, comm_latency: float, slo: float,
+             size_kb: float = 200.0) -> "Request":
+        return cls(deadline=arrival - comm_latency + slo, arrival=arrival,
+                   comm_latency=comm_latency, slo=slo, size_kb=size_kb)
+
+    def remaining(self, now: float) -> float:
+        return self.deadline - now
+
+    @property
+    def violated(self) -> bool:
+        return self.finish is not None and self.finish > self.deadline + 1e-9
+
+
+@dataclass(frozen=True)
+class Decision:
+    """Scaler output: in-place vertical scale to c, batch size b."""
+    c: int
+    b: int
+    feasible: bool = True
+    solver_iters: int = 0
+    solver_time: float = 0.0
+
+    @property
+    def cost(self) -> float:
+        return float(self.c)

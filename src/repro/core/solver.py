@@ -1,0 +1,147 @@
+"""The Sponge optimizer: Integer Program (paper Eq. 3) + Algorithm 1.
+
+    minimize   c + delta_pen * b
+    s.t.       l(b,c) + q_r(b,c) + cl_max <= SLO   for every request r
+               h(b,c) >= lambda
+               b, c in Z+
+
+``solve_bruteforce`` is the faithful Algorithm 1: iterate c ascending then b
+ascending, simulate the batch queue (batch i waits i*l(b,c)) against the
+per-request remaining budgets, return the first feasible configuration —
+which is the minimum-c, then minimum-b solution, i.e. the IP optimum for any
+delta_pen < 1 because the objective is lexicographic in (c, b) over the
+iteration order.
+
+Beyond the paper (recorded in EXPERIMENTS.md §Fig4 notes):
+
+* ``initial_wait`` — the server is mid-batch when the scaler fires; batch 0
+  starts after the in-flight work drains.  Algorithm 1 implicitly assumes an
+  idle server; without this term the control loop runs the instance at
+  utilization ~1 and queueing delay accumulates without bound.
+* damage-minimizing fallback — when NO (c, b) satisfies every deadline
+  (deep network fade), return the sustainable config that minimizes the
+  predicted violation count instead of the paper's implicit "give up"
+  (c_max, b_max), which would violate the whole queue.
+* ``solve_pruned`` — vectorized exact variant, O(|C||B|) numpy.
+"""
+from __future__ import annotations
+
+import time
+from typing import Optional, Sequence
+
+import numpy as np
+
+from repro.core.perf_model import PerfModel
+from repro.core.slo import Decision
+
+DEFAULT_C = tuple(range(1, 17))
+DEFAULT_B = tuple(range(1, 17))
+# TPU adaptation: feasible submesh degrees are powers of two (DESIGN.md §2)
+TPU_C = (1, 2, 4, 8, 16)
+TPU_B = (1, 2, 4, 8, 16)
+
+
+def _predicted_violations(rem: Sequence[float], l: float, b: int,
+                          initial_wait: float) -> int:
+    """Requests whose batch completes after their remaining budget."""
+    n = len(rem)
+    v = 0
+    for idx in range(n):
+        finish = initial_wait + (idx // b + 1) * l
+        if finish > rem[idx]:
+            v += 1
+    return v
+
+
+def solve_bruteforce(remaining_slos: Sequence[float], lam: float,
+                     perf: PerfModel,
+                     c_set: Sequence[int] = DEFAULT_C,
+                     b_set: Sequence[int] = DEFAULT_B,
+                     delta_pen: float = 1e-3,
+                     initial_wait: float = 0.0) -> Decision:
+    """Faithful Algorithm 1 (+ the fallback described in the module doc).
+
+    remaining_slos: per queued request, the remaining budget SLO - cl_r
+    (equivalently deadline - now); the EDF queue hands them over sorted
+    ascending.  The binding budget of batch i in EDF order is that of its
+    first request, rem[i*b].
+    """
+    t0 = time.perf_counter()
+    rem = sorted(float(x) for x in remaining_slos)
+    n = len(rem)
+    iters = 0
+    best_fallback = None  # (violations, c, b)
+    for c in sorted(c_set):
+        for b in sorted(b_set):
+            iters += 1
+            l = float(perf.latency(b, c))
+            if lam > 0 and perf.throughput(b, c) < lam:
+                continue
+            ok = True
+            q_r = initial_wait
+            for i in range(0, max(n, 1), b):
+                budget = rem[i] if n else float("inf")
+                if l + q_r > budget:
+                    ok = False
+                    break
+                q_r += l
+                if n == 0:
+                    break
+            if ok:
+                return Decision(c=c, b=b, feasible=True, solver_iters=iters,
+                                solver_time=time.perf_counter() - t0)
+            v = _predicted_violations(rem, l, b, initial_wait)
+            # crisis ordering: fewest predicted violations, then fastest
+            # drain (max throughput) — arrivals keep coming during a fade
+            key = (v, -float(perf.throughput(b, c)))
+            if best_fallback is None or key < best_fallback[0]:
+                best_fallback = (key, c, b)
+    if best_fallback is None:  # nothing sustains lam: max capacity config
+        c = max(c_set)
+        b = max(b_set, key=lambda bb: perf.throughput(bb, c))
+        best_fallback = ((n, 0.0), c, b)
+    _, c, b = best_fallback
+    return Decision(c=c, b=b, feasible=False, solver_iters=iters,
+                    solver_time=time.perf_counter() - t0)
+
+
+def solve_pruned(remaining_slos: Sequence[float], lam: float,
+                 perf: PerfModel,
+                 c_set: Sequence[int] = DEFAULT_C,
+                 b_set: Sequence[int] = DEFAULT_B,
+                 delta_pen: float = 1e-3,
+                 initial_wait: float = 0.0) -> Decision:
+    """Vectorized exact solver (same constraint set, explicit argmin)."""
+    t0 = time.perf_counter()
+    rem = np.sort(np.asarray(list(remaining_slos), np.float64))
+    n = len(rem)
+    cs = np.asarray(sorted(c_set))
+    bs = np.asarray(sorted(b_set))
+    bb, cc = np.meshgrid(bs, cs, indexing="ij")       # (B, C)
+    lat = perf.latency(bb, cc)
+    thr = bb / np.maximum(lat, 1e-12)
+    sustain = thr >= (lam if lam > 0 else 0.0)
+    feas = sustain.copy()
+    viol = np.zeros_like(lat, dtype=np.int64)
+    if n:
+        idx = np.arange(n)
+        for j, b in enumerate(bs):
+            batch_mult = idx // int(b) + 1                # (n,)
+            finish = initial_wait + batch_mult[None, :] * lat[j][:, None]
+            over = finish > rem[None, :] + 1e-12
+            viol[j] = over.sum(axis=1)
+            feas[j] &= ~over.any(axis=1)
+    cost = cc + delta_pen * bb
+    cost = np.where(feas, cost, np.inf)
+    solver_time = time.perf_counter() - t0
+    if np.isfinite(cost).any():
+        j, i = np.unravel_index(np.argmin(cost), cost.shape)
+        return Decision(c=int(cs[i]), b=int(bs[j]), feasible=True,
+                        solver_iters=cost.size, solver_time=solver_time)
+    # damage-minimizing fallback among sustainable configs (or all),
+    # tie-broken by max throughput (fastest drain during the fade)
+    pool = np.where(sustain, viol.astype(np.float64), viol.max() + 1e6 + cc)
+    pool = pool - 1e-9 * thr
+    j, i = np.unravel_index(np.argmin(pool), pool.shape)
+    return Decision(c=int(cs[i]), b=int(bs[j]), feasible=False,
+                    solver_iters=cost.size, solver_time=solver_time)

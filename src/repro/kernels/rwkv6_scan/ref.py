@@ -1,0 +1,22 @@
+"""Pure-jnp oracle for the WKV6 kernel (lax.scan over time)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rwkv6_scan_ref(r, k, v, w, u, s0):
+    """r,k,v,w: (B,T,H,D); u: (H,D); s0: (B,H,D,D). -> (y, s_final)."""
+
+    def step(state, inp):
+        rt, kt, vt, wt = inp                               # (B,H,D)
+        kv = jnp.einsum("bhi,bhj->bhij", kt, vt)
+        y = jnp.einsum("bhi,bhij->bhj", rt,
+                       state + u[None, :, :, None] * kv)
+        state = state * wt[..., None] + kv
+        return state, y
+
+    seq = tuple(a.transpose(1, 0, 2, 3).astype(jnp.float32)
+                for a in (r, k, v, w))
+    s_final, y = jax.lax.scan(step, s0.astype(jnp.float32), seq)
+    return y.transpose(1, 0, 2, 3).astype(r.dtype), s_final

@@ -1,0 +1,79 @@
+"""WKV6 recurrence kernel (RWKV-6 time mix with data-dependent decay).
+
+    y_t = r_t^T (S_{t-1} + u k_t v_t^T);   S_t = diag(w_t) S_{t-1} + k_t v_t^T
+
+TPU mapping: grid (B, H, T/block_t).  The (D, D) state matrix lives in VMEM
+scratch and carries across the sequential innermost grid axis; each grid
+step streams a (block_t, D) tile of r/k/v/w into VMEM and runs the
+recurrence with a fori_loop of rank-1 updates (VPU work — the recurrence is
+inherently sequential in t, the kernel's win is keeping S in VMEM instead of
+bouncing it through HBM every step, which is what a naive lax.scan does on
+long sequences).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(r_ref, k_ref, v_ref, w_ref, u_ref, s0_ref, y_ref, sout_ref,
+            state_ref, *, block_t: int):
+    t_idx = pl.program_id(2)
+    n_t = pl.num_programs(2)
+
+    @pl.when(t_idx == 0)
+    def _init():
+        state_ref[...] = s0_ref[0, 0].astype(jnp.float32)
+
+    u = u_ref[0].astype(jnp.float32)                     # (D,)
+
+    def step(i, _):
+        rt = r_ref[0, i, 0].astype(jnp.float32)          # (D,)
+        kt = k_ref[0, i, 0].astype(jnp.float32)
+        vt = v_ref[0, i, 0].astype(jnp.float32)
+        wt = w_ref[0, i, 0].astype(jnp.float32)
+        s = state_ref[...]                               # (D, D)
+        kv = kt[:, None] * vt[None, :]                   # (D, D)
+        y = jnp.sum((s + u[:, None] * kv) * rt[:, None], axis=0)
+        y_ref[0, i, 0] = y.astype(y_ref.dtype)
+        state_ref[...] = s * wt[:, None] + kv
+        return ()
+
+    jax.lax.fori_loop(0, block_t, step, ())
+
+    @pl.when(t_idx == n_t - 1)
+    def _finish():
+        sout_ref[0, 0] = state_ref[...].astype(sout_ref.dtype)
+
+
+def rwkv6_scan_pallas(r, k, v, w, u, s0, *, block_t: int = 256,
+                      interpret: bool = True):
+    """r,k,v,w: (B, T, H, D); u: (H, D); s0: (B, H, D, D) f32.
+
+    Returns (y (B, T, H, D), s_final (B, H, D, D))."""
+    b, t, h, d = r.shape
+    block_t = min(block_t, t)
+    assert t % block_t == 0, (t, block_t)
+    grid = (b, h, t // block_t)
+    kernel = functools.partial(_kernel, block_t=block_t)
+    seq_spec = pl.BlockSpec((1, block_t, 1, d),
+                            lambda bi, hi, ti: (bi, ti, hi, 0))
+    y, s_final = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[seq_spec, seq_spec, seq_spec, seq_spec,
+                  pl.BlockSpec((1, d), lambda bi, hi, ti: (hi, 0)),
+                  pl.BlockSpec((1, 1, d, d), lambda bi, hi, ti: (bi, hi, 0, 0))],
+        out_specs=[seq_spec,
+                   pl.BlockSpec((1, 1, d, d),
+                                lambda bi, hi, ti: (bi, hi, 0, 0))],
+        out_shape=[jax.ShapeDtypeStruct((b, t, h, d), r.dtype),
+                   jax.ShapeDtypeStruct((b, h, d, d), jnp.float32)],
+        scratch_shapes=[pltpu.VMEM((d, d), jnp.float32)],
+        interpret=interpret,
+    )(r, k, v, w, u, s0)
+    return y, s_final

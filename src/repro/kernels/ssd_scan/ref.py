@@ -1,0 +1,25 @@
+"""Pure-jnp oracle for the SSD kernel: direct (non-chunked) recurrence."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ssd_scan_ref(x, dt, a_log, b, c, h0):
+    """x: (B,T,H,P); dt: (B,T,H); a_log: (H,); b,c: (B,T,N);
+    h0: (B,H,P,N).  Step-by-step recurrence (the ground truth)."""
+
+    def step(h, inp):
+        xt, dtt, bt, ct = inp                  # (B,H,P),(B,H),(B,N),(B,N)
+        a = jnp.exp(-jnp.exp(a_log)[None, :] * dtt)      # (B,H)
+        dtx = xt * dtt[..., None]
+        h = h * a[:, :, None, None] + jnp.einsum("bhp,bn->bhpn", dtx, bt)
+        y = jnp.einsum("bhpn,bn->bhp", h, ct)
+        return h, y
+
+    seq = (x.transpose(1, 0, 2, 3).astype(jnp.float32),
+           dt.transpose(1, 0, 2).astype(jnp.float32),
+           b.transpose(1, 0, 2).astype(jnp.float32),
+           c.transpose(1, 0, 2).astype(jnp.float32))
+    h_final, y = jax.lax.scan(step, h0.astype(jnp.float32), seq)
+    return y.transpose(1, 0, 2, 3).astype(x.dtype), h_final

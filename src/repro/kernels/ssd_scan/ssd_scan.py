@@ -1,0 +1,108 @@
+"""Mamba2 SSD chunked-scan kernel.
+
+    h_t = a_t h_{t-1} + dt_t B_t x_t;   y_t = C_t . h_t
+
+TPU mapping: grid (B, H, T/chunk).  The (P, N) inter-chunk state carries in
+VMEM scratch across the sequential innermost axis.  Each chunk does the SSD
+matmul form on the MXU:
+
+    y_intra = ((C B^T) o L) (dt*x)      L_ij = exp(acum_i - acum_j), i >= j
+    y_inter = exp(acum) * (C h_in)
+    h_out   = h_in * exp(acum_Q) + sum_j exp(acum_Q - acum_j) (dt*x)_j B_j^T
+
+so the sequential dependency is only chunk-granular; intra-chunk work is
+(Q,Q)/(Q,N)/(Q,P) matmuls — chunk Q defaults to 128 to align with the MXU.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(alog_ref, x_ref, dt_ref, b_ref, c_ref, h0_ref, y_ref, hout_ref,
+            state_ref, *, chunk: int):
+    t_idx = pl.program_id(2)
+    n_t = pl.num_programs(2)
+
+    @pl.when(t_idx == 0)
+    def _init():
+        state_ref[...] = h0_ref[0, 0].astype(jnp.float32)
+
+    a = -jnp.exp(alog_ref[0].astype(jnp.float32))        # scalar A < 0
+    x = x_ref[0, :, 0].astype(jnp.float32)               # (Q, P)
+    dt = dt_ref[0, :, 0].astype(jnp.float32)             # (Q,)
+    bmat = b_ref[0].astype(jnp.float32)                  # (Q, N)
+    cmat = c_ref[0].astype(jnp.float32)                  # (Q, N)
+
+    loga = a * dt                                        # (Q,)
+    acum = jnp.cumsum(loga)                              # (Q,) inclusive
+    dtx = x * dt[:, None]                                # (Q, P)
+
+    # intra-chunk
+    cb = jax.lax.dot_general(cmat, bmat, (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)  # (Q, Q)
+    decay = acum[:, None] - acum[None, :]
+    qi = jax.lax.broadcasted_iota(jnp.int32, cb.shape, 0)
+    qj = jax.lax.broadcasted_iota(jnp.int32, cb.shape, 1)
+    gate = jnp.where(qi >= qj, jnp.exp(decay), 0.0)
+    y = jax.lax.dot_general(cb * gate, dtx, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)  # (Q, P)
+
+    # inter-chunk: contribution of incoming state
+    h_in = state_ref[...]                                 # (P, N)
+    y = y + jnp.exp(acum)[:, None] * jax.lax.dot_general(
+        cmat, h_in, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)               # (Q, P)
+    y_ref[0, :, 0] = y.astype(y_ref.dtype)
+
+    # outgoing state
+    tail = acum[-1]
+    sdecay = jnp.exp(tail - acum)                         # (Q,)
+    h_new = h_in * jnp.exp(tail) + jax.lax.dot_general(
+        dtx * sdecay[:, None], bmat, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)               # (P, N)
+    state_ref[...] = h_new
+
+    @pl.when(t_idx == n_t - 1)
+    def _finish():
+        hout_ref[0, 0] = state_ref[...].astype(hout_ref.dtype)
+
+
+def ssd_scan_pallas(x, dt, a_log, b, c, h0, *, chunk: int = 128,
+                    interpret: bool = True):
+    """x: (B, T, H, P); dt: (B, T, H) post-softplus; a_log: (H,);
+    b, c: (B, T, N); h0: (B, H, P, N) f32.
+
+    Returns (y (B,T,H,P), h_final (B,H,P,N))."""
+    bsz, t, h, p = x.shape
+    n = b.shape[-1]
+    chunk = min(chunk, t)
+    assert t % chunk == 0, (t, chunk)
+    grid = (bsz, h, t // chunk)
+    kernel = functools.partial(_kernel, chunk=chunk)
+    y, h_final = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1,), lambda bi, hi, ti: (hi,),
+                         memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, chunk, 1, p), lambda bi, hi, ti: (bi, ti, hi, 0)),
+            pl.BlockSpec((1, chunk, 1), lambda bi, hi, ti: (bi, ti, hi)),
+            pl.BlockSpec((1, chunk, n), lambda bi, hi, ti: (bi, ti, 0)),
+            pl.BlockSpec((1, chunk, n), lambda bi, hi, ti: (bi, ti, 0)),
+            pl.BlockSpec((1, 1, p, n), lambda bi, hi, ti: (bi, hi, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, chunk, 1, p), lambda bi, hi, ti: (bi, ti, hi, 0)),
+            pl.BlockSpec((1, 1, p, n), lambda bi, hi, ti: (bi, hi, 0, 0)),
+        ],
+        out_shape=[jax.ShapeDtypeStruct((bsz, t, h, p), x.dtype),
+                   jax.ShapeDtypeStruct((bsz, h, p, n), jnp.float32)],
+        scratch_shapes=[pltpu.VMEM((p, n), jnp.float32)],
+        interpret=interpret,
+    )(a_log, x, dt, b, c, h0)
+    return y, h_final

@@ -1,0 +1,1 @@
+from repro.kernels.swa_prefill.ops import swa_prefill_attention

@@ -1,0 +1,20 @@
+"""Pure-jnp oracle: causal sliding-window attention (dense masked)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def swa_prefill_ref(q, k, v, *, window: int):
+    """q, k, v: (B, S, H, D), same head count.  Returns (B, S, H, D)."""
+    b, s, h, d = q.shape
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * (d ** -0.5)
+    qi = jnp.arange(s)[:, None]
+    ki = jnp.arange(s)[None, :]
+    rel = qi - ki
+    mask = (rel >= 0) & (rel < window)
+    scores = jnp.where(mask[None, None], scores, -1e30)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", p, v.astype(jnp.float32))
+    return out.astype(q.dtype)

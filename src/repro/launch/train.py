@@ -1,0 +1,59 @@
+"""Training launcher.
+
+    PYTHONPATH=src python -m repro.launch.train --arch smollm-135m-reduced \
+        --steps 100 --batch 8 --seq 128 [--ckpt out/ckpt]
+
+Full (non-reduced) archs run on the production mesh via the same code path
+(they only fit real hardware; on this CPU container use reduced configs).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import jax
+
+from repro.configs import get_config, list_archs
+from repro.data import synthetic_batches
+from repro.models import build_model
+from repro.train.loop import train_loop
+from repro.train.optimizer import OptConfig
+from repro.checkpoint import save_checkpoint
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--ckpt", default="")
+    ap.add_argument("--log-every", type=int, default=10)
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch)
+    model = build_model(cfg)
+    oc = OptConfig(lr=args.lr, warmup_steps=max(args.steps // 20, 1),
+                   total_steps=args.steps)
+    batches = synthetic_batches(cfg, args.batch, args.seq, args.steps)
+
+    def log(m):
+        print(f"step {m['step']:5d} loss {m['loss']:.4f} "
+              f"ce {m['ce']:.4f} gnorm {m['grad_norm']:.2f} "
+              f"lr {m['lr']:.2e} t {m['wall_s']:.1f}s", flush=True)
+
+    state, history = train_loop(model, batches, oc,
+                                log_every=args.log_every, callback=log)
+    if args.ckpt:
+        f = save_checkpoint(args.ckpt, state["params"], step=args.steps,
+                            metadata={"arch": args.arch})
+        print("checkpoint:", f)
+    first, last = history[0]["loss"], history[-1]["loss"]
+    print(f"loss {first:.4f} -> {last:.4f} "
+          f"({'improved' if last < first else 'NO IMPROVEMENT'})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,30 @@
+"""Feed-forward blocks: SwiGLU / GeGLU / GELU."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.common import Array, dense_init, linear
+
+
+def init_mlp(key, d_model: int, d_ff: int, kind: str, dtype):
+    ks = jax.random.split(key, 3)
+    p = {"w_up": dense_init(ks[1], (d_model, d_ff), dtype),
+         "w_down": dense_init(ks[2], (d_ff, d_model), dtype, fan_in=d_ff)}
+    if kind in ("swiglu", "geglu"):
+        p["w_gate"] = dense_init(ks[0], (d_model, d_ff), dtype)
+    return p
+
+
+def mlp_fwd(params, x: Array, kind: str) -> Array:
+    up = linear(x, params["w_up"])
+    if kind == "swiglu":
+        act = jax.nn.silu(linear(x, params["w_gate"])) * up
+    elif kind == "geglu":
+        act = jax.nn.gelu(linear(x, params["w_gate"]), approximate=True) * up
+    elif kind == "gelu":
+        act = jax.nn.gelu(up, approximate=True)
+    else:
+        raise ValueError(kind)
+    return linear(act, params["w_down"])

@@ -1,0 +1,2 @@
+from repro.network.traces import BandwidthTrace, synth_4g_trace
+from repro.network.latency import comm_latency

@@ -1,0 +1,11 @@
+"""Communication latency model (paper Fig. 1 bottom): the time to ship a
+payload of size_kb over the instantaneous bandwidth, plus a small RTT."""
+from __future__ import annotations
+
+from repro.network.traces import BandwidthTrace
+
+
+def comm_latency(size_kb: float, trace: BandwidthTrace, now: float,
+                 rtt_s: float = 0.02) -> float:
+    bw_mbps = trace.at(now)                  # MB/s
+    return rtt_s + (size_kb / 1024.0) / max(bw_mbps, 1e-6)

@@ -1,0 +1,64 @@
+"""4G/LTE bandwidth traces (paper Fig. 1, van der Hooft et al. [34]).
+
+The dataset (HTTP/2 adaptive streaming over Belgian 4G, 1 Hz samples) is not
+shipped offline, so ``synth_4g_trace`` generates traces statistically matched
+to the paper's description: bandwidth varying between ~0.5 MB/s and ~7 MB/s
+within a 10-minute window, with mobility-induced regime shifts (log-OU
+process + occasional deep fades).  A loader for the real CSV format is
+provided for when the dataset is available.
+"""
+from __future__ import annotations
+
+import os
+from dataclasses import dataclass
+
+import numpy as np
+
+
+@dataclass(frozen=True)
+class BandwidthTrace:
+    t: np.ndarray        # seconds, 1 Hz
+    mbps: np.ndarray     # MB/s (megaBYTES, as in the paper's figure)
+
+    def at(self, now: float) -> float:
+        i = min(int(now), len(self.mbps) - 1)
+        return float(self.mbps[max(i, 0)])
+
+    @property
+    def duration(self) -> float:
+        return float(self.t[-1])
+
+
+def synth_4g_trace(duration_s: int = 600, seed: int = 0,
+                   lo: float = 0.5, hi: float = 7.0) -> BandwidthTrace:
+    """Log-space Ornstein–Uhlenbeck bandwidth with regime shifts and fades."""
+    rng = np.random.default_rng(seed)
+    n = int(duration_s)
+    x = np.zeros(n)
+    mu = np.log(2.5)
+    x[0] = mu
+    theta, sigma = 0.05, 0.25
+    # regime shifts every ~60-120 s (user mobility)
+    shift_times = np.cumsum(rng.integers(45, 150, size=20))
+    shifts = {int(t): rng.uniform(np.log(lo * 1.6), np.log(hi * 0.8))
+              for t in shift_times if t < n}
+    for i in range(1, n):
+        if i in shifts:
+            mu = shifts[i]
+        x[i] = x[i - 1] + theta * (mu - x[i - 1]) + sigma * rng.normal()
+    bw = np.exp(x)
+    # deep fades (handover/obstruction): a few seconds near the floor
+    if n > 20:
+        for _ in range(rng.integers(2, 5)):
+            s = rng.integers(0, n - 15)
+            bw[s:s + rng.integers(4, 12)] *= rng.uniform(0.15, 0.3)
+    bw = np.clip(bw, lo, hi)
+    return BandwidthTrace(t=np.arange(n, dtype=np.float64), mbps=bw)
+
+
+def load_csv_trace(path: str, col: int = 1, scale_to_mbytes: float = 1e-6
+                   ) -> BandwidthTrace:
+    """Load a real 4G log (one sample/line, bytes/s by default)."""
+    raw = np.loadtxt(path, delimiter=",", usecols=[col])
+    mbps = raw * scale_to_mbytes
+    return BandwidthTrace(t=np.arange(len(mbps), dtype=np.float64), mbps=mbps)

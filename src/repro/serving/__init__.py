@@ -1,0 +1,2 @@
+from repro.serving.workload import WorkloadGenerator
+from repro.serving.simulator import ClusterSimulator, simulate

@@ -1,0 +1,187 @@
+"""Live serving engine: the non-simulated execution path.
+
+Runs real jitted JAX inference behind the same Sponge control plane used by
+the simulator (EDF queue + scaler + monitor).  The executable table is built
+at deploy time — one entry per (c, b) bucket — so applying a ScalerDecision
+is an O(1) dictionary flip (the in-place vertical scaling mechanism; on the
+TPU target each entry is the same step compiled on a c-chip submesh, which
+``launch/dryrun.py`` proves lowers and compiles for every c).
+
+On this CPU container every c entry executes the same computation, so the
+engine exposes measured latency per (c, b) for the perf-model residual loop
+but vertical scaling affects *scheduling* only; the simulator (calibrated
+from the dry-run roofline) is the quantitative Fig. 4 path.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional, Sequence
+
+import numpy as np
+
+from repro.core.monitor import Monitor
+from repro.core.perf_model import PerfModel
+from repro.core.queueing import EDFQueue
+from repro.core.scaler import SpongeScaler
+from repro.core.slo import Decision, Request
+
+
+@dataclass
+class ServedRequest:
+    req: Request
+    payload: Any
+    result: Any = None
+
+
+class ServingEngine:
+    """Single-instance engine with in-place vertical scaling."""
+
+    def __init__(self, step_fns: Dict[tuple[int, int], Callable],
+                 scaler: SpongeScaler, pad_payload: Callable,
+                 prior_rps: float = 0.0):
+        """step_fns[(c, b)](stacked_payload) -> batched result (pre-jitted).
+        pad_payload(list_of_payloads, b) -> stacked input of bucket size b."""
+        self.step_fns = dict(step_fns)
+        self.c_set = sorted({c for c, _ in step_fns})
+        self.b_set = sorted({b for _, b in step_fns})
+        self.scaler = scaler
+        self.pad_payload = pad_payload
+        self.queue = EDFQueue()
+        self.monitor = Monitor()
+        self.monitor.rate.prior_rps = prior_rps
+        self.c = self.c_set[-1]
+        self.b = 1
+        self.pending: Dict[int, ServedRequest] = {}
+        self.results: List[ServedRequest] = []
+        self.decision_log: List[tuple[float, Decision]] = []
+
+    def warmup(self, example_payload) -> None:
+        for (c, b), fn in self.step_fns.items():
+            fn(self.pad_payload([example_payload] * min(b, 2), b))
+
+    def bucket(self, n: int) -> int:
+        for b in self.b_set:
+            if b >= n:
+                return b
+        return self.b_set[-1]
+
+    def submit(self, req: Request, payload: Any) -> None:
+        self.monitor.observe_arrival(req)
+        self.queue.push(req)
+        self.pending[req.id] = ServedRequest(req, payload)
+
+    def apply(self, d: Decision, now: float) -> None:
+        self.c = min(self.c_set, key=lambda c: abs(c - d.c) + (c < d.c))
+        self.b = d.b if d.b in self.b_set else self.bucket(d.b)
+        self.decision_log.append((now, d))
+
+    def maybe_adapt(self, now: float) -> None:
+        if self.scaler.due(now):
+            lam = self.monitor.rate.rate(now)
+            d = self.scaler.decide(now, self.queue, lam)
+            self.apply(d, now)
+
+    def step(self, now: float) -> Optional[List[ServedRequest]]:
+        """Process one batch if the queue has work.  Returns served items."""
+        if not len(self.queue):
+            return None
+        batch = self.queue.pop_batch(self.b)
+        items = [self.pending.pop(r.id) for r in batch]
+        bucket = self.bucket(len(items))
+        fn = self.step_fns[(self.c, bucket)]
+        t0 = time.perf_counter()
+        out = fn(self.pad_payload([it.payload for it in items], bucket))
+        try:
+            import jax
+            jax.block_until_ready(out)
+        except Exception:
+            pass
+        dt = time.perf_counter() - t0
+        fin = now + dt
+        for i, it in enumerate(items):
+            it.req.start_proc = now
+            it.req.finish = fin
+            it.result = _index_result(out, i)
+            self.monitor.observe_completion(it.req)
+            self.results.append(it)
+        self.monitor.observe_perf_residual(
+            float(self.scaler.perf.latency(bucket, self.c)), dt)
+        return items
+
+    # -- convenience batch-run over a timed request script -----------------
+    def run_script(self, arrivals: Sequence[tuple[Request, Any]],
+                   speedup: float = 1.0) -> dict:
+        """Feeds requests at their (scaled) arrival times on the real clock
+        and serves them; returns monitor summary."""
+        t_start = time.perf_counter()
+        idx = 0
+        arrivals = sorted(arrivals, key=lambda ra: ra[0].arrival)
+        while idx < len(arrivals) or len(self.queue):
+            now = (time.perf_counter() - t_start) * speedup
+            while idx < len(arrivals) and arrivals[idx][0].arrival <= now:
+                self.submit(*arrivals[idx])
+                idx += 1
+            self.maybe_adapt(now)
+            if len(self.queue):
+                self.step(now)
+            elif idx < len(arrivals):
+                dt = (arrivals[idx][0].arrival - now) / speedup
+                time.sleep(min(max(dt, 0.0), 0.05))
+        mon = self.monitor
+        return {
+            "n": mon.n_total,
+            "violations": mon.n_violations,
+            "violation_rate": mon.violation_rate,
+            "p50": mon.p(0.5), "p99": mon.p(0.99),
+            "decisions": len(self.decision_log),
+        }
+
+
+def _index_result(out: Any, i: int):
+    import jax
+    return jax.tree.map(lambda a: np.asarray(a)[i] if hasattr(a, "shape")
+                        and getattr(a, "ndim", 0) > 0 else a, out)
+
+
+def build_llm_step_fns(model, params, c_set: Sequence[int],
+                       b_set: Sequence[int], prompt_len: int,
+                       gen_tokens: int = 8):
+    """Executable table for short-generation LLM serving on the reduced
+    models: each entry prefises the prompt batch and decodes gen_tokens.
+
+    On TPU each (c, b) would be compiled on its c-chip submesh; on CPU the
+    same jitted fn backs every c (see module docstring).
+    """
+    import jax
+    import jax.numpy as jnp
+
+    def make(b):
+        def fn(tokens):
+            logits, cache = model.prefill(params, {"tokens": tokens},
+                                          cache_len=prompt_len + gen_tokens)
+            def body(carry, _):
+                cache, tok = carry
+                lg, cache = model.decode_step(params, cache, tok)
+                nxt = jnp.argmax(
+                    lg[:, :model.cfg.vocab_size], axis=-1
+                ).astype(jnp.int32)[:, None]
+                return (cache, nxt), nxt[:, 0]
+            first = jnp.argmax(logits[:, :model.cfg.vocab_size],
+                               axis=-1).astype(jnp.int32)[:, None]
+            (_, _), toks = jax.lax.scan(body, (cache, first),
+                                        None, length=gen_tokens)
+            return toks.T  # (b, gen_tokens)
+        return jax.jit(fn)
+
+    fns = {}
+    for b in b_set:
+        jitted = make(b)
+        for c in c_set:
+            fns[(c, b)] = jitted
+    return fns
+
+
+def pad_tokens(payloads: List[np.ndarray], b: int) -> np.ndarray:
+    x = np.stack(payloads + [payloads[-1]] * (b - len(payloads)))
+    return x.astype(np.int32)

@@ -1,0 +1,45 @@
+"""Workload generator (paper §4): asynchronous requests at a fixed (or
+Poisson) rate with per-request communication latency from the bandwidth
+trace and a predefined SLO."""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import List, Optional
+
+import numpy as np
+
+from repro.core.slo import Request
+from repro.network.latency import comm_latency
+from repro.network.traces import BandwidthTrace
+
+
+@dataclass
+class WorkloadGenerator:
+    rps: float = 20.0
+    slo: float = 1.0
+    size_kb: float = 200.0
+    poisson: bool = False
+    size_jitter: float = 0.0           # +- fraction of size_kb
+    seed: int = 0
+
+    def generate(self, trace: BandwidthTrace,
+                 duration_s: Optional[float] = None) -> List[Request]:
+        dur = duration_s or trace.duration
+        rng = np.random.default_rng(self.seed)
+        if self.poisson:
+            n_est = int(self.rps * dur * 1.5) + 10
+            gaps = rng.exponential(1.0 / self.rps, size=n_est)
+            send_times = np.cumsum(gaps)
+            send_times = send_times[send_times < dur]
+        else:
+            send_times = np.arange(0, dur, 1.0 / self.rps)
+        reqs = []
+        for ts in send_times:
+            size = self.size_kb
+            if self.size_jitter:
+                size *= 1.0 + rng.uniform(-self.size_jitter, self.size_jitter)
+            cl = comm_latency(size, trace, ts)
+            reqs.append(Request.make(arrival=float(ts + cl),
+                                     comm_latency=float(cl),
+                                     slo=self.slo, size_kb=float(size)))
+        return reqs

@@ -1,0 +1,2 @@
+from repro.train.optimizer import adamw_init, adamw_update, OptConfig
+from repro.train.loop import make_train_step, TrainState

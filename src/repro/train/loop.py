@@ -1,0 +1,68 @@
+"""Training step/loop with pjit shardings."""
+from __future__ import annotations
+
+import dataclasses
+import time
+from dataclasses import dataclass
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.api import Model
+from repro.train.losses import train_loss
+from repro.train.optimizer import OptConfig, adamw_init, adamw_update
+
+
+@dataclass
+class TrainState:
+    params: Any
+    opt: Any
+
+    def as_dict(self):
+        return {"params": self.params, "opt": self.opt}
+
+
+def init_state(model: Model, rng, oc: OptConfig) -> TrainState:
+    params = model.init(rng)
+    return TrainState(params=params, opt=adamw_init(params, oc))
+
+
+def make_train_step(model: Model, oc: OptConfig) -> Callable:
+    cfg = model.cfg
+
+    def step(state: dict, batch: dict):
+        def loss_fn(params):
+            return train_loss(model, params, batch, cfg)
+
+        (loss, metrics), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(state["params"])
+        new_params, new_opt, opt_metrics = adamw_update(
+            state["params"], grads, state["opt"], oc)
+        metrics = dict(metrics)
+        metrics.update(opt_metrics)
+        metrics["loss"] = loss
+        return {"params": new_params, "opt": new_opt}, metrics
+
+    return step
+
+
+def train_loop(model: Model, batches, oc: OptConfig, rng=None,
+               log_every: int = 10, callback=None):
+    """Simple host loop for the examples; returns final state + history."""
+    rng = rng if rng is not None else jax.random.key(0)
+    state = init_state(model, rng, oc).as_dict()
+    step_fn = jax.jit(make_train_step(model, oc), donate_argnums=(0,))
+    history = []
+    t0 = time.perf_counter()
+    for i, batch in enumerate(batches):
+        state, metrics = step_fn(state, batch)
+        if i % log_every == 0 or callback:
+            m = {k: float(v) for k, v in metrics.items()}
+            m["step"] = i
+            m["wall_s"] = time.perf_counter() - t0
+            history.append(m)
+            if callback:
+                callback(m)
+    return state, history

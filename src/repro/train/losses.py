@@ -1,0 +1,56 @@
+"""Cross-entropy (+ MoE aux + DeepSeek MTP) losses."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+IGNORE = -100
+
+
+def softmax_xent(logits, labels, vocab_size: int):
+    """Mean CE over non-ignored labels.  logits: (B,S,Vpad), labels: (B,S)."""
+    mask = (labels != IGNORE) & (labels < vocab_size)
+    safe = jnp.where(mask, labels, 0)
+    lg = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(lg, axis=-1)
+    gold = jnp.take_along_axis(lg, safe[..., None], axis=-1)[..., 0]
+    ce = (lse - gold) * mask
+    return ce.sum() / jnp.maximum(mask.sum(), 1)
+
+
+def next_token_labels(tokens):
+    """Shift-left labels with the final position ignored."""
+    return jnp.concatenate(
+        [tokens[:, 1:], jnp.full((tokens.shape[0], 1), IGNORE, tokens.dtype)],
+        axis=1)
+
+
+def train_loss(model, params, batch, cfg: ModelConfig, mtp_weight: float = 0.1):
+    """Total loss = CE + aux_coef * moe_aux (+ mtp_weight * MTP CE)."""
+    labels = batch.get("labels")
+    if labels is None:
+        labels = next_token_labels(batch["tokens"])
+    if cfg.mtp_depth:
+        hidden, aux = model.forward_hidden(params, batch)
+        from repro.models.common import rms_norm
+        from repro.models.api import _head
+        h = rms_norm(hidden, params["final_norm"], cfg.norm_eps)
+        logits = _head(params, cfg, h)
+    else:
+        logits, aux = model.forward(params, batch)
+    if cfg.num_patch_tokens:
+        # logits cover [patches, text]; only text positions carry labels
+        logits = logits[:, -batch["tokens"].shape[1]:]
+    ce = softmax_xent(logits, labels, cfg.vocab_size)
+    total = ce + cfg.moe_aux_loss_coef * aux
+    metrics = {"ce": ce, "aux": aux}
+    if cfg.mtp_depth:
+        # depth-1 MTP: logits2[t] predicts token t+2
+        logits2, aux2 = model.mtp_logits(params, hidden, batch["tokens"])
+        lab2 = labels[:, 1:]
+        mtp_ce = softmax_xent(logits2, lab2, cfg.vocab_size)
+        total = total + mtp_weight * mtp_ce + cfg.moe_aux_loss_coef * aux2
+        metrics["mtp_ce"] = mtp_ce
+    return total, metrics

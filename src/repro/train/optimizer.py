@@ -1,0 +1,88 @@
+"""AdamW in pure JAX (no optax dependency).
+
+Moment dtype is configurable: f32 for small models, bf16 for the MoE giants
+where full-f32 optimizer state cannot fit a single pod (see DESIGN.md §5 and
+EXPERIMENTS.md §Dry-run memory notes).  Router bias buffers (aux-loss-free
+MoE balancing) are excluded from AdamW and updated by the balance rule.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class OptConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    moment_dtype: str = "float32"   # "bfloat16" for the giants
+    warmup_steps: int = 100
+    total_steps: int = 10000
+    min_lr_frac: float = 0.1
+
+
+def lr_at(step, oc: OptConfig):
+    warm = jnp.minimum(step / jnp.maximum(oc.warmup_steps, 1), 1.0)
+    prog = jnp.clip((step - oc.warmup_steps)
+                    / jnp.maximum(oc.total_steps - oc.warmup_steps, 1), 0, 1)
+    cos = 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    frac = oc.min_lr_frac + (1 - oc.min_lr_frac) * cos
+    return oc.lr * warm * frac
+
+
+def adamw_init(params, oc: OptConfig):
+    dt = jnp.bfloat16 if oc.moment_dtype == "bfloat16" else jnp.float32
+    zeros = lambda p: jnp.zeros(p.shape, dt)
+    return {"mu": jax.tree.map(zeros, params),
+            "nu": jax.tree.map(zeros, params),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(sum(leaves))
+
+
+def adamw_update(params, grads, opt_state, oc: OptConfig):
+    """Returns (new_params, new_opt_state, metrics)."""
+    step = opt_state["step"] + 1
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, oc.grad_clip / jnp.maximum(gnorm, 1e-9)) \
+        if oc.grad_clip > 0 else 1.0
+    lr = lr_at(step, oc)
+    b1, b2 = oc.b1, oc.b2
+    bc1 = 1 - b1 ** step.astype(jnp.float32)
+    bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, mu, nu):
+        g = g.astype(jnp.float32) * scale
+        mu_new = b1 * mu.astype(jnp.float32) + (1 - b1) * g
+        nu_new = b2 * nu.astype(jnp.float32) + (1 - b2) * jnp.square(g)
+        mhat = mu_new / bc1
+        vhat = nu_new / bc2
+        delta = mhat / (jnp.sqrt(vhat) + oc.eps)
+        decay = oc.weight_decay if p.ndim >= 2 else 0.0
+        p_new = p.astype(jnp.float32) * (1 - lr * decay) - lr * delta
+        return (p_new.astype(p.dtype), mu_new.astype(mu.dtype),
+                nu_new.astype(nu.dtype))
+
+    flat_p, tdef = jax.tree.flatten(params)
+    flat_g = tdef.flatten_up_to(grads)
+    flat_mu = tdef.flatten_up_to(opt_state["mu"])
+    flat_nu = tdef.flatten_up_to(opt_state["nu"])
+    out = [upd(p, g, m, n) for p, g, m, n in
+           zip(flat_p, flat_g, flat_mu, flat_nu)]
+    new_p = tdef.unflatten([o[0] for o in out])
+    new_mu = tdef.unflatten([o[1] for o in out])
+    new_nu = tdef.unflatten([o[2] for o in out])
+    return (new_p, {"mu": new_mu, "nu": new_nu, "step": step},
+            {"grad_norm": gnorm, "lr": lr})

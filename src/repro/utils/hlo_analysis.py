@@ -1,0 +1,91 @@
+"""HLO text analysis: collective-traffic accounting for the roofline.
+
+``cost_analysis()`` gives FLOPs and HBM bytes but NOT collective traffic, so
+we parse the compiled (SPMD-partitioned) HLO text and sum the result sizes
+of every collective op.  Shapes in the partitioned module are per-device, so
+the totals are per-chip bytes moved over ICI (receive-side convention; for
+all-reduce the ring cost is ~2x(n-1)/n of that — we report raw result bytes
+and keep the convention fixed across experiments so deltas are comparable).
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from dataclasses import dataclass, field
+from typing import Dict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+# e.g.:  %x = bf16[8,128]{1,0} all-gather(...)   or tuple results
+_OP_RE = re.compile(
+    r"=\s*(?P<result>\([^=]*?\)|[\w\[\],{}:#\s]*?)\s*"
+    r"(?P<op>all-gather|all-reduce|reduce-scatter|all-to-all|"
+    r"collective-permute)(?P<suffix>-start|-done)?\(")
+
+
+def shape_bytes(type_str: str) -> int:
+    """Sum bytes over every tensor shape appearing in a type string."""
+    total = 0
+    for m in _SHAPE_RE.finditer(type_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclass
+class CollectiveStats:
+    bytes_by_kind: Dict[str, int] = field(default_factory=dict)
+    count_by_kind: Dict[str, int] = field(default_factory=dict)
+
+    @property
+    def total_bytes(self) -> int:
+        return sum(self.bytes_by_kind.values())
+
+    @property
+    def total_count(self) -> int:
+        return sum(self.count_by_kind.values())
+
+    def summary(self) -> str:
+        parts = [f"{k}: n={self.count_by_kind[k]} "
+                 f"bytes={self.bytes_by_kind[k]:,}"
+                 for k in sorted(self.bytes_by_kind)]
+        return "; ".join(parts) if parts else "none"
+
+
+def collective_stats(hlo_text: str) -> CollectiveStats:
+    bytes_by = defaultdict(int)
+    count_by = defaultdict(int)
+    for line in hlo_text.splitlines():
+        m = _OP_RE.search(line)
+        if not m:
+            continue
+        if m.group("suffix") == "-done":
+            continue  # avoid double counting start/done pairs
+        kind = m.group("op")
+        b = shape_bytes(m.group("result"))
+        bytes_by[kind] += b
+        count_by[kind] += 1
+    return CollectiveStats(dict(bytes_by), dict(count_by))
+
+
+def duplicate_op_counts(hlo_text: str, top: int = 10) -> list[tuple[str, int]]:
+    """Fusion-name histogram — a cheap remat/recompute indicator."""
+    counts: Dict[str, int] = defaultdict(int)
+    for m in re.finditer(r"fusion\(|dot\(|convolution\(", hlo_text):
+        counts[m.group(0)[:-1]] += 1
+    return sorted(counts.items(), key=lambda kv: -kv[1])[:top]

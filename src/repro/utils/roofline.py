@@ -1,0 +1,100 @@
+"""Three-term roofline from a compiled dry-run artifact.
+
+TPU v5e per-chip constants (the TARGET hardware; this container is CPU):
+    peak bf16 compute  : 197 TFLOP/s
+    HBM bandwidth      : 819 GB/s
+    ICI link bandwidth : ~50 GB/s
+
+Terms (seconds, per step, per chip — cost_analysis of the SPMD-partitioned
+executable reports per-device flops/bytes):
+    compute    = HLO_FLOPs_per_chip / peak
+    memory     = HLO_bytes_per_chip / hbm_bw
+    collective = collective_bytes_per_chip / ici_bw
+"""
+from __future__ import annotations
+
+import json
+from dataclasses import asdict, dataclass
+from typing import Optional
+
+from repro.utils.hlo_analysis import CollectiveStats, collective_stats
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+
+
+@dataclass
+class Roofline:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    flops_per_chip: float
+    bytes_per_chip: float
+    collective_bytes_per_chip: float
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    dominant: str
+    model_flops: float            # 6*N*D (dense) / 6*N_active*D (MoE), global
+    useful_ratio: float           # model_flops / (flops_per_chip * chips)
+    collectives: dict
+    memory_analysis: dict
+    note: str = ""
+
+    def to_json(self) -> str:
+        return json.dumps(asdict(self), indent=1)
+
+    @property
+    def step_time_s(self) -> float:
+        """Simple roofline step-time estimate: overlapped compute/memory
+        plus (conservatively serial) collectives."""
+        return max(self.compute_s, self.memory_s) + self.collective_s
+
+    def row(self) -> str:
+        return (f"| {self.arch} | {self.shape} | {self.mesh} "
+                f"| {self.compute_s*1e3:.2f} | {self.memory_s*1e3:.2f} "
+                f"| {self.collective_s*1e3:.2f} | {self.dominant} "
+                f"| {self.useful_ratio:.2f} |")
+
+
+def analyze(arch: str, shape: str, mesh_name: str, chips: int,
+            cost: dict, hlo_text: str, model_flops: float,
+            memory_analysis: Optional[object] = None,
+            note: str = "") -> Roofline:
+    # trip-count-weighted totals (XLA's cost_analysis counts while bodies
+    # once — fatal for scan-over-layers models; see utils/hlo_cost.py)
+    from repro.utils.hlo_cost import analyze_weighted
+    wc = analyze_weighted(hlo_text)
+    flops = float(wc.flops)
+    byts = float(wc.bytes_accessed)
+    coll_b = {k: int(v) for k, v in wc.collective_bytes.items()}
+    coll_n = {k: int(v) for k, v in wc.collective_counts.items()}
+    cb = float(wc.total_collective_bytes)
+    xla_flops = float(cost.get("flops", 0.0))
+    xla_bytes = float(cost.get("bytes accessed", 0.0))
+    compute_s = flops / PEAK_FLOPS
+    memory_s = byts / HBM_BW
+    collective_s = cb / ICI_BW
+    dominant = max((("compute", compute_s), ("memory", memory_s),
+                    ("collective", collective_s)), key=lambda kv: kv[1])[0]
+    ma = {}
+    if memory_analysis is not None:
+        for k in ("argument_size_in_bytes", "output_size_in_bytes",
+                  "temp_size_in_bytes", "generated_code_size_in_bytes",
+                  "peak_memory_in_bytes"):
+            v = getattr(memory_analysis, k, None)
+            if v is not None:
+                ma[k] = int(v)
+    useful = model_flops / max(flops * chips, 1.0)
+    return Roofline(
+        arch=arch, shape=shape, mesh=mesh_name, chips=chips,
+        flops_per_chip=flops, bytes_per_chip=byts,
+        collective_bytes_per_chip=cb,
+        compute_s=compute_s, memory_s=memory_s, collective_s=collective_s,
+        dominant=dominant, model_flops=model_flops, useful_ratio=useful,
+        collectives={"bytes": coll_b, "count": coll_n,
+                     "xla_flops_unweighted": xla_flops,
+                     "xla_bytes_unweighted": xla_bytes},
+        memory_analysis=ma, note=note)

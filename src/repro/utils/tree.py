@@ -1,0 +1,44 @@
+"""Pytree helpers shared across the framework."""
+from __future__ import annotations
+
+from typing import Any, Callable
+
+import jax
+import numpy as np
+
+
+def tree_size(tree: Any) -> int:
+    """Total number of elements across all leaves."""
+    return sum(int(np.prod(x.shape)) for x in jax.tree_util.tree_leaves(tree))
+
+
+def tree_bytes(tree: Any) -> int:
+    """Total bytes across all leaves (uses leaf dtype itemsize)."""
+    total = 0
+    for x in jax.tree_util.tree_leaves(tree):
+        total += int(np.prod(x.shape)) * np.dtype(x.dtype).itemsize
+    return total
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if isinstance(p, jax.tree_util.DictKey):
+            parts.append(str(p.key))
+        elif isinstance(p, jax.tree_util.SequenceKey):
+            parts.append(str(p.idx))
+        elif isinstance(p, jax.tree_util.GetAttrKey):
+            parts.append(str(p.name))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def tree_map_with_path(fn: Callable[[str, Any], Any], tree: Any) -> Any:
+    """Map ``fn(path_string, leaf)`` over a pytree."""
+    return jax.tree_util.tree_map_with_path(lambda p, x: fn(_path_str(p), x), tree)
+
+
+def tree_paths(tree: Any) -> list[str]:
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    return [_path_str(p) for p, _ in flat]

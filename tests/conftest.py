@@ -1,0 +1,18 @@
+import os
+
+# Tests run on the single real CPU device; ONLY dryrun.py gets 512 fake
+# devices.  Multi-device tests spawn subprocesses with their own XLA_FLAGS.
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import jax
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)
+
+
+def pytest_configure(config):
+    config.addinivalue_line("markers", "slow: long-running integration test")

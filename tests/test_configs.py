@@ -1,0 +1,88 @@
+"""Config registry and reduced-variant invariants."""
+import pytest
+
+from repro.configs import ARCH_IDS, get_config, list_archs
+from repro.configs.base import INPUT_SHAPES
+
+
+def test_all_archs_present():
+    assert len(ARCH_IDS) == 10
+    for a in ("deepseek-v3-671b", "whisper-large-v3", "qwen2-vl-2b",
+              "kimi-k2-1t-a32b", "gemma-2b", "zamba2-2.7b", "smollm-135m",
+              "h2o-danube-1.8b", "rwkv6-1.6b", "smollm-360m"):
+        assert a in ARCH_IDS
+
+
+@pytest.mark.parametrize("arch", list_archs())
+def test_config_consistency(arch):
+    cfg = get_config(arch)
+    assert len(cfg.blocks) == cfg.num_layers
+    assert cfg.padded_vocab >= cfg.vocab_size
+    assert cfg.padded_vocab % 128 == 0
+    assert cfg.source, "every config must cite its source"
+    if cfg.num_experts:
+        assert cfg.num_experts_per_tok <= cfg.num_experts
+    if "attn" in cfg.mixer_kinds or "swa" in cfg.mixer_kinds:
+        assert cfg.num_heads % cfg.num_kv_heads == 0
+
+
+@pytest.mark.parametrize("arch", list_archs())
+def test_reduced_constraints(arch):
+    r = get_config(arch, reduced=True)
+    assert r.num_layers <= 2
+    assert r.d_model <= 512
+    assert (r.num_experts or 0) <= 4
+    # family preserved
+    full = get_config(arch)
+    assert r.arch_type == full.arch_type
+    assert set(b.split("+")[0] for b in r.blocks) <= \
+        set(b.split("+")[0] for b in full.blocks)
+
+
+def test_assigned_exact_values():
+    d = get_config("deepseek-v3-671b")
+    assert (d.num_layers, d.d_model, d.num_heads, d.vocab_size,
+            d.num_experts, d.num_experts_per_tok, d.moe_d_ff) == \
+        (61, 7168, 128, 129280, 256, 8, 2048)
+    g = get_config("gemma-2b")
+    assert (g.num_layers, g.d_model, g.num_heads, g.num_kv_heads,
+            g.head_dim, g.d_ff, g.vocab_size) == \
+        (18, 2048, 8, 1, 256, 16384, 256000)
+    z = get_config("zamba2-2.7b")
+    assert (z.num_layers, z.d_model, z.ssm_state_dim, z.vocab_size) == \
+        (54, 2560, 64, 32000)
+    r = get_config("rwkv6-1.6b")
+    assert (r.num_layers, r.d_model, r.d_ff, r.vocab_size) == \
+        (24, 2048, 7168, 65536)
+    w = get_config("whisper-large-v3")
+    assert (w.num_layers, w.encoder_layers, w.d_model, w.num_heads,
+            w.d_ff, w.vocab_size) == (32, 32, 1280, 20, 5120, 51866)
+    k = get_config("kimi-k2-1t-a32b")
+    assert (k.num_experts, k.num_kv_heads, k.vocab_size) == (384, 8, 163840)
+    q = get_config("qwen2-vl-2b")
+    assert (q.num_layers, q.d_model, q.num_heads, q.num_kv_heads,
+            q.d_ff, q.vocab_size) == (28, 1536, 12, 2, 8960, 151936)
+    h = get_config("h2o-danube-1.8b")
+    assert (h.num_layers, h.d_model, h.num_heads, h.num_kv_heads,
+            h.d_ff, h.vocab_size, h.window_size) == \
+        (24, 2560, 32, 8, 6912, 32000, 4096)
+    s1, s2 = get_config("smollm-135m"), get_config("smollm-360m")
+    assert (s1.num_layers, s1.d_model, s1.num_heads, s1.num_kv_heads,
+            s1.d_ff, s1.vocab_size) == (30, 576, 9, 3, 1536, 49152)
+    assert (s2.num_layers, s2.d_model, s2.num_heads, s2.num_kv_heads,
+            s2.d_ff, s2.vocab_size) == (32, 960, 15, 5, 2560, 49152)
+
+
+def test_param_counts_plausible():
+    assert 1.1e8 < get_config("smollm-135m").param_count() < 1.9e8
+    assert 3.0e8 < get_config("smollm-360m").param_count() < 5.0e8
+    assert 5.5e11 < get_config("deepseek-v3-671b").param_count() < 8.0e11
+    assert 0.8e12 < get_config("kimi-k2-1t-a32b").param_count() < 1.3e12
+    ds = get_config("deepseek-v3-671b")
+    assert ds.active_param_count() < 0.1 * ds.param_count()
+
+
+def test_input_shapes():
+    assert INPUT_SHAPES["train_4k"].global_batch == 256
+    assert INPUT_SHAPES["long_500k"].seq_len == 524288
+    assert INPUT_SHAPES["decode_32k"].kind == "decode"

@@ -1,0 +1,77 @@
+"""Trip-count-weighted HLO cost analysis vs XLA ground truth."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.utils.hlo_analysis import collective_stats, shape_bytes
+from repro.utils.hlo_cost import analyze_weighted
+
+
+def test_shape_bytes():
+    assert shape_bytes("bf16[8,128]{1,0}") == 8 * 128 * 2
+    assert shape_bytes("(f32[4,4], s32[])") == 64 + 4
+    assert shape_bytes("pred[]") == 1
+
+
+def _matmul_chain(x, ws, scan: bool):
+    if scan:
+        y, _ = jax.lax.scan(lambda c, w: (c @ w, None), x, ws)
+        return y
+    for i in range(ws.shape[0]):
+        x = x @ ws[i]
+    return x
+
+
+@pytest.mark.parametrize("n", [4, 12])
+def test_scan_flops_match_unrolled(n):
+    x = jnp.zeros((64, 256), jnp.float32)
+    ws = jnp.zeros((n, 256, 256), jnp.float32)
+    cs = jax.jit(lambda x, w: _matmul_chain(x, w, True)).lower(x, ws).compile()
+    cu = jax.jit(lambda x, w: _matmul_chain(x, w, False)).lower(x, ws).compile()
+    exp = 2 * 64 * 256 * 256 * n
+    ws_ = analyze_weighted(cs.as_text())
+    wu_ = analyze_weighted(cu.as_text())
+    assert ws_.flops == exp
+    assert wu_.flops == exp
+    assert wu_.flops == float(cu.cost_analysis()["flops"])
+
+
+def test_nested_scan_multipliers():
+    def inner(c, w):
+        y, _ = jax.lax.scan(lambda cc, _: (cc @ w, None), c, None, length=3)
+        return y, None
+
+    def outer(x, ws):
+        y, _ = jax.lax.scan(inner, x, ws)
+        return y
+
+    x = jnp.zeros((32, 64), jnp.float32)
+    ws = jnp.zeros((5, 64, 64), jnp.float32)
+    c = jax.jit(outer).lower(x, ws).compile()
+    wc = analyze_weighted(c.as_text())
+    assert wc.flops == 2 * 32 * 64 * 64 * 3 * 5
+
+
+def test_bytes_within_factor_of_xla():
+    x = jnp.zeros((128, 512), jnp.float32)
+    ws = jnp.zeros((10, 512, 512), jnp.float32)
+    c = jax.jit(lambda x, w: _matmul_chain(x, w, False)).lower(x, ws).compile()
+    mine = analyze_weighted(c.as_text()).bytes_accessed
+    xla = float(c.cost_analysis()["bytes accessed"])
+    assert xla / 3 < mine < xla * 3
+
+
+def test_collective_parse_on_text():
+    fake = """
+ENTRY %main (p: f32[8]) -> f32[8] {
+  %p = f32[8]{0} parameter(0)
+  %ar = f32[8]{0} all-reduce(%p), to_apply=%add
+  %ag = f32[16]{0} all-gather(%ar), dimensions={0}
+  ROOT %slice = f32[8]{0} slice(%ag), slice={[0:8]}
+}
+"""
+    st = collective_stats(fake)
+    assert st.bytes_by_kind["all-reduce"] == 32
+    assert st.bytes_by_kind["all-gather"] == 64
+    assert st.total_count == 2

@@ -1,0 +1,45 @@
+"""Network trace + comm-latency model properties (paper Fig. 1)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.network.latency import comm_latency
+from repro.network.traces import BandwidthTrace, synth_4g_trace
+
+
+def test_trace_matches_paper_envelope():
+    tr = synth_4g_trace(600, seed=0)
+    assert len(tr.mbps) == 600
+    assert tr.mbps.min() >= 0.5 - 1e-9
+    assert tr.mbps.max() <= 7.0 + 1e-9
+    # variability: the paper shows order-of-magnitude swings in 10 min
+    assert tr.mbps.max() / tr.mbps.min() > 3.0
+
+
+@given(st.integers(0, 2**31 - 1))
+@settings(max_examples=20, deadline=None)
+def test_trace_seeds_deterministic(seed):
+    a = synth_4g_trace(120, seed=seed)
+    b = synth_4g_trace(120, seed=seed)
+    np.testing.assert_array_equal(a.mbps, b.mbps)
+
+
+def test_short_trace_no_crash():
+    tr = synth_4g_trace(5, seed=1)
+    assert len(tr.mbps) == 5
+
+
+@given(st.floats(10, 1000), st.floats(0, 700))
+@settings(max_examples=50, deadline=None)
+def test_comm_latency_monotone_in_size(kb, t):
+    tr = synth_4g_trace(720, seed=3)
+    assert comm_latency(kb * 2, tr, t) > comm_latency(kb, tr, t)
+
+
+def test_comm_latency_paper_examples():
+    """Fig 1: at 0.5 MB/s a 500 KB payload takes ~1 s."""
+    tr = BandwidthTrace(t=np.arange(10.0), mbps=np.full(10, 0.5))
+    cl = comm_latency(500, tr, 0.0)
+    assert 0.9 < cl < 1.1
+    tr7 = BandwidthTrace(t=np.arange(10.0), mbps=np.full(10, 7.0))
+    assert comm_latency(100, tr7, 0.0) < 0.05

@@ -1,0 +1,64 @@
+"""Performance-model (Eq. 2) fitting tests, incl. robustness (Fig. 3)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.perf_model import (PerfModel, TABLE1_SAMPLES, fit_table1,
+                                   yolov5s_like)
+
+
+def test_table1_fit_quality():
+    pm = fit_table1()
+    assert pm.r2 > 0.9
+    # reproduces the paper's measured points within ~20%
+    for b, c, l in TABLE1_SAMPLES:
+        assert abs(pm.latency(b, c) - l) / l < 0.35
+
+
+def test_latency_monotonicity():
+    pm = yolov5s_like()
+    bs = np.arange(1, 17)
+    for c in (1, 2, 4, 8, 16):
+        l = pm.latency(bs, c)
+        assert np.all(np.diff(l) > 0), "latency increases with batch"
+    for b in (1, 4, 16):
+        l = pm.latency(b, np.arange(1, 17))
+        assert np.all(np.diff(l) < 0), "latency decreases with cores"
+
+
+def test_amdahl_floor():
+    pm = yolov5s_like()
+    # as c -> inf, latency approaches delta*b + eta (the serial fraction)
+    assert pm.latency(4, 1e9) == pytest.approx(pm.delta * 4 + pm.eta,
+                                               rel=1e-6)
+
+
+@given(st.floats(0.01, 0.5), st.floats(0.001, 0.1), st.floats(0.0005, 0.05),
+       st.floats(0.001, 0.05))
+@settings(max_examples=50, deadline=None)
+def test_fit_recovers_ground_truth(gamma, eps, delta, eta):
+    truth = PerfModel(gamma=gamma, eps=eps, delta=delta, eta=eta)
+    samples = truth.sample_profile(range(1, 17), (1, 2, 4, 8, 16),
+                                   noise=0.0)
+    fit = PerfModel.fit(samples, robust=False)
+    bs, cs = np.meshgrid(np.arange(1, 17), np.arange(1, 17))
+    np.testing.assert_allclose(fit.latency(bs, cs), truth.latency(bs, cs),
+                               rtol=1e-4, atol=1e-7)
+
+
+def test_ransac_rejects_outliers():
+    truth = yolov5s_like()
+    dirty = truth.sample_profile(range(1, 17), (1, 2, 4, 8, 16),
+                                 noise=0.01, outlier_frac=0.15, seed=3)
+    robust = PerfModel.fit(dirty, robust=True, seed=1)
+    naive = PerfModel.fit(dirty, robust=False)
+    bs, cs = np.meshgrid(np.arange(1, 17), np.arange(1, 17))
+    err_r = np.abs(robust.latency(bs, cs) - truth.latency(bs, cs)).mean()
+    err_n = np.abs(naive.latency(bs, cs) - truth.latency(bs, cs)).mean()
+    assert err_r < err_n, "RANSAC must beat naive lstsq under outliers"
+    assert err_r / truth.latency(8, 8) < 0.15
+
+
+def test_throughput_definition():
+    pm = yolov5s_like()
+    assert pm.throughput(8, 8) == pytest.approx(8 / pm.latency(8, 8))

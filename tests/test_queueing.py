@@ -1,0 +1,61 @@
+"""EDF queue + dynamic batcher property tests."""
+from hypothesis import given, settings, strategies as st
+
+from repro.core.queueing import DynamicBatcher, EDFQueue
+from repro.core.slo import Request
+
+
+reqs = st.lists(
+    st.tuples(st.floats(0, 100), st.floats(0.0, 0.8), st.floats(0.1, 2.0)),
+    min_size=0, max_size=50)
+
+
+@given(reqs)
+@settings(max_examples=200, deadline=None)
+def test_edf_order(entries):
+    q = EDFQueue()
+    for arr, cl, slo in entries:
+        q.push(Request.make(arrival=arr, comm_latency=cl, slo=slo))
+    deadlines = [q.pop().deadline for _ in range(len(q))]
+    assert deadlines == sorted(deadlines)
+
+
+@given(reqs, st.integers(1, 8))
+@settings(max_examples=100, deadline=None)
+def test_pop_batch_respects_edf_and_size(entries, b):
+    q = EDFQueue()
+    rs = [Request.make(arrival=a, comm_latency=c, slo=s)
+          for a, c, s in entries]
+    q.extend(rs)
+    batcher = DynamicBatcher(q, b)
+    seen = []
+    while batcher.has_work():
+        batch = batcher.next_batch()
+        assert 1 <= len(batch) <= b
+        seen.extend(r.deadline for r in batch)
+    assert seen == sorted(seen)
+    assert len(seen) == len(rs)
+
+
+@given(reqs, st.floats(0, 120))
+@settings(max_examples=100, deadline=None)
+def test_drop_expired(entries, now):
+    q = EDFQueue()
+    for a, c, s in entries:
+        q.push(Request.make(arrival=a, comm_latency=c, slo=s))
+    n0 = len(q)
+    dropped = q.drop_expired(now)
+    assert len(q) + len(dropped) == n0
+    for r in dropped:
+        assert r.deadline < now
+    for _ in range(len(q)):
+        assert q.pop().deadline >= now
+
+
+def test_snapshot_remaining_sorted():
+    q = EDFQueue()
+    for a in (5.0, 1.0, 3.0):
+        q.push(Request.make(arrival=a, comm_latency=0.1, slo=1.0))
+    snap = q.snapshot_remaining(now=0.5)
+    assert snap == sorted(snap)
+    assert len(snap) == 3

@@ -1,0 +1,97 @@
+"""PartitionSpec rule-fitting invariants (no multi-device needed: specs are
+computed from shapes + a mesh description)."""
+import jax
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import get_config, list_archs
+from repro.models.api import init_cache, init_params
+from repro.models.sharding import (batch_specs, cache_specs, param_specs,
+                                   _fit_spec)
+
+
+class FakeMesh:
+    """Duck-typed mesh: only .shape (dict) and .axis_names are consulted."""
+    def __init__(self, **axes):
+        self.shape = dict(axes)
+        self.axis_names = tuple(axes)
+
+
+MESH = FakeMesh(data=16, model=16)
+MESH_MP = FakeMesh(pod=2, data=16, model=16)
+
+
+def test_fit_spec_divisibility():
+    assert _fit_spec(P("model", None), 2, (64, 10), MESH) == P("model", None)
+    # 10 doesn't divide 16: dropped
+    assert _fit_spec(P(None, "model"), 2, (64, 10), MESH) == P(None, None)
+    # tuple axes: prefix that divides survives
+    s = _fit_spec(P(("pod", "data"), None), 2, (4, 8), MESH_MP)
+    assert s == P(("pod", "data"), None) or s == P("pod", None)
+
+
+def test_fit_spec_right_alignment():
+    # stacked-layer leading dim gets None
+    s = _fit_spec(P("model", None), 3, (30, 64, 64), MESH)
+    assert s == P(None, "model", None)
+
+
+@pytest.mark.parametrize("arch", list_archs())
+@pytest.mark.parametrize("mesh", [MESH, MESH_MP], ids=["1pod", "2pod"])
+def test_param_specs_always_divide(arch, mesh):
+    cfg = get_config(arch)
+    shapes = jax.eval_shape(lambda: init_params(jax.random.key(0), cfg))
+    specs = param_specs(shapes, mesh)
+    flat_s, _ = jax.tree.flatten(shapes)
+    flat_p = jax.tree.leaves(specs, is_leaf=lambda x: isinstance(x, P))
+    assert len(flat_s) == len(flat_p)
+    for leaf, spec in zip(flat_s, flat_p):
+        for dim, ax in zip(leaf.shape, ([None] * (leaf.ndim - len(spec))
+                                        + list(spec))):
+            if ax is None:
+                continue
+            axes = ax if isinstance(ax, tuple) else (ax,)
+            n = int(np.prod([mesh.shape[a] for a in axes]))
+            assert dim % n == 0, (arch, leaf.shape, spec)
+
+
+@pytest.mark.parametrize("arch", ["kimi-k2-1t-a32b", "h2o-danube-1.8b",
+                                  "rwkv6-1.6b", "whisper-large-v3"])
+def test_cache_specs_divide(arch):
+    cfg = get_config(arch)
+    cache = jax.eval_shape(lambda: init_cache(cfg, 128, 32768))
+    for seq_shard in (False, True):
+        specs = cache_specs(cache, MESH, seq_shard=seq_shard)
+        for leaf, spec in zip(jax.tree.leaves(cache),
+                              jax.tree.leaves(specs,
+                                              is_leaf=lambda x:
+                                              isinstance(x, P))):
+            pads = [None] * (leaf.ndim - len(spec)) + list(spec)
+            for dim, ax in zip(leaf.shape, pads):
+                if ax is None:
+                    continue
+                axes = ax if isinstance(ax, tuple) else (ax,)
+                n = int(np.prod([MESH.shape[a] for a in axes]))
+                assert dim % n == 0, (arch, leaf.shape, spec, seq_shard)
+
+
+def test_serving_specs_drop_fsdp():
+    cfg = get_config("rwkv6-1.6b")
+    shapes = jax.eval_shape(lambda: init_params(jax.random.key(0), cfg))
+    specs = param_specs(shapes, MESH, fsdp=False)
+    for spec in jax.tree.leaves(specs, is_leaf=lambda x: isinstance(x, P)):
+        for ax in spec:
+            axes = ax if isinstance(ax, tuple) else (ax,)
+            assert "data" not in axes and "pod" not in axes
+
+
+def test_moe_experts_keep_two_axis_sharding_when_serving():
+    cfg = get_config("kimi-k2-1t-a32b")
+    shapes = jax.eval_shape(lambda: init_params(jax.random.key(0), cfg))
+    specs = param_specs(shapes, MESH, fsdp=False)
+    # find an expert weight spec: groups[1] moe wg has rank 4 (L,E,d,f)
+    moe_spec = specs["groups"][1]["moe"]["wg"]
+    flat = [a for ax in moe_spec if ax is not None
+            for a in (ax if isinstance(ax, tuple) else (ax,))]
+    assert "model" in flat and "data" in flat

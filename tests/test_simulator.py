@@ -1,0 +1,105 @@
+"""Discrete-event simulator invariants + the paper's headline claims."""
+import numpy as np
+import pytest
+
+from repro.core.baselines import FA2Policy, SpongePolicy, StaticPolicy
+from repro.core.perf_model import yolov5s_like
+from repro.core.scaler import SpongeScaler
+from repro.core.solver import DEFAULT_B, DEFAULT_C
+from repro.network.traces import synth_4g_trace
+from repro.serving.simulator import ClusterSimulator
+from repro.serving.workload import WorkloadGenerator
+
+PERF = yolov5s_like()
+
+
+def run_policy(policy, trace, rps=20, c0=1, duration=None):
+    wl = WorkloadGenerator(rps=rps, slo=1.0, size_kb=200)
+    sim = ClusterSimulator(PERF, policy, DEFAULT_C, DEFAULT_B, c0=c0)
+    sim.monitor.rate.prior_rps = rps
+    res = sim.run(wl.generate(trace, duration))
+    return sim, res
+
+
+@pytest.fixture(scope="module")
+def trace():
+    return synth_4g_trace(120, seed=7)
+
+
+def test_request_lifecycle_invariants(trace):
+    sim, res = run_policy(SpongePolicy(SpongeScaler(PERF)), trace, c0=16)
+    assert res["n_requests"] > 0
+    for r in sim.monitor.completed:
+        assert r.start_proc is not None and r.finish is not None
+        assert r.start_proc >= r.arrival - 1e-9, "served before arrival"
+        assert r.finish > r.start_proc, "zero/negative processing time"
+
+
+def test_every_request_served_exactly_once(trace):
+    sim, res = run_policy(SpongePolicy(SpongeScaler(PERF)), trace, c0=16)
+    ids = [r.id for r in sim.monitor.completed]
+    assert len(ids) == len(set(ids))
+    assert res["n_requests"] == len(ids)
+
+
+def test_core_seconds_accounting(trace):
+    sim, res = run_policy(StaticPolicy(PERF, cores=8), trace, c0=8)
+    horizon = max(r.arrival for r in sim.monitor.completed) + 60.0
+    # static allocation: core-seconds == 8 * elapsed
+    assert res["core_seconds"] == pytest.approx(8 * horizon, rel=0.05)
+
+
+def test_sponge_resizes_happen(trace):
+    sim, res = run_policy(SpongePolicy(SpongeScaler(PERF)), trace, c0=16)
+    inst = sim.pool[0].instance
+    assert len(inst.resizes) > 3, "vertical scaling never engaged"
+    cs = {e.c_to for e in inst.resizes}
+    assert len(cs) > 1
+
+
+def test_fa2_cold_start_delay(trace):
+    sim, res = run_policy(
+        FA2Policy(PERF, slo=1.0, expected_rps=20, cold_start=10.0),
+        trace)
+    started = [s for s in sim.pool if s.ready_at > 0]
+    for s in started:
+        assert s.ready_at - s.alive_since >= 10.0 - 1e-9
+
+
+@pytest.mark.slow
+def test_paper_headline_claims():
+    """Fig. 4: sponge <0.5% violations, >=10x better than FA2, >=15% fewer
+    cores than static-16 (paper: <0.3%, >15x, >20% on its testbed; the
+    slight slack absorbs trace-seed variance)."""
+    trace = synth_4g_trace(600, seed=42)
+    _, sp = run_policy(SpongePolicy(SpongeScaler(PERF)), trace, c0=16)
+    _, fa = run_policy(FA2Policy(PERF, slo=1.0, expected_rps=20), trace)
+    _, s8 = run_policy(StaticPolicy(PERF, cores=8), trace, c0=8)
+    _, s16 = run_policy(StaticPolicy(PERF, cores=16), trace, c0=16)
+    assert sp["violation_rate"] < 0.005
+    assert fa["violation_rate"] > 10 * sp["violation_rate"]
+    assert s8["violation_rate"] > 0.5, "static-8 must be under-provisioned"
+    assert s16["violation_rate"] < 0.005
+    saving = 1 - sp["avg_cores"] / s16["avg_cores"]
+    assert saving > 0.15
+
+
+def test_edf_priority_under_pressure():
+    """With a starved server, tighter-deadline requests finish first."""
+    from repro.core.slo import Request
+    trace = synth_4g_trace(30, seed=1)
+    sim = ClusterSimulator(PERF, StaticPolicy(PERF, cores=1), (1,),
+                           DEFAULT_B, c0=1)
+    reqs = [Request.make(arrival=1.0, comm_latency=0.01 * i, slo=1.0 + 0.1 * i)
+            for i in range(10)]
+    # occupy the server so all requests queue together before dispatch
+    sim.pool[0].busy_until = 2.0
+    sim.run(list(reversed(reqs)), horizon=30)
+    # EDF: every request in an earlier batch (finish time group) has a
+    # deadline <= every request in a later batch
+    groups: dict = {}
+    for r in sim.monitor.completed:
+        groups.setdefault(r.finish, []).append(r.deadline)
+    fins = sorted(groups)
+    for a, b in zip(fins, fins[1:]):
+        assert max(groups[a]) <= min(groups[b]) + 1e-9
