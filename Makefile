@@ -1,0 +1,20 @@
+PY ?= python
+export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
+
+.PHONY: verify smoke fig4 bench
+
+# tier-1 verification (the ROADMAP contract)
+verify:
+	$(PY) -m pytest -x -q
+
+# fast end-to-end smoke of the unified serving API on both backends (<30 s)
+smoke:
+	$(PY) benchmarks/smoke.py
+
+# the paper's headline study
+fig4:
+	$(PY) -m benchmarks.run --only fig4
+
+# full benchmark harness
+bench:
+	$(PY) -m benchmarks.run

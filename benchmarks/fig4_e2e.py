@@ -1,23 +1,22 @@
-"""Fig. 4 reproduction: trace-driven serving study.
+"""Fig. 4 reproduction: trace-driven serving study (unified serving API).
 
 Sponge vs FA2-style horizontal autoscaler vs static 8/16-core instances
 under a dynamic 4G network, 20 RPS, SLO 1000 ms, 1 s adaptation interval.
 Paper claims: Sponge <0.3%% violations, >15x fewer than FA2, >20%% fewer
 cores than static-16.  Also reports the TPU-adapted variant where the
 feasible c-set is powers of two (submesh degrees, DESIGN.md §2).
+
+Every configuration is one ``make_sim_server`` call — policy, backend and
+runner are wired once in ``repro.serving.api``.
 """
 from __future__ import annotations
 
 import time
 
-import numpy as np
-
-from repro.core.baselines import FA2Policy, SpongePolicy, StaticPolicy
 from repro.core.perf_model import yolov5s_like
-from repro.core.scaler import SpongeScaler
-from repro.core.solver import DEFAULT_B, DEFAULT_C, TPU_B, TPU_C
+from repro.core.solver import DEFAULT_B, DEFAULT_C, TPU_C
 from repro.network.traces import synth_4g_trace
-from repro.serving.simulator import ClusterSimulator
+from repro.serving.api import make_sim_server
 from repro.serving.workload import WorkloadGenerator
 
 RPS, SLO, SIZE_KB, DUR, SEED = 20.0, 1.0, 200.0, 600, 42
@@ -25,9 +24,9 @@ RPS, SLO, SIZE_KB, DUR, SEED = 20.0, 1.0, 200.0, 600, 42
 
 def _run(perf, policy, trace, c_set=DEFAULT_C, b_set=DEFAULT_B, c0=1):
     wl = WorkloadGenerator(rps=RPS, slo=SLO, size_kb=SIZE_KB)
-    sim = ClusterSimulator(perf, policy, c_set, b_set, c0=c0)
-    sim.monitor.rate.prior_rps = RPS
-    return sim.run(wl.generate(trace))
+    server = make_sim_server(perf, policy, c_set=c_set, b_set=b_set, c0=c0,
+                             prior_rps=RPS, slo=SLO, expected_rps=RPS)
+    return server.serve(wl, trace)
 
 
 def run() -> list[tuple[str, float, str]]:
@@ -35,19 +34,14 @@ def run() -> list[tuple[str, float, str]]:
     perf = yolov5s_like()
     trace = synth_4g_trace(DUR, seed=SEED)
     res = {}
-    res["sponge"] = _run(perf, SpongePolicy(SpongeScaler(perf)), trace,
-                         c0=16)
+    res["sponge"] = _run(perf, "sponge", trace, c0=16)
     # TPU adaptation: c quantized to submesh degrees; every b in 1..16 has
     # a compiled entry in the executable table (80 executables), so the
     # batch axis stays fine-grained
-    res["sponge-tpu"] = _run(
-        perf, SpongePolicy(SpongeScaler(perf, c_set=TPU_C)),
-        trace, c_set=TPU_C, b_set=DEFAULT_B, c0=16)
-    res["fa2"] = _run(perf, FA2Policy(perf, slo=SLO, expected_rps=RPS),
-                      trace)
-    res["static-8"] = _run(perf, StaticPolicy(perf, cores=8), trace, c0=8)
-    res["static-16"] = _run(perf, StaticPolicy(perf, cores=16), trace,
-                            c0=16)
+    res["sponge-tpu"] = _run(perf, "sponge", trace, c_set=TPU_C, c0=16)
+    res["fa2"] = _run(perf, "fa2", trace)
+    res["static-8"] = _run(perf, "static-8", trace, c0=8)
+    res["static-16"] = _run(perf, "static-16", trace, c0=16)
     dt = (time.perf_counter() - t0) * 1e6
 
     print("\n== Fig 4: SLO violations and allocated cores ==")

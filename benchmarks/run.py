@@ -12,9 +12,11 @@ import traceback
 
 from benchmarks import (ablation_bench, fig1_dynamic_slo, fig3_perf_model,
                         fig4_e2e, perf_iter, predictive_bench,
-                        roofline_report, solver_bench, table1_latency_grid)
+                        roofline_report, smoke, solver_bench,
+                        table1_latency_grid)
 
 BENCHES = [
+    ("smoke", smoke),
     ("table1", table1_latency_grid),
     ("fig1", fig1_dynamic_slo),
     ("fig3", fig3_perf_model),

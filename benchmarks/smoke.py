@@ -1,0 +1,88 @@
+"""Fast end-to-end smoke of the unified serving API (<30 s).
+
+Exercises ``ScenarioRunner`` on BOTH execution backends:
+
+* ``SimBackend``  — sponge + fa2 on a 60 s 4G trace (Fig. 4 in miniature);
+* ``JaxBackend``  — a real jitted executable table (toy tanh step),
+  measured clock, plus the FA2-style multi-instance live path.
+
+    PYTHONPATH=src python benchmarks/smoke.py
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core.perf_model import PerfModel, yolov5s_like
+from repro.core.slo import Request
+from repro.network.traces import synth_4g_trace
+from repro.serving.api import (JaxBackend, SpongeServer, make_policy,
+                               make_sim_server, pad_vectors, toy_step_fns)
+from repro.serving.workload import WorkloadGenerator
+
+DIM = 16
+C_SET = B_SET = (1, 2, 4)
+
+
+def _live_script(n, rps, dim=DIM, seed=0):
+    rng = np.random.default_rng(seed)
+    out = []
+    for i in range(n):
+        ts = i / rps
+        cl = float(rng.uniform(0.02, 0.2))
+        out.append((Request.make(arrival=ts + cl, comm_latency=cl, slo=0.8),
+                    rng.standard_normal(dim).astype(np.float32)))
+    return out
+
+
+def run() -> list[tuple[str, float, str]]:
+    t0 = time.perf_counter()
+    rows = []
+
+    # --- sim backend ------------------------------------------------------
+    perf = yolov5s_like()
+    trace = synth_4g_trace(60, seed=3)
+    wl = WorkloadGenerator(rps=20, slo=1.0, size_kb=200)
+    for name, c0 in (("sponge", 16), ("fa2", 1)):
+        server = make_sim_server(perf, name, c0=c0, prior_rps=20,
+                                 slo=1.0, expected_rps=20)
+        r = server.serve(wl, trace)
+        assert r.n_requests >= 1100 and not len(server.queue), \
+            (r.n_requests, len(server.queue))
+        rows.append((f"smoke_sim_{name}", (time.perf_counter() - t0) * 1e6,
+                     f"viol={r.violation_rate*100:.2f};"
+                     f"cores={r.avg_cores:.2f}"))
+
+    # --- jax backend (real execution, measured clock) ---------------------
+    lperf = PerfModel(gamma=0.030, eps=0.010, delta=0.002, eta=0.004)
+    fns = toy_step_fns(C_SET, B_SET, dim=DIM)
+    for name, prior in (("sponge", 15.0), ("fa2", 40.0)):
+        pol = make_policy(name, lperf, c_set=C_SET, b_set=B_SET,
+                          adaptation_interval=0.5, slo=0.8,
+                          expected_rps=prior, **(
+                              {"cold_start": 0.5, "reconfig_interval": 1.0}
+                              if name == "fa2" else {}))
+        server = SpongeServer(pol, JaxBackend(fns, pad_vectors, lperf,
+                                              clock="measured", c0=1),
+                              tick=0.5, prior_rps=prior)
+        n = 60 if name == "sponge" else 80
+        r = server.run(_live_script(n, prior), horizon=8.0)
+        assert r.n_requests == n, (name, r.n_requests)
+        assert all(it.result is not None for it in server.backend.results)
+        rows.append((f"smoke_jax_{name}", (time.perf_counter() - t0) * 1e6,
+                     f"viol={r.violation_rate*100:.2f};"
+                     f"max_replicas="
+                     f"{max(c for _, c in r.core_timeline)}"))
+
+    dt = time.perf_counter() - t0
+    print(f"\n== smoke: ScenarioRunner on sim + jax backends "
+          f"({dt:.1f} s) ==")
+    for name, _, derived in rows:
+        print(f"  {name:18s} {derived}")
+    assert dt < 30.0, f"smoke exceeded 30 s budget: {dt:.1f}"
+    return rows
+
+
+if __name__ == "__main__":
+    run()

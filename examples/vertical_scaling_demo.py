@@ -2,24 +2,18 @@
 
 Simulates a network fade mid-run and shows the scaler reacting within one
 adaptation interval (vs a 10 s horizontal cold start), printing the (c, b)
-trajectory and per-request outcomes.
+trajectory and per-request outcomes — all through the unified serving API.
 
     PYTHONPATH=src python examples/vertical_scaling_demo.py
 """
 import numpy as np
 
-from repro.core.baselines import SpongePolicy
 from repro.core.perf_model import yolov5s_like
-from repro.core.scaler import SpongeScaler
 from repro.core.slo import Request
-from repro.core.solver import DEFAULT_B, DEFAULT_C
-from repro.serving.simulator import ClusterSimulator
+from repro.serving.api import make_sim_server
 
 perf = yolov5s_like()
-scaler = SpongeScaler(perf)
-sim = ClusterSimulator(perf, SpongePolicy(scaler), DEFAULT_C, DEFAULT_B,
-                       c0=12)
-sim.monitor.rate.prior_rps = 20
+server = make_sim_server(perf, "sponge", c0=12, prior_rps=20.0)
 
 # 60 s of traffic; the network fades hard between t=20 and t=30
 reqs = []
@@ -28,15 +22,15 @@ for i in range(20 * 60):
     ts = i / 20.0
     cl = 0.55 if 20 <= ts < 30 else 0.08
     reqs.append(Request.make(arrival=ts + cl, comm_latency=cl, slo=1.0))
-res = sim.run(reqs, horizon=70)
+res = server.run(reqs, horizon=70)
 
 print("time  ->  (cores, batch) decisions around the fade:")
-for t, d in scaler.decisions:
+for t, d in res.decisions:
     if 16 <= t <= 34 and int(t) == t:
         marker = " <= fade" if 20 <= t < 30 else ""
         print(f"  t={t:5.1f}s  c={d.c:2d}  b={d.b:2d}  "
               f"feasible={d.feasible}{marker}")
-inst = sim.pool[0].instance
+inst = server.pool[0].instance
 print(f"\nresizes: {len(inst.resizes)}; "
       f"violations: {res['n_violations']}/{res['n_requests']} "
       f"({res['violation_rate']*100:.2f}%)")

@@ -9,25 +9,41 @@
 * ``SpongePolicy`` — the paper's system: single instance, in-place vertical
   scaling + EDF + dynamic batching via the IP solver.
 
-All three implement ``on_tick(now, sim)`` against the discrete-event
-simulator in ``repro.serving.simulator``.
+All of them implement the one ``SchedulingPolicy`` protocol
+(``repro.serving.api``): ``decide(now, queue, lam, initial_wait)`` returns
+a ``Decision`` — including a replica target ``n`` for horizontal policies —
+which the runner applies to whichever ExecutionBackend is plugged in.
+``Policy.on_tick`` remains as the driver entry point; policies that need
+direct pool access (e.g. ``MultiDimPolicy``) may still override it.
 """
 from __future__ import annotations
 
 import math
 from dataclasses import dataclass, field
-from typing import Optional, Sequence
+from typing import List, Optional, Sequence
 
 from repro.core.perf_model import PerfModel
+from repro.core.queueing import EDFQueue
 from repro.core.scaler import SpongeScaler
 from repro.core.slo import Decision
 from repro.core.solver import DEFAULT_B, DEFAULT_C, solve_bruteforce
 
 
 class Policy:
+    """Base scheduling policy: subclasses implement ``decide``; the
+    default ``on_tick`` routes through the runner's single drive path."""
+
     name = "base"
-    def on_tick(self, now: float, sim) -> None:  # pragma: no cover
+
+    def due(self, now: float) -> bool:
+        return True
+
+    def decide(self, now: float, queue: EDFQueue, lam: float,
+               initial_wait: float = 0.0) -> Decision:  # pragma: no cover
         raise NotImplementedError
+
+    def on_tick(self, now: float, sim) -> None:
+        sim.drive(self, now)
 
 
 @dataclass
@@ -35,17 +51,17 @@ class SpongePolicy(Policy):
     scaler: SpongeScaler
     name: str = "sponge"
 
-    def on_tick(self, now: float, sim) -> None:
-        if not self.scaler.due(now):
-            return
-        lam = sim.monitor.rate.rate(now)
-        srv = sim.pool[0]
-        wait0 = max(srv.busy_until - now, 0.0)
-        d = self.scaler.decide(now, sim.queue, lam, initial_wait=wait0)
-        sim.set_batch(d.b)
-        penalty = srv.instance.resize(d.c, now)
-        if penalty:
-            srv.busy_until = max(srv.busy_until, now) + penalty
+    def due(self, now: float) -> bool:
+        return self.scaler.due(now)
+
+    def decide(self, now: float, queue: EDFQueue, lam: float,
+               initial_wait: float = 0.0) -> Decision:
+        return self.scaler.decide(now, queue, lam,
+                                  initial_wait=initial_wait)
+
+    @property
+    def decisions(self):
+        return self.scaler.decisions
 
 
 @dataclass
@@ -55,21 +71,23 @@ class StaticPolicy(Policy):
     b_set: Sequence[int] = DEFAULT_B
     interval: float = 1.0
     name: str = "static"
+    decisions: List[tuple] = field(default_factory=list)
     _next_t: float = 0.0
 
     def __post_init__(self):
         self.name = f"static-{self.cores}"
 
-    def on_tick(self, now: float, sim) -> None:
-        if now + 1e-12 < self._next_t:
-            return
+    def due(self, now: float) -> bool:
+        return now + 1e-12 >= self._next_t
+
+    def decide(self, now: float, queue: EDFQueue, lam: float,
+               initial_wait: float = 0.0) -> Decision:
         self._next_t = now + self.interval
-        lam = sim.monitor.rate.rate(now)
-        rem = sim.queue.snapshot_remaining(now)
-        wait0 = max(sim.pool[0].busy_until - now, 0.0)
+        rem = queue.snapshot_remaining(now)
         d = solve_bruteforce(rem, lam, self.perf, (self.cores,), self.b_set,
-                             initial_wait=wait0)
-        sim.set_batch(d.b)
+                             initial_wait=initial_wait)
+        self.decisions.append((now, d))
+        return d
 
 
 @dataclass
@@ -80,7 +98,10 @@ class FA2Policy(Policy):
     the nominal SLO; it cannot see per-request comm latency), targets
     n = ceil(lambda / h(b*, 1)) instances.  Scale-ups pay ``cold_start``
     seconds before the instance serves; reconfiguration happens every
-    ``reconfig_interval`` (~10 s to find + adjust + stabilize per the paper).
+    ``reconfig_interval`` (~10 s to find + adjust + stabilize per the
+    paper).  The first decision is the deploy-time warm start (sized to
+    ``expected_rps``, no cold start — deployed pre-stabilized, as in the
+    paper).
     """
     perf: PerfModel
     slo: float = 1.0
@@ -91,10 +112,10 @@ class FA2Policy(Policy):
     slo_budget_frac: float = 0.7        # FA2 plans within the NOMINAL SLO (it
                                         # cannot see per-request comm latency)
     max_instances: int = 32
-    expected_rps: float = 0.0           # warm-start provisioning (deployed
-                                        # pre-stabilized, as in the paper)
+    expected_rps: float = 0.0
     drain_horizon: float = 10.0         # drain backlog within this window
     name: str = "fa2"
+    decisions: List[tuple] = field(default_factory=list)
     _next_t: float = 0.0
     _warmed: bool = False
 
@@ -110,30 +131,28 @@ class FA2Policy(Policy):
                 best_b, best_h = b, h
         return best_b
 
-    def on_tick(self, now: float, sim) -> None:
+    def due(self, now: float) -> bool:
+        return (not self._warmed) or now + 1e-12 >= self._next_t
+
+    def decide(self, now: float, queue: EDFQueue, lam: float,
+               initial_wait: float = 0.0) -> Decision:
+        self._next_t = now + self.reconfig_interval
         b = self.best_batch()
         h = float(self.perf.throughput(b, self.instance_cores))
         if not self._warmed:
             self._warmed = True
             if self.expected_rps > 0:
-                n0 = max(1, math.ceil(self.expected_rps / max(h, 1e-9)))
-                sim.set_batch(b)
-                for _ in range(n0 - len(sim.pool)):
-                    sim.add_server(self.instance_cores, ready_at=now)
-        if now + 1e-12 < self._next_t:
-            return
-        self._next_t = now + self.reconfig_interval
-        lam = sim.monitor.rate.rate(now)
+                n = max(1, math.ceil(self.expected_rps / max(h, 1e-9)))
+                d = Decision(c=self.instance_cores, b=b, n=n)
+                self.decisions.append((now, d))
+                return d
         # backlog-aware target: serve the arrival rate AND drain the queue
         # within the reconfiguration horizon
-        lam_eff = lam + len(sim.queue) / self.drain_horizon
+        lam_eff = lam + len(queue) / self.drain_horizon
         n = max(1, min(self.max_instances,
-                       math.ceil(lam_eff / max(h, 1e-9)) if lam_eff > 0 else 1))
-        sim.set_batch(b)
-        cur = len(sim.pool)
-        if n > cur:
-            for _ in range(n - cur):
-                sim.add_server(self.instance_cores,
-                               ready_at=now + self.cold_start)
-        elif n < cur:
-            sim.remove_servers(cur - n, now)
+                       math.ceil(lam_eff / max(h, 1e-9)) if lam_eff > 0
+                       else 1))
+        d = Decision(c=self.instance_cores, b=b, n=n,
+                     scale_up_delay=self.cold_start)
+        self.decisions.append((now, d))
+        return d

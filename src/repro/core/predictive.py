@@ -68,9 +68,10 @@ class PredictiveSpongeScaler(SpongeScaler):
 
 @dataclass
 class PredictivePolicy:
-    """Simulator policy wrapping the predictive scaler: feeds each observed
-    request's comm latency to the forecaster exactly once (in arrival
-    order — the signal a real gateway has)."""
+    """Policy wrapping the predictive scaler: feeds each observed request's
+    comm latency to the forecaster exactly once (in arrival order — the
+    signal a real gateway has).  Overrides ``on_tick`` only to feed the
+    forecaster before the standard drive path runs."""
     scaler: PredictiveSpongeScaler
     name: str = "sponge-pred"
     _seen: set = field(default_factory=set)
@@ -83,18 +84,20 @@ class PredictivePolicy:
             self.scaler.observe_comm_latency(r.comm_latency)
             self._seen.add(r.id)
 
+    def due(self, now: float) -> bool:
+        return self.scaler.due(now)
+
+    def decide(self, now: float, queue: EDFQueue, lam: float,
+               initial_wait: float = 0.0) -> Decision:
+        return self.scaler.decide(now, queue, lam, initial_wait=initial_wait)
+
+    @property
+    def decisions(self):
+        return self.scaler.decisions
+
     def on_tick(self, now: float, sim) -> None:
         self._feed(sim)
-        if not self.scaler.due(now):
-            return
-        lam = sim.monitor.rate.rate(now)
-        srv = sim.pool[0]
-        wait0 = max(srv.busy_until - now, 0.0)
-        d = self.scaler.decide(now, sim.queue, lam, initial_wait=wait0)
-        sim.set_batch(d.b)
-        penalty = srv.instance.resize(d.c, now)
-        if penalty:
-            srv.busy_until = max(srv.busy_until, now) + penalty
+        sim.drive(self, now)
 
 
 @dataclass
@@ -115,20 +118,22 @@ class TelemetryPolicy:
     slo: float = 1.0
     name: str = "sponge-telem"
 
-    def on_tick(self, now: float, sim) -> None:
-        if not self.scaler.due(now):
-            return
+    def due(self, now: float) -> bool:
+        return self.scaler.due(now)
+
+    def decide(self, now: float, queue: EDFQueue, lam: float,
+               initial_wait: float = 0.0) -> Decision:
         from repro.network.latency import comm_latency
-        lam = sim.monitor.rate.rate(now)
         cl_now = comm_latency(self.size_kb, self.trace, now)
         n_inflight = int(lam * cl_now)
         extra = tuple(max(self.slo - cl_now, 0.0) + i / max(lam, 1e-6)
                       for i in range(n_inflight))
-        srv = sim.pool[0]
-        wait0 = max(srv.busy_until - now, 0.0)
-        d = self.scaler.decide(now, sim.queue, lam, initial_wait=wait0,
-                               extra_budgets=extra)
-        sim.set_batch(d.b)
-        penalty = srv.instance.resize(d.c, now)
-        if penalty:
-            srv.busy_until = max(srv.busy_until, now) + penalty
+        return self.scaler.decide(now, queue, lam, initial_wait=initial_wait,
+                                  extra_budgets=extra)
+
+    @property
+    def decisions(self):
+        return self.scaler.decisions
+
+    def on_tick(self, now: float, sim) -> None:
+        sim.drive(self, now)

@@ -14,7 +14,10 @@ from repro.core.solver import DEFAULT_B, DEFAULT_C, solve_bruteforce, solve_prun
 
 @dataclass
 class SpongeScaler:
+    """Conforms to ``repro.serving.api.SchedulingPolicy`` — a bare scaler
+    can be handed to the ScenarioRunner directly (the live engine does)."""
     perf: PerfModel
+    name: str = "sponge"
     c_set: Sequence[int] = DEFAULT_C
     b_set: Sequence[int] = DEFAULT_B
     adaptation_interval: float = 1.0

@@ -45,13 +45,21 @@ class Request:
 
 @dataclass(frozen=True)
 class Decision:
-    """Scaler output: in-place vertical scale to c, batch size b."""
+    """Scaler output: in-place vertical scale to c, batch size b.
+
+    Horizontal policies (FA2-style, multidimensional scaling) additionally
+    set a replica target ``n``; newly added replicas become ready after
+    ``scale_up_delay`` seconds (the cold start — only ever paid on the
+    horizontal axis).  Vertical-only policies leave both at the defaults.
+    """
     c: int
     b: int
     feasible: bool = True
     solver_iters: int = 0
     solver_time: float = 0.0
+    n: int = 1
+    scale_up_delay: float = 0.0
 
     @property
     def cost(self) -> float:
-        return float(self.c)
+        return float(self.c) * max(self.n, 1)

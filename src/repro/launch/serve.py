@@ -1,10 +1,13 @@
-"""Serving launcher: Sponge end-to-end.
+"""Serving launcher: Sponge end-to-end through the unified serving API.
 
-Two modes:
+Two modes, one control plane (``repro.serving.api.SpongeServer``):
 
-* ``--mode live`` — real JAX inference (reduced arch) behind the Sponge
-  control plane: EDF queue, dynamic batching, IP-solver scaler, executable
-  table.  This is the paper's Fig. 2 pipeline with an actual model.
+* ``--mode live`` — real JAX inference (reduced arch, resolved through
+  ``configs.registry``) behind the Sponge control plane: EDF queue, dynamic
+  batching, IP-solver scaler, executable table.  This is the paper's
+  Fig. 2 pipeline with an actual model.  ``--policy fa2`` exercises the
+  multi-instance live path (horizontal one-core replicas over the same
+  executable table).
 * ``--mode sim``  — the trace-driven discrete-event study (Fig. 4):
   Sponge vs FA2 vs static 8/16 under a 4G bandwidth trace.
 
@@ -19,15 +22,17 @@ import json
 
 import numpy as np
 
-from repro.configs import get_config
-from repro.core.baselines import FA2Policy, SpongePolicy, StaticPolicy
-from repro.core.perf_model import PerfModel, yolov5s_like
-from repro.core.scaler import SpongeScaler
+from repro.core.perf_model import yolov5s_like
 from repro.core.slo import Request
-from repro.core.solver import DEFAULT_B, DEFAULT_C
+from repro.network.latency import comm_latency
 from repro.network.traces import synth_4g_trace
-from repro.serving.simulator import ClusterSimulator
+from repro.serving.api import make_live_server, make_sim_server
 from repro.serving.workload import WorkloadGenerator
+
+SIM_POLICIES = (("sponge", dict(c0=16)),
+                ("fa2", dict(c0=1)),
+                ("static-8", dict(c0=8)),
+                ("static-16", dict(c0=16)))
 
 
 def run_sim(args) -> dict:
@@ -35,16 +40,11 @@ def run_sim(args) -> dict:
     trace = synth_4g_trace(args.duration, seed=args.seed)
     wl = WorkloadGenerator(rps=args.rps, slo=args.slo, size_kb=args.size_kb)
 
-    def run(policy, c0=1):
-        sim = ClusterSimulator(perf, policy, DEFAULT_C, DEFAULT_B, c0=c0)
-        sim.monitor.rate.prior_rps = args.rps
-        return sim.run(wl.generate(trace))
-
     out = {}
-    out["sponge"] = run(SpongePolicy(SpongeScaler(perf)), c0=16)
-    out["fa2"] = run(FA2Policy(perf, slo=args.slo, expected_rps=args.rps))
-    out["static-8"] = run(StaticPolicy(perf, cores=8), c0=8)
-    out["static-16"] = run(StaticPolicy(perf, cores=16), c0=16)
+    for name, kw in SIM_POLICIES:
+        server = make_sim_server(perf, name, prior_rps=args.rps,
+                                 slo=args.slo, expected_rps=args.rps, **kw)
+        out[name] = server.serve(wl, trace)
     for k, v in out.items():
         print(f"{k:10s} violations={v['violation_rate']*100:6.2f}%  "
               f"avg_cores={v['avg_cores']:6.2f}  p99={v['p99']:.3f}s")
@@ -59,49 +59,32 @@ def run_sim(args) -> dict:
 
 
 def run_live(args) -> dict:
-    import jax
-    from repro.models import build_model
-    from repro.serving.engine import (ServingEngine, build_llm_step_fns,
-                                      pad_tokens)
-
-    cfg = get_config(args.arch)
-    model = build_model(cfg)
-    params = model.init(jax.random.key(0))
-    prompt = args.prompt_len
     c_set, b_set = (1, 2, 4, 8), (1, 2, 4, 8)
-    fns = build_llm_step_fns(model, params, c_set, b_set, prompt,
-                             gen_tokens=args.gen_tokens)
-
-    # profile the executable table to calibrate the perf model
-    import time as _t
-    samples = []
-    for (c, b), fn in fns.items():
-        x = np.ones((b, prompt), np.int32)
-        fn(x)
-        t0 = _t.perf_counter()
-        jax.block_until_ready(fn(x))
-        samples.append((b, c, _t.perf_counter() - t0))
-    perf = PerfModel.fit(samples, robust=False)
+    server, cfg = make_live_server(
+        args.arch, c_set=c_set, b_set=b_set, prompt_len=args.prompt_len,
+        gen_tokens=args.gen_tokens, policy=args.policy,
+        adaptation_interval=0.5, prior_rps=args.rps, slo=args.slo,
+        expected_rps=args.rps)
+    perf = server.backend.perf
     print(f"calibrated perf model: r2={perf.r2:.3f} "
           f"l(1,1)={perf.latency(1,1)*1e3:.1f}ms")
-
-    scaler = SpongeScaler(perf, c_set=c_set, b_set=b_set,
-                          adaptation_interval=0.5)
-    eng = ServingEngine(fns, scaler, pad_tokens, prior_rps=args.rps)
-    eng.warmup(np.ones(prompt, np.int32))
+    server.warmup(np.ones(args.prompt_len, np.int32))
 
     trace = synth_4g_trace(int(args.duration) + 5, seed=args.seed)
     rng = np.random.default_rng(args.seed)
     arrivals = []
-    n = int(args.rps * args.duration)
-    from repro.network.latency import comm_latency
-    for i in range(n):
+    for i in range(int(args.rps * args.duration)):
         ts = i / args.rps
         cl = comm_latency(args.size_kb, trace, ts)
         req = Request.make(arrival=ts + cl, comm_latency=cl, slo=args.slo)
         arrivals.append((req, rng.integers(
-            0, cfg.vocab_size, prompt).astype(np.int32)))
-    res = eng.run_script(arrivals)
+            0, cfg.vocab_size, args.prompt_len).astype(np.int32)))
+    report = server.run(arrivals, horizon=args.duration + 30)
+    res = {"n": report.n_requests, "violations": report.n_violations,
+           "violation_rate": report.violation_rate,
+           "p50": report.p50, "p99": report.p99,
+           "decisions": len(report.decisions or ()),
+           "instances": len(server.pool)}
     print(json.dumps(res, indent=1, default=float))
     return res
 
@@ -110,6 +93,7 @@ def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--mode", choices=("sim", "live"), default="sim")
     ap.add_argument("--arch", default="smollm-135m-reduced")
+    ap.add_argument("--policy", default="sponge")
     ap.add_argument("--rps", type=float, default=20.0)
     ap.add_argument("--slo", type=float, default=1.0)
     ap.add_argument("--size-kb", type=float, default=200.0)

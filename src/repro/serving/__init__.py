@@ -1,2 +1,5 @@
 from repro.serving.workload import WorkloadGenerator
-from repro.serving.simulator import ClusterSimulator, simulate
+from repro.serving.api import (JaxBackend, RunReport, ScenarioRunner,
+                               SimBackend, SpongeServer, make_live_server,
+                               make_policy, make_sim_server, round_up_c)
+from repro.serving.simulator import ClusterSimulator, Server, simulate

@@ -1,0 +1,643 @@
+"""The unified Sponge serving API: one control plane, pluggable everything.
+
+The paper's control loop — IP solver + in-place vertical scaling + EDF
+dynamic batching — used to be wired twice in this repo: once inside the
+discrete-event ``ClusterSimulator`` and once inside the live
+``ServingEngine``.  This module factors it into three protocols and one
+facade so every policy, backend, and workload scenario is wired exactly
+once:
+
+* ``SchedulingPolicy`` — anything with ``decide(now, queue, lam,
+  initial_wait) -> Decision`` (optionally ``due(now)``).  The Sponge
+  scaler, the static baselines, the FA2-style horizontal autoscaler and
+  the predictive scalers all speak this protocol; a ``Decision`` now
+  carries a replica target ``n`` so horizontal actions are first-class.
+* ``ExecutionBackend`` — a pool of vertically scalable server slots plus
+  ``execute(batch, c, b, now) -> finish_time``.  ``SimBackend`` finishes
+  batches on the calibrated ``PerfModel`` clock (the Fig. 4 path);
+  ``JaxBackend`` runs the pre-jitted ``(c, b)`` executable table for real
+  and can advance time either by the measured wall latency
+  (``clock="measured"``) or by the model prediction (``clock="modeled"``,
+  which makes live runs event-for-event reproducible against the
+  simulator).  Both support multiple slots, so FA2-style horizontal
+  baselines run on either substrate.
+* ``ScenarioRunner`` — the single event loop: arrivals, adaptation ticks,
+  slack-aware EDF dispatch, server-free events.  It feeds any workload
+  script into any backend+policy pair and returns a uniform ``RunReport``
+  (p50/p99, violation rate, core-seconds, decision + bucket logs).
+
+``SpongeServer`` composes the three; ``make_sim_server`` /
+``make_live_server`` build them config-driven (the live path resolves the
+model through ``configs.registry``).  Adding a scenario is now: pick or
+write one policy class, pick a backend, hand the runner a request script.
+
+Legacy ``on_tick(now, sim)`` policies (e.g. ``MultiDimPolicy``) still
+work: the runner exposes the old mutation facade (``pool``,
+``add_server``, ``remove_servers``, ``set_batch``) and drives new-style
+policies through the same path (``ScenarioRunner.drive``).
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+import itertools
+from dataclasses import dataclass, field
+from typing import (Any, Callable, Dict, List, Optional, Protocol, Sequence,
+                    Tuple, runtime_checkable)
+
+import numpy as np
+
+from repro.core.monitor import Monitor
+from repro.core.perf_model import PerfModel, yolov5s_like
+from repro.core.queueing import EDFQueue
+from repro.core.slo import Decision, Request
+from repro.core.solver import DEFAULT_B, DEFAULT_C
+from repro.core.vertical import TimedExecutor, VerticalScaledInstance
+from repro.serving.workload import WorkloadGenerator
+
+_sid = itertools.count()
+
+
+# --------------------------------------------------------------------------
+# protocols
+# --------------------------------------------------------------------------
+@runtime_checkable
+class SchedulingPolicy(Protocol):
+    """One decision interface for every scaling policy."""
+    name: str
+
+    def decide(self, now: float, queue: EDFQueue, lam: float,
+               initial_wait: float = 0.0) -> Decision: ...
+
+
+@runtime_checkable
+class ExecutionBackend(Protocol):
+    """A pool of vertically scalable slots + a way to execute batches."""
+    c_set: Tuple[int, ...]
+    b_set: Tuple[int, ...]
+
+    def apply(self, d: Decision, now: float) -> None: ...
+
+    def execute(self, batch: List[Request], c: int, b: int,
+                now: float) -> float: ...
+
+    def core_seconds(self, horizon: float) -> float: ...
+
+
+def round_up_c(c_set: Sequence[int], c: int) -> int:
+    """Smallest available core count >= c (never round a feasible Decision
+    down), falling back to max(c_set) when c exceeds every entry."""
+    up = [cc for cc in c_set if cc >= c]
+    return min(up) if up else max(c_set)
+
+
+# --------------------------------------------------------------------------
+# server slots (shared by both backends)
+# --------------------------------------------------------------------------
+@dataclass
+class Server:
+    """One servable slot: a vertically scaled instance + availability."""
+    instance: VerticalScaledInstance
+    ready_at: float = 0.0
+    busy_until: float = 0.0
+    alive_since: float = 0.0
+    dead_at: Optional[float] = None
+    id: int = field(default_factory=lambda: next(_sid))
+
+    def core_seconds(self, horizon: float) -> float:
+        end = min(self.dead_at if self.dead_at is not None else horizon,
+                  horizon)
+        self.instance.account(max(end, self.alive_since))
+        return self.instance.core_seconds
+
+
+class _PooledBackend:
+    """Slot-pool mechanics shared by SimBackend and JaxBackend: in-place
+    vertical resize, horizontal scale to Decision.n (scale-ups may pay
+    ``Decision.scale_up_delay`` before serving), core-second accounting."""
+
+    name = "base"
+
+    def __init__(self, perf: PerfModel, c_set: Sequence[int],
+                 b_set: Sequence[int], c0: int = 1,
+                 resize_penalty: float = 0.005):
+        self.perf = perf
+        self.c_set = tuple(sorted(c_set))
+        self.b_set = tuple(sorted(b_set))
+        self.resize_penalty = resize_penalty
+        self.pool: List[Server] = []
+        self.dead: List[Server] = []
+        self.monitor: Optional[Monitor] = None   # bound by ScenarioRunner
+        self.add_slot(c0, ready_at=0.0, now=0.0)
+
+    # -- pool management ---------------------------------------------------
+    def add_slot(self, c: int, ready_at: float = 0.0,
+                 now: float = 0.0) -> Server:
+        inst = VerticalScaledInstance(self.c_set, self.b_set, self.perf,
+                                      c0=c, resize_penalty=self.resize_penalty)
+        inst.account(now)
+        srv = Server(instance=inst, ready_at=ready_at, alive_since=now)
+        self.pool.append(srv)
+        return srv
+
+    def remove_slots(self, n: int, now: float) -> None:
+        # remove youngest servers first, never the last one
+        for _ in range(min(n, len(self.pool) - 1)):
+            srv = self.pool.pop()
+            srv.dead_at = max(now, srv.busy_until)
+            self.dead.append(srv)
+
+    @property
+    def allocated_cores(self) -> int:
+        return sum(s.instance.c for s in self.pool)
+
+    def core_seconds(self, horizon: float) -> float:
+        return (sum(s.core_seconds(horizon) for s in self.pool)
+                + sum(s.core_seconds(horizon) for s in self.dead))
+
+    # -- decision application (vertical + horizontal) ----------------------
+    def apply(self, d: Decision, now: float) -> None:
+        c = round_up_c(self.c_set, d.c)
+        for srv in self.pool:
+            penalty = srv.instance.resize(c, now)
+            if penalty:
+                srv.busy_until = max(srv.busy_until, now) + penalty
+        n = max(1, getattr(d, "n", 1))
+        cur = len(self.pool)
+        if n > cur:
+            for _ in range(n - cur):
+                self.add_slot(c, ready_at=now + d.scale_up_delay, now=now)
+        elif n < cur:
+            self.remove_slots(cur - n, now)
+
+    # -- hooks -------------------------------------------------------------
+    def on_submit(self, req: Request, payload: Any) -> None:
+        pass
+
+
+class SimBackend(_PooledBackend):
+    """Discrete-event execution: batch finish times come from the
+    calibrated PerfModel — nothing actually runs (the Fig. 4 path)."""
+
+    name = "sim"
+
+    def execute(self, batch: List[Request], c: int, b: int,
+                now: float) -> float:
+        return now + float(self.perf.latency(b, c))
+
+
+@dataclass
+class ServedRequest:
+    req: Request
+    payload: Any
+    result: Any = None
+
+
+class JaxBackend(_PooledBackend):
+    """Live execution over a pre-jitted ``(c, b)`` executable table.
+
+    ``step_fns[(c, b)](stacked_payload)`` must be ready to call (compiled
+    at deploy — that is what makes the resize in-place; on the TPU target
+    each entry is the same step compiled on a c-chip submesh).  ``clock``
+    selects how virtual time advances after a batch:
+
+    * ``"measured"`` — by the measured wall latency (the serving default);
+    * ``"modeled"``  — by ``perf.latency(b, c)``, making the event stream
+      bit-identical to ``SimBackend`` for the same policy + workload
+      *provided both backends charge the same resize_penalty* (real
+      outputs are still produced and the measured-vs-predicted residual
+      is still recorded).  Note the defaults differ deliberately:
+      JaxBackend charges 0 — the dictionary flip is free on this
+      container — while SimBackend models the TPU weight re-gather
+      (5 ms); parity runs must align them, as the parity test does.
+
+    Multi-slot pools are supported: a horizontal policy (FA2-style) can
+    target ``Decision.n`` replicas and each slot executes through the
+    table entry for its own core count.  Execution and wall-latency
+    measurement go through one ``TimedExecutor`` (``core.vertical``).
+    """
+
+    name = "jax"
+
+    def __init__(self, step_fns: Dict[tuple[int, int], Callable],
+                 pad_payload: Callable, perf: PerfModel,
+                 clock: str = "measured", c0: Optional[int] = None,
+                 resize_penalty: float = 0.0):
+        assert clock in ("measured", "modeled"), clock
+        self.table = TimedExecutor(step_fns)
+        self.step_fns = self.table.fns
+        self.pad_payload = pad_payload
+        self.clock = clock
+        self.results: List[ServedRequest] = []
+        self.measured: List[tuple[float, int, int, float]] = []
+        self._payloads: Dict[int, Any] = {}
+        c_set = sorted({c for c, _ in step_fns})
+        b_set = sorted({b for _, b in step_fns})
+        super().__init__(perf, c_set, b_set, c0=c0 or max(c_set),
+                         resize_penalty=resize_penalty)
+
+    def warmup(self, example_payload: Any) -> None:
+        self.table.warmup(
+            lambda c, b: (self.pad_payload([example_payload] * min(b, 2),
+                                           b),))
+
+    def on_submit(self, req: Request, payload: Any) -> None:
+        self._payloads[req.id] = payload
+
+    def execute(self, batch: List[Request], c: int, b: int,
+                now: float) -> float:
+        items = [ServedRequest(r, self._payloads.pop(r.id, None))
+                 for r in batch]
+        out = self.table(c, b, self.pad_payload(
+            [it.payload for it in items], b))
+        dt = self.table.calls[-1][3]
+        for i, it in enumerate(items):
+            it.result = _index_result(out, i)
+            self.results.append(it)
+        predicted = float(self.perf.latency(b, c))
+        self.measured.append((now, c, b, dt))
+        if self.monitor is not None:
+            self.monitor.observe_perf_residual(predicted, dt)
+        return now + (dt if self.clock == "measured" else predicted)
+
+
+def _index_result(out: Any, i: int):
+    import jax
+    return jax.tree.map(lambda a: np.asarray(a)[i] if hasattr(a, "shape")
+                        and getattr(a, "ndim", 0) > 0 else a, out)
+
+
+# --------------------------------------------------------------------------
+# the one loop
+# --------------------------------------------------------------------------
+@dataclass
+class RunReport:
+    """Uniform result of a scenario run, backend- and policy-agnostic.
+    Dict-style access (``report["p99"]``) is kept for existing callers."""
+    policy: str
+    backend: str
+    n_requests: int
+    n_violations: int
+    violation_rate: float
+    core_seconds: float
+    avg_cores: float
+    p50: float
+    p99: float
+    mean_latency: float
+    core_timeline: List[tuple]
+    decisions: Optional[List[tuple]]
+    buckets: List[tuple]
+
+    def __getitem__(self, key: str):
+        return getattr(self, key)
+
+    def get(self, key: str, default=None):
+        return getattr(self, key, default)
+
+    def keys(self):
+        return [f.name for f in dataclasses.fields(self)]
+
+    def as_dict(self) -> dict:
+        return {f.name: getattr(self, f.name)
+                for f in dataclasses.fields(self)}
+
+
+class ScenarioRunner:
+    """The single Sponge control loop: request arrivals, adaptation ticks,
+    slack-aware EDF dispatch, server-free events — over any
+    (policy, backend) pair.
+
+    Dispatch waits to fill the scaler's batch size b and releases a
+    partial batch only when the head request's deadline would otherwise
+    be at risk (GrandSLAm-style timeout).  Legacy ``on_tick(now, sim)``
+    policies receive this runner as ``sim`` and may mutate the pool
+    through ``add_server`` / ``remove_servers`` / ``set_batch``;
+    decide-protocol policies are driven through :meth:`drive`.
+    """
+
+    def __init__(self, policy, backend, tick: float = 1.0,
+                 dispatch_margin: float = 0.02):
+        self.policy = policy
+        self.backend = backend
+        self.tick = tick
+        self.dispatch_margin = dispatch_margin
+        self.queue = EDFQueue()
+        self.monitor = Monitor()
+        backend.monitor = self.monitor
+        self.b = 1
+        self.now = 0.0
+        self.core_samples: List[tuple[float, int]] = []
+        self.bucket_log: List[tuple[float, int, int, int]] = []
+
+    # -- facade used by policies (legacy and new) --------------------------
+    @property
+    def pool(self) -> List[Server]:
+        return self.backend.pool
+
+    @property
+    def c_set(self) -> Tuple[int, ...]:
+        return self.backend.c_set
+
+    @property
+    def b_set(self) -> Tuple[int, ...]:
+        return self.backend.b_set
+
+    @property
+    def allocated_cores(self) -> int:
+        return self.backend.allocated_cores
+
+    def add_server(self, c: int, ready_at: float = 0.0) -> Server:
+        return self.backend.add_slot(c, ready_at=ready_at, now=self.now)
+
+    def remove_servers(self, n: int, now: float) -> None:
+        self.backend.remove_slots(n, now)
+
+    def set_batch(self, b: int) -> None:
+        self.b = max(1, int(b))
+
+    def apply_decision(self, d: Decision, now: float) -> None:
+        self.set_batch(d.b)
+        self.backend.apply(d, now)
+
+    def drive(self, policy, now: float) -> None:
+        """Run one adaptation step of a decide-protocol policy."""
+        due = policy.due(now) if hasattr(policy, "due") else True
+        if not due:
+            return
+        lam = self.monitor.rate.rate(now)
+        wait0 = max(self.pool[0].busy_until - now, 0.0)
+        d = policy.decide(now, self.queue, lam, initial_wait=wait0)
+        self.apply_decision(d, now)
+
+    def submit(self, req: Request, payload: Any = None) -> None:
+        self.monitor.observe_arrival(req)
+        self.queue.push(req)
+        self.backend.on_submit(req, payload)
+
+    # -- main loop ---------------------------------------------------------
+    def run(self, arrivals: Sequence, horizon: Optional[float] = None
+            ) -> RunReport:
+        """``arrivals``: Requests, or (Request, payload) pairs for live
+        backends.  Runs the event loop to ``horizon`` (default: last
+        arrival + 60 s) in virtual time and returns a RunReport."""
+        norm = [(a, None) if isinstance(a, Request) else (a[0], a[1])
+                for a in arrivals]
+        if horizon is None:
+            horizon = (max(r.arrival for r, _ in norm) + 60.0
+                       if norm else 60.0)
+        events: list[tuple[float, int, str, object]] = []
+        seq = itertools.count()
+        self._wake: Dict[int, float] = {}   # srv.id -> scheduled wake-up
+        for r, payload in norm:
+            heapq.heappush(events, (r.arrival, next(seq), "arrival",
+                                    (r, payload)))
+        t = 0.0
+        while t <= horizon:
+            heapq.heappush(events, (t, next(seq), "tick", None))
+            t += self.tick
+
+        while events:
+            t, _, kind, item = heapq.heappop(events)
+            if t > horizon:
+                break
+            self.now = t
+            if kind == "arrival":
+                req, payload = item
+                self.submit(req, payload)
+            elif kind == "tick":
+                if hasattr(self.policy, "on_tick"):
+                    self.policy.on_tick(t, self)
+                else:                       # bare SchedulingPolicy
+                    self.drive(self.policy, t)
+                self.core_samples.append((t, self.allocated_cores))
+            # "free" / "check": fall through to the dispatch pass
+            self._dispatch(t, events, seq)
+
+        return self.results(horizon)
+
+    def _dispatch(self, t: float, events, seq) -> None:
+        for srv in self.pool:
+            # a slot busy (or cold-starting) past this event with queued
+            # work gets a precise wake-up: a resize penalty can extend
+            # busy_until beyond the slot's scheduled "free" event, which
+            # would otherwise strand the queue until the next tick
+            wake_t = max(srv.ready_at, srv.busy_until)
+            if (len(self.queue) and wake_t > t
+                    and self._wake.get(srv.id) != wake_t):
+                self._wake[srv.id] = wake_t
+                heapq.heappush(events, (wake_t, next(seq), "check", srv.id))
+            while (len(self.queue) and srv.ready_at <= t
+                   and srv.busy_until <= t):
+                q = len(self.queue)
+                if q < self.b:
+                    head = self.queue.peek()
+                    l_full = srv.instance.latency(self.b)
+                    t_force = head.deadline - l_full - self.dispatch_margin
+                    if t < t_force:
+                        # re-check when deadline pressure bites (new
+                        # arrivals also re-trigger dispatch)
+                        heapq.heappush(events, (min(t_force, t + self.tick),
+                                                next(seq), "check", srv.id))
+                        break
+                batch = self.queue.pop_batch(self.b)
+                bucket = srv.instance.bucket_b(len(batch))
+                fin = self.backend.execute(batch, srv.instance.c, bucket, t)
+                srv.busy_until = fin
+                self.bucket_log.append((t, srv.instance.c, bucket,
+                                        len(batch)))
+                for r in batch:
+                    r.start_proc = t
+                    r.finish = fin
+                    self.monitor.observe_completion(r)
+                heapq.heappush(events, (fin, next(seq), "free", srv.id))
+
+    def results(self, horizon: float) -> RunReport:
+        mon = self.monitor
+        total_core_s = self.backend.core_seconds(horizon)
+        lat = mon.e2e_latencies()
+        decisions = getattr(self.policy, "decisions", None)
+        if decisions is None:
+            decisions = getattr(getattr(self.policy, "scaler", None),
+                                "decisions", None)
+        return RunReport(
+            policy=getattr(self.policy, "name", type(self.policy).__name__),
+            backend=getattr(self.backend, "name", "?"),
+            n_requests=mon.n_total,
+            n_violations=mon.n_violations,
+            violation_rate=mon.violation_rate,
+            core_seconds=total_core_s,
+            avg_cores=total_core_s / max(horizon, 1e-9),
+            p50=mon.p(0.50), p99=mon.p(0.99),
+            mean_latency=sum(lat) / max(len(lat), 1),
+            core_timeline=self.core_samples,
+            decisions=decisions,
+            buckets=self.bucket_log,
+        )
+
+
+# --------------------------------------------------------------------------
+# facade + config-driven construction
+# --------------------------------------------------------------------------
+class SpongeServer:
+    """Facade composing SchedulingPolicy + ExecutionBackend + the runner."""
+
+    def __init__(self, policy, backend, tick: float = 1.0,
+                 dispatch_margin: float = 0.02, prior_rps: float = 0.0):
+        self.policy = policy
+        self.backend = backend
+        self.runner = ScenarioRunner(policy, backend, tick=tick,
+                                     dispatch_margin=dispatch_margin)
+        self.runner.monitor.rate.prior_rps = prior_rps
+
+    @property
+    def monitor(self) -> Monitor:
+        return self.runner.monitor
+
+    @property
+    def queue(self) -> EDFQueue:
+        return self.runner.queue
+
+    @property
+    def pool(self) -> List[Server]:
+        return self.backend.pool
+
+    def warmup(self, example_payload: Any) -> None:
+        self.backend.warmup(example_payload)
+
+    def run(self, arrivals: Sequence, horizon: Optional[float] = None
+            ) -> RunReport:
+        return self.runner.run(arrivals, horizon)
+
+    def serve(self, workload: WorkloadGenerator, trace,
+              duration: Optional[float] = None,
+              horizon: Optional[float] = None) -> RunReport:
+        """Generate a workload against a bandwidth trace and run it."""
+        return self.run(workload.generate(trace, duration), horizon)
+
+
+POLICY_NAMES = ("sponge", "sponge-pred", "fa2", "static-8", "static-16",
+                "static-<cores>")
+
+
+def make_policy(name: str, perf: PerfModel, *,
+                c_set: Sequence[int] = DEFAULT_C,
+                b_set: Sequence[int] = DEFAULT_B,
+                adaptation_interval: float = 1.0,
+                slo: float = 1.0, expected_rps: float = 0.0,
+                **kw):
+    """Policy registry: one name -> one SchedulingPolicy instance."""
+    from repro.core.baselines import FA2Policy, SpongePolicy, StaticPolicy
+    from repro.core.scaler import SpongeScaler
+    if name == "sponge":
+        return SpongePolicy(SpongeScaler(
+            perf, c_set=tuple(c_set), b_set=tuple(b_set),
+            adaptation_interval=adaptation_interval, **kw))
+    if name == "sponge-pred":
+        from repro.core.predictive import (PredictivePolicy,
+                                           PredictiveSpongeScaler)
+        return PredictivePolicy(PredictiveSpongeScaler(
+            perf, c_set=tuple(c_set), b_set=tuple(b_set),
+            adaptation_interval=adaptation_interval, **kw))
+    if name == "fa2":
+        return FA2Policy(perf, slo=slo, b_set=tuple(b_set),
+                         expected_rps=expected_rps, **kw)
+    if name.startswith("static"):
+        cores = int(name.split("-")[1]) if "-" in name else 16
+        return StaticPolicy(perf, cores=cores, b_set=tuple(b_set),
+                            interval=adaptation_interval, **kw)
+    raise KeyError(f"unknown policy {name!r}; known: {POLICY_NAMES}")
+
+
+def make_sim_server(perf: Optional[PerfModel] = None,
+                    policy="sponge", *,
+                    c_set: Sequence[int] = DEFAULT_C,
+                    b_set: Sequence[int] = DEFAULT_B,
+                    c0: int = 1, tick: float = 1.0,
+                    prior_rps: float = 0.0,
+                    resize_penalty: float = 0.005,
+                    dispatch_margin: float = 0.02,
+                    **policy_kw) -> SpongeServer:
+    """Simulation server: calibrated PerfModel backend + named policy."""
+    perf = perf if perf is not None else yolov5s_like()
+    pol = (make_policy(policy, perf, c_set=c_set, b_set=b_set, **policy_kw)
+           if isinstance(policy, str) else policy)
+    backend = SimBackend(perf, c_set, b_set, c0=c0,
+                         resize_penalty=resize_penalty)
+    return SpongeServer(pol, backend, tick=tick,
+                        dispatch_margin=dispatch_margin, prior_rps=prior_rps)
+
+
+def calibrate_step_fns(fns: Dict[tuple[int, int], Callable],
+                       example_for: Callable[[int, int], Any],
+                       robust: bool = False) -> PerfModel:
+    """Profile every (c, b) executable once and fit the paper's l(b, c)."""
+    table = TimedExecutor(fns)
+    table.warmup(lambda c, b: (example_for(c, b),))   # compile pass
+    for (c, b) in fns:
+        table(c, b, example_for(c, b))
+    return PerfModel.fit([(b, c, dt) for _, c, b, dt in table.calls],
+                         robust=robust)
+
+
+def make_live_server(arch: str = "smollm-135m-reduced", *,
+                     c_set: Sequence[int] = (1, 2, 4, 8),
+                     b_set: Sequence[int] = (1, 2, 4, 8),
+                     prompt_len: int = 16, gen_tokens: int = 8,
+                     policy="sponge", adaptation_interval: float = 0.5,
+                     prior_rps: float = 0.0, clock: str = "measured",
+                     perf: Optional[PerfModel] = None,
+                     tick: Optional[float] = None, **policy_kw):
+    """Live server: resolve ``arch`` through ``configs.registry``, build +
+    calibrate the jitted (c, b) executable table, wire the control plane.
+    Returns ``(server, model_config)``."""
+    import jax
+    from repro.configs import get_config
+    from repro.models import build_model
+    from repro.serving.engine import build_llm_step_fns, pad_tokens
+    cfg = get_config(arch)
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    fns = build_llm_step_fns(model, params, c_set, b_set, prompt_len,
+                             gen_tokens=gen_tokens)
+    if perf is None:
+        perf = calibrate_step_fns(
+            fns, lambda c, b: np.ones((b, prompt_len), np.int32))
+    pol = (make_policy(policy, perf, c_set=c_set, b_set=b_set,
+                       adaptation_interval=adaptation_interval, **policy_kw)
+           if isinstance(policy, str) else policy)
+    backend = JaxBackend(fns, pad_tokens, perf, clock=clock)
+    server = SpongeServer(
+        pol, backend,
+        tick=tick if tick is not None else adaptation_interval,
+        prior_rps=prior_rps)
+    return server, cfg
+
+
+# --------------------------------------------------------------------------
+# tiny executable table for smoke tests / demos / parity tests
+# --------------------------------------------------------------------------
+def toy_step_fns(c_set: Sequence[int], b_set: Sequence[int],
+                 dim: int = 32, seed: int = 0):
+    """Minimal jitted (c, b) table — a tanh layer — for exercising the
+    JaxBackend cheaply.  Every c shares the same computation on this CPU
+    container, exactly like ``build_llm_step_fns``."""
+    import jax
+    import jax.numpy as jnp
+    w = jnp.asarray(np.random.default_rng(seed)
+                    .standard_normal((dim, dim)) / np.sqrt(dim),
+                    jnp.float32)
+
+    def make(_b):
+        return jax.jit(lambda x: jnp.tanh(x @ w))
+
+    fns = {}
+    for b in b_set:
+        jitted = make(b)
+        for c in c_set:
+            fns[(c, b)] = jitted
+    return fns
+
+
+def pad_vectors(payloads: List[np.ndarray], b: int) -> np.ndarray:
+    x = np.stack(list(payloads) + [payloads[-1]] * (b - len(payloads)))
+    return x.astype(np.float32)

@@ -1,154 +1,116 @@
-"""Live serving engine: the non-simulated execution path.
+"""Live serving engine: the non-simulated execution path — now a thin
+construction shim over the unified serving API.
 
-Runs real jitted JAX inference behind the same Sponge control plane used by
-the simulator (EDF queue + scaler + monitor).  The executable table is built
-at deploy time — one entry per (c, b) bucket — so applying a ScalerDecision
-is an O(1) dictionary flip (the in-place vertical scaling mechanism; on the
-TPU target each entry is the same step compiled on a c-chip submesh, which
-``launch/dryrun.py`` proves lowers and compiles for every c).
+Runs real jitted JAX inference behind the same Sponge control plane as the
+simulator: ``repro.serving.api.ScenarioRunner`` drives a ``JaxBackend``
+holding the executable table built at deploy time — one entry per (c, b)
+bucket — so applying a Decision is an O(1) dictionary flip (the in-place
+vertical scaling mechanism; on the TPU target each entry is the same step
+compiled on a c-chip submesh, which ``launch/dryrun.py`` proves lowers and
+compiles for every c).
 
 On this CPU container every c entry executes the same computation, so the
 engine exposes measured latency per (c, b) for the perf-model residual loop
 but vertical scaling affects *scheduling* only; the simulator (calibrated
 from the dry-run roofline) is the quantitative Fig. 4 path.
+
+Prefer constructing through ``repro.serving.api.make_live_server`` —
+``ServingEngine`` remains for callers holding a prebuilt step-fn table.
 """
 from __future__ import annotations
 
-import time
-from dataclasses import dataclass, field
-from typing import Any, Callable, Dict, List, Optional, Sequence
+from typing import Callable, Dict, List, Sequence
 
 import numpy as np
 
-from repro.core.monitor import Monitor
-from repro.core.perf_model import PerfModel
-from repro.core.queueing import EDFQueue
 from repro.core.scaler import SpongeScaler
 from repro.core.slo import Decision, Request
+from repro.serving.api import JaxBackend, ScenarioRunner, ServedRequest
 
-
-@dataclass
-class ServedRequest:
-    req: Request
-    payload: Any
-    result: Any = None
+__all__ = ["ServingEngine", "ServedRequest", "build_llm_step_fns",
+           "pad_tokens"]
 
 
 class ServingEngine:
-    """Single-instance engine with in-place vertical scaling."""
+    """Single-instance live engine with in-place vertical scaling.
+
+    Thin facade: queue/monitor/dispatch all run inside ScenarioRunner; the
+    scaler itself is the SchedulingPolicy (it conforms to the protocol).
+    """
 
     def __init__(self, step_fns: Dict[tuple[int, int], Callable],
                  scaler: SpongeScaler, pad_payload: Callable,
                  prior_rps: float = 0.0):
         """step_fns[(c, b)](stacked_payload) -> batched result (pre-jitted).
         pad_payload(list_of_payloads, b) -> stacked input of bucket size b."""
-        self.step_fns = dict(step_fns)
-        self.c_set = sorted({c for c, _ in step_fns})
-        self.b_set = sorted({b for _, b in step_fns})
+        self.backend = JaxBackend(step_fns, pad_payload, scaler.perf,
+                                  clock="measured")
         self.scaler = scaler
-        self.pad_payload = pad_payload
-        self.queue = EDFQueue()
-        self.monitor = Monitor()
-        self.monitor.rate.prior_rps = prior_rps
-        self.c = self.c_set[-1]
-        self.b = 1
-        self.pending: Dict[int, ServedRequest] = {}
-        self.results: List[ServedRequest] = []
-        self.decision_log: List[tuple[float, Decision]] = []
+        self.runner = ScenarioRunner(scaler, self.backend,
+                                     tick=scaler.adaptation_interval)
+        self.runner.monitor.rate.prior_rps = prior_rps
+        self.c_set = self.backend.c_set
+        self.b_set = self.backend.b_set
+
+    # -- compat surface ----------------------------------------------------
+    @property
+    def monitor(self):
+        return self.runner.monitor
+
+    @property
+    def queue(self):
+        return self.runner.queue
+
+    @property
+    def results(self) -> List[ServedRequest]:
+        return self.backend.results
+
+    @property
+    def decision_log(self) -> List[tuple[float, Decision]]:
+        return self.scaler.decisions
+
+    @property
+    def c(self) -> int:
+        return self.backend.pool[0].instance.c
+
+    @property
+    def b(self) -> int:
+        return self.runner.b
 
     def warmup(self, example_payload) -> None:
-        for (c, b), fn in self.step_fns.items():
-            fn(self.pad_payload([example_payload] * min(b, 2), b))
-
-    def bucket(self, n: int) -> int:
-        for b in self.b_set:
-            if b >= n:
-                return b
-        return self.b_set[-1]
-
-    def submit(self, req: Request, payload: Any) -> None:
-        self.monitor.observe_arrival(req)
-        self.queue.push(req)
-        self.pending[req.id] = ServedRequest(req, payload)
+        self.backend.warmup(example_payload)
 
     def apply(self, d: Decision, now: float) -> None:
-        self.c = min(self.c_set, key=lambda c: abs(c - d.c) + (c < d.c))
-        self.b = d.b if d.b in self.b_set else self.bucket(d.b)
-        self.decision_log.append((now, d))
-
-    def maybe_adapt(self, now: float) -> None:
-        if self.scaler.due(now):
-            lam = self.monitor.rate.rate(now)
-            d = self.scaler.decide(now, self.queue, lam)
-            self.apply(d, now)
-
-    def step(self, now: float) -> Optional[List[ServedRequest]]:
-        """Process one batch if the queue has work.  Returns served items."""
-        if not len(self.queue):
-            return None
-        batch = self.queue.pop_batch(self.b)
-        items = [self.pending.pop(r.id) for r in batch]
-        bucket = self.bucket(len(items))
-        fn = self.step_fns[(self.c, bucket)]
-        t0 = time.perf_counter()
-        out = fn(self.pad_payload([it.payload for it in items], bucket))
-        try:
-            import jax
-            jax.block_until_ready(out)
-        except Exception:
-            pass
-        dt = time.perf_counter() - t0
-        fin = now + dt
-        for i, it in enumerate(items):
-            it.req.start_proc = now
-            it.req.finish = fin
-            it.result = _index_result(out, i)
-            self.monitor.observe_completion(it.req)
-            self.results.append(it)
-        self.monitor.observe_perf_residual(
-            float(self.scaler.perf.latency(bucket, self.c)), dt)
-        return items
+        """Apply a decision out-of-band.  c rounds to the smallest
+        available entry >= d.c (never below the solver's feasible c),
+        falling back to max(c_set) — see ``api.round_up_c``."""
+        self.runner.apply_decision(d, now)
 
     # -- convenience batch-run over a timed request script -----------------
-    def run_script(self, arrivals: Sequence[tuple[Request, Any]],
+    def run_script(self, arrivals: Sequence[tuple[Request, object]],
                    speedup: float = 1.0) -> dict:
-        """Feeds requests at their (scaled) arrival times on the real clock
-        and serves them; returns monitor summary."""
-        t_start = time.perf_counter()
-        idx = 0
-        arrivals = sorted(arrivals, key=lambda ra: ra[0].arrival)
-        while idx < len(arrivals) or len(self.queue):
-            now = (time.perf_counter() - t_start) * speedup
-            while idx < len(arrivals) and arrivals[idx][0].arrival <= now:
-                self.submit(*arrivals[idx])
-                idx += 1
-            self.maybe_adapt(now)
-            if len(self.queue):
-                self.step(now)
-            elif idx < len(arrivals):
-                dt = (arrivals[idx][0].arrival - now) / speedup
-                time.sleep(min(max(dt, 0.0), 0.05))
-        mon = self.monitor
+        """Serves a timed request script in virtual time (event-driven;
+        arrivals fire at their scripted times, execution advances the
+        clock by the measured batch latency).  ``speedup`` is kept for
+        backward compatibility and ignored — virtual time makes it moot."""
+        del speedup
+        report = self.runner.run(list(arrivals))
+        mon = self.runner.monitor
         return {
             "n": mon.n_total,
             "violations": mon.n_violations,
             "violation_rate": mon.violation_rate,
             "p50": mon.p(0.5), "p99": mon.p(0.99),
             "decisions": len(self.decision_log),
+            "report": report,
         }
-
-
-def _index_result(out: Any, i: int):
-    import jax
-    return jax.tree.map(lambda a: np.asarray(a)[i] if hasattr(a, "shape")
-                        and getattr(a, "ndim", 0) > 0 else a, out)
 
 
 def build_llm_step_fns(model, params, c_set: Sequence[int],
                        b_set: Sequence[int], prompt_len: int,
                        gen_tokens: int = 8):
     """Executable table for short-generation LLM serving on the reduced
-    models: each entry prefises the prompt batch and decodes gen_tokens.
+    models: each entry prefills the prompt batch and decodes gen_tokens.
 
     On TPU each (c, b) would be compiled on its c-chip submesh; on CPU the
     same jitted fn backs every c (see module docstring).

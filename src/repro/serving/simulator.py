@@ -1,175 +1,50 @@
-"""Discrete-event cluster simulator for the Fig. 4 study.
+"""Discrete-event cluster simulator for the Fig. 4 study — now a thin
+construction shim over the unified serving API.
 
-Event-driven: request arrivals, policy adaptation ticks, server-free events.
-Servers process EDF batches sequentially; processing latency comes from the
-calibrated PerfModel via each server's VerticalScaledInstance.  The same
-simulator runs Sponge (1 vertically scaled server), FA2 (N one-core servers
-with cold starts) and the static baselines — only the Policy differs.
-
-The live (non-simulated) engine in ``repro.serving.engine`` shares the
-queue/scaler/monitor components but executes real JAX functions.
+The event loop, EDF dispatch, pool management and reporting live in
+``repro.serving.api.ScenarioRunner``; this module only binds it to a
+``SimBackend`` (batch finish times from the calibrated PerfModel) with the
+historical constructor signature.  The same runner drives the live engine
+(``repro.serving.engine``) — only the ExecutionBackend differs.
 """
 from __future__ import annotations
 
-import heapq
-import itertools
-from dataclasses import dataclass, field
 from typing import List, Optional, Sequence
 
-from repro.core.baselines import Policy
-from repro.core.monitor import Monitor
 from repro.core.perf_model import PerfModel
-from repro.core.queueing import EDFQueue
 from repro.core.slo import Request
-from repro.core.vertical import VerticalScaledInstance
+from repro.serving.api import (RunReport, ScenarioRunner, Server, SimBackend)
 
-_sid = itertools.count()
-
-
-@dataclass
-class Server:
-    instance: VerticalScaledInstance
-    ready_at: float = 0.0
-    busy_until: float = 0.0
-    alive_since: float = 0.0
-    dead_at: Optional[float] = None
-    id: int = field(default_factory=lambda: next(_sid))
-
-    def core_seconds(self, horizon: float) -> float:
-        end = min(self.dead_at if self.dead_at is not None else horizon,
-                  horizon)
-        self.instance.account(max(end, self.alive_since))
-        return self.instance.core_seconds
+__all__ = ["ClusterSimulator", "Server", "simulate"]
 
 
-class ClusterSimulator:
-    def __init__(self, perf: PerfModel, policy: Policy,
+class ClusterSimulator(ScenarioRunner):
+    """ScenarioRunner preconfigured with a SimBackend.
+
+    Accepts both decide-protocol policies (``repro.serving.api``) and
+    legacy ``on_tick(now, sim)`` policies that mutate the pool directly.
+    """
+
+    def __init__(self, perf: PerfModel, policy,
                  c_set: Sequence[int], b_set: Sequence[int],
                  tick: float = 1.0, c0: int = 1,
                  resize_penalty: float = 0.005,
                  dispatch_margin: float = 0.02):
         self.perf = perf
-        self.policy = policy
-        self.c_set = tuple(c_set)
-        self.b_set = tuple(b_set)
-        self.tick = tick
-        self.resize_penalty = resize_penalty
-        self.dispatch_margin = dispatch_margin
-        self.queue = EDFQueue()
-        self.monitor = Monitor()
-        self.b = 1
-        self.pool: List[Server] = []
-        self.dead: List[Server] = []
-        self.now = 0.0
-        self.core_samples: List[tuple[float, int]] = []
-        self.add_server(c0, ready_at=0.0)
-
-    # -- pool management (used by policies) --------------------------------
-    def add_server(self, c: int, ready_at: float = 0.0) -> Server:
-        inst = VerticalScaledInstance(self.c_set, self.b_set, self.perf,
-                                      c0=c, resize_penalty=self.resize_penalty)
-        inst.account(self.now)
-        srv = Server(instance=inst, ready_at=ready_at,
-                     alive_since=self.now)
-        self.pool.append(srv)
-        return srv
-
-    def remove_servers(self, n: int, now: float) -> None:
-        # remove youngest idle-most servers first, never the last one
-        for _ in range(min(n, len(self.pool) - 1)):
-            srv = self.pool.pop()
-            srv.dead_at = max(now, srv.busy_until)
-            self.dead.append(srv)
-
-    def set_batch(self, b: int) -> None:
-        self.b = max(1, int(b))
+        backend = SimBackend(perf, c_set, b_set, c0=c0,
+                             resize_penalty=resize_penalty)
+        super().__init__(policy, backend, tick=tick,
+                         dispatch_margin=dispatch_margin)
 
     @property
-    def allocated_cores(self) -> int:
-        return sum(s.instance.c for s in self.pool)
-
-    # -- main loop ----------------------------------------------------------
-    def run(self, requests: List[Request], horizon: Optional[float] = None):
-        horizon = horizon or (max(r.arrival for r in requests) + 60.0)
-        events: list[tuple[float, int, str, object]] = []
-        seq = itertools.count()
-        for r in requests:
-            heapq.heappush(events, (r.arrival, next(seq), "arrival", r))
-        t = 0.0
-        while t <= horizon:
-            heapq.heappush(events, (t, next(seq), "tick", None))
-            t += self.tick
-
-        while events:
-            t, _, kind, payload = heapq.heappop(events)
-            if t > horizon:
-                break
-            self.now = t
-            if kind == "arrival":
-                req: Request = payload
-                self.monitor.observe_arrival(req)
-                self.queue.push(req)
-            elif kind == "tick":
-                self.policy.on_tick(t, self)
-                self.core_samples.append((t, self.allocated_cores))
-            # "free" / "check": fall through to the dispatch pass
-
-            self._dispatch(t, events, seq)
-
-        return self.results(horizon)
-
-    def _dispatch(self, t: float, events, seq) -> None:
-        """Slack-aware dynamic batching: wait to fill the scaler's batch
-        size b; dispatch a partial batch only when the head request's
-        deadline would otherwise be at risk (GrandSLAm-style timeout)."""
-        for srv in self.pool:
-            while (len(self.queue) and srv.ready_at <= t
-                   and srv.busy_until <= t):
-                q = len(self.queue)
-                if q < self.b:
-                    head = self.queue.peek()
-                    l_full = srv.instance.latency(self.b)
-                    t_force = head.deadline - l_full - self.dispatch_margin
-                    if t < t_force:
-                        # re-check when deadline pressure bites (new
-                        # arrivals also re-trigger dispatch)
-                        heapq.heappush(events, (min(t_force, t + self.tick),
-                                                next(seq), "check", srv.id))
-                        break
-                batch = self.queue.pop_batch(self.b)
-                lat = srv.instance.latency(len(batch))
-                fin = t + lat
-                srv.busy_until = fin
-                for r in batch:
-                    r.start_proc = t
-                    r.finish = fin
-                    self.monitor.observe_completion(r)
-                heapq.heappush(events, (fin, next(seq), "free", srv.id))
-
-    def results(self, horizon: float) -> dict:
-        mon = self.monitor
-        total_core_s = (sum(s.core_seconds(horizon) for s in self.pool)
-                        + sum(s.core_seconds(horizon) for s in self.dead))
-        lat = mon.e2e_latencies()
-        return {
-            "policy": getattr(self.policy, "name", "?"),
-            "n_requests": mon.n_total,
-            "n_violations": mon.n_violations,
-            "violation_rate": mon.violation_rate,
-            "core_seconds": total_core_s,
-            "avg_cores": total_core_s / max(horizon, 1e-9),
-            "p50": mon.p(0.50), "p99": mon.p(0.99),
-            "mean_latency": sum(lat) / max(len(lat), 1),
-            "core_timeline": self.core_samples,
-            "decisions": getattr(self.policy, "scaler", None).decisions
-            if hasattr(self.policy, "scaler") else None,
-        }
+    def dead(self) -> List[Server]:
+        return self.backend.dead
 
 
-def simulate(perf: PerfModel, policy: Policy, requests: List[Request],
+def simulate(perf: PerfModel, policy, requests: List[Request],
              c_set, b_set, tick: float = 1.0, c0: int = 1,
              horizon: Optional[float] = None,
-             resize_penalty: float = 0.005) -> dict:
+             resize_penalty: float = 0.005) -> RunReport:
     sim = ClusterSimulator(perf, policy, c_set, b_set, tick=tick, c0=c0,
                            resize_penalty=resize_penalty)
     return sim.run(requests, horizon)

@@ -1,0 +1,37 @@
+"""Optional-hypothesis shim for the property-test modules.
+
+With hypothesis installed, re-exports ``given``/``settings``/``st``
+unchanged so property tests run at full strength.  Without it, each
+``@given`` test body collapses to ``pytest.importorskip("hypothesis")``
+(an individual skip), while the plain example-based tests in the same
+module keep running — importing hypothesis at module top used to fail the
+whole collection (the seed failure).
+"""
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+    def given(*_args, **_kwargs):
+        def deco(fn):
+            def skipper():
+                pytest.importorskip("hypothesis")
+            skipper.__name__ = fn.__name__
+            skipper.__doc__ = fn.__doc__
+            return skipper
+        return deco
+
+    def settings(*_args, **_kwargs):
+        return lambda fn: fn
+
+    class _Strategies:
+        """Stand-in for ``hypothesis.strategies``: any strategy call
+        returns None (only ever passed to the stub ``given``)."""
+
+        def __getattr__(self, _name):
+            return lambda *a, **k: None
+
+    st = _Strategies()

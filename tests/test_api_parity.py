@@ -1,0 +1,129 @@
+"""Unified serving API: protocol conformance, sim/live parity, c-rounding.
+
+The parity contract (ISSUE 1): the same workload script + the same policy
+pushed through ``SimBackend`` and ``JaxBackend`` must produce the same
+decision sequence and the same bucket choices — latencies may differ.
+``JaxBackend(clock="modeled")`` advances virtual time by the shared
+PerfModel prediction, which makes the two event streams identical while
+the jitted table still executes for real.
+"""
+import numpy as np
+import pytest
+
+from repro.core.baselines import FA2Policy, SpongePolicy
+from repro.core.perf_model import PerfModel
+from repro.core.scaler import SpongeScaler
+from repro.core.slo import Decision, Request
+from repro.serving.api import (ExecutionBackend, JaxBackend, RunReport,
+                               SchedulingPolicy, SimBackend, SpongeServer,
+                               make_sim_server, pad_vectors, round_up_c,
+                               toy_step_fns)
+
+C_SET = B_SET = (1, 2, 4)
+DIM = 16
+PERF = PerfModel(gamma=0.030, eps=0.010, delta=0.002, eta=0.004)
+
+
+def _script(n=60, rps=15.0, seed=0, dim=DIM, payloads=True):
+    rng = np.random.default_rng(seed)          # comm-latency draws only —
+    rng_pay = np.random.default_rng(seed + 1)  # payloads use their own rng
+    out = []                                   # so both variants see the
+    for i in range(n):                         # same arrival schedule
+        ts = i / rps
+        cl = float(rng.uniform(0.02, 0.25))
+        req = Request.make(arrival=ts + cl, comm_latency=cl, slo=0.6)
+        out.append((req, rng_pay.standard_normal(dim).astype(np.float32))
+                   if payloads else req)
+    return out
+
+
+def _jax_server(policy, clock="modeled", prior_rps=15.0):
+    fns = toy_step_fns(C_SET, B_SET, dim=DIM)
+    backend = JaxBackend(fns, pad_vectors, PERF, clock=clock, c0=1)
+    return SpongeServer(policy, backend, prior_rps=prior_rps)
+
+
+def test_protocols_are_satisfied():
+    assert isinstance(SpongePolicy(SpongeScaler(PERF)), SchedulingPolicy)
+    assert isinstance(FA2Policy(PERF), SchedulingPolicy)
+    assert isinstance(SpongeScaler(PERF), SchedulingPolicy)
+    assert isinstance(SimBackend(PERF, C_SET, B_SET), ExecutionBackend)
+
+
+def test_sim_jax_decision_and_bucket_parity():
+    pol_sim = SpongePolicy(SpongeScaler(PERF, c_set=C_SET, b_set=B_SET))
+    pol_jax = SpongePolicy(SpongeScaler(PERF, c_set=C_SET, b_set=B_SET))
+    sim = make_sim_server(PERF, pol_sim, c_set=C_SET, b_set=B_SET, c0=1,
+                          prior_rps=15.0, resize_penalty=0.0)
+    jax_srv = _jax_server(pol_jax)
+    jax_srv.backend.resize_penalty = 0.0
+    r_sim = sim.run(_script(payloads=False), horizon=8.0)
+    r_jax = jax_srv.run(_script(), horizon=8.0)
+
+    d_sim = [(t, d.c, d.b, d.feasible) for t, d in r_sim.decisions]
+    d_jax = [(t, d.c, d.b, d.feasible) for t, d in r_jax.decisions]
+    assert d_sim == d_jax, "decision sequences diverged"
+    assert r_sim.buckets == r_jax.buckets, "bucket choices diverged"
+    assert r_sim.n_requests == r_jax.n_requests == 60
+    # and the live path really executed: every request has a result
+    assert all(it.result is not None for it in jax_srv.backend.results)
+
+
+def test_jax_backend_measured_clock_serves_everything():
+    pol = SpongePolicy(SpongeScaler(PERF, c_set=C_SET, b_set=B_SET,
+                                    adaptation_interval=0.5))
+    srv = _jax_server(pol, clock="measured")
+    report = srv.run(_script(n=30), horizon=10.0)
+    assert report.n_requests == 30
+    assert report.backend == "jax"
+    assert len(srv.backend.measured) > 0
+    assert len(srv.monitor.perf_residuals) == len(srv.backend.measured)
+
+
+def test_fa2_multi_instance_on_live_backend():
+    """The live path models FA2-style horizontal baselines: one-core
+    replicas over the same executable table, replica target via
+    Decision.n."""
+    pol = FA2Policy(PERF, slo=0.6, expected_rps=40.0, cold_start=0.5,
+                    b_set=B_SET, reconfig_interval=1.0)
+    srv = _jax_server(pol, prior_rps=40.0)
+    report = srv.run(_script(n=80, rps=40.0), horizon=6.0)
+    # scale-out engaged mid-run (it scales back down once traffic stops)
+    assert max(cores for _, cores in report.core_timeline) > 1, \
+        "horizontal scale-out never engaged"
+    assert all(s.instance.c == 1 for s in srv.pool + srv.backend.dead)
+    assert report.n_requests == 80
+
+
+def test_decision_replica_fields_default_vertical():
+    d = Decision(c=4, b=2)
+    assert d.n == 1 and d.scale_up_delay == 0.0
+
+
+def test_round_up_c_never_rounds_down():
+    assert round_up_c((1, 2, 4, 8), 3) == 4
+    assert round_up_c((1, 2, 4, 8), 8) == 8
+    assert round_up_c((1, 2, 4, 8), 9) == 8       # fallback: max(c_set)
+    # the old nearest-with-tiebreak rule picked 2 here — below the
+    # solver's feasible c
+    assert round_up_c((1, 2, 8), 3) == 8
+
+
+def test_engine_apply_rounds_up():
+    from repro.serving.engine import ServingEngine
+    fns = toy_step_fns((1, 2, 8), (1, 2), dim=DIM)
+    eng = ServingEngine(fns, SpongeScaler(PERF, c_set=(1, 2, 8),
+                                          b_set=(1, 2)), pad_vectors)
+    eng.apply(Decision(c=3, b=2), now=0.0)
+    assert eng.c == 8, "Decision.c must never round below the feasible c"
+    assert eng.b == 2
+
+
+def test_run_report_is_dict_like():
+    sim = make_sim_server(PERF, "sponge", c_set=C_SET, b_set=B_SET,
+                          prior_rps=10.0)
+    report = sim.run(_script(n=10, rps=10.0, payloads=False), horizon=4.0)
+    assert isinstance(report, RunReport)
+    assert report["p99"] == report.p99
+    assert set(report.as_dict()) == set(report.keys())
+    assert report.get("nope", 123) == 123

@@ -1,7 +1,7 @@
 """Network trace + comm-latency model properties (paper Fig. 1)."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, st  # guarded hypothesis import
 
 from repro.network.latency import comm_latency
 from repro.network.traces import BandwidthTrace, synth_4g_trace

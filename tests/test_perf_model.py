@@ -1,7 +1,7 @@
 """Performance-model (Eq. 2) fitting tests, incl. robustness (Fig. 3)."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, st  # guarded hypothesis import
 
 from repro.core.perf_model import (PerfModel, TABLE1_SAMPLES, fit_table1,
                                    yolov5s_like)

@@ -1,5 +1,5 @@
 """EDF queue + dynamic batcher property tests."""
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, st  # guarded hypothesis import
 
 from repro.core.queueing import DynamicBatcher, EDFQueue
 from repro.core.slo import Request

@@ -1,7 +1,7 @@
 """Property tests (hypothesis) for the IP solver — the paper's Algorithm 1."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, st  # guarded hypothesis import
 
 from repro.core.perf_model import PerfModel, yolov5s_like
 from repro.core.solver import (DEFAULT_B, DEFAULT_C, solve_bruteforce,
