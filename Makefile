@@ -1,9 +1,11 @@
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: verify smoke fig4 bench
+.PHONY: verify smoke fig4 bench throughput docs-check help
 
 # tier-1 verification (the ROADMAP contract)
+# companions: `make docs-check` (doc gates) and `make throughput`
+# (the million-request control-plane benchmark) — see `make help`
 verify:
 	$(PY) -m pytest -x -q
 
@@ -15,6 +17,23 @@ smoke:
 fig4:
 	$(PY) -m benchmarks.run --only fig4
 
+# 1,000,000-request scenario: fast-engine events/s vs the pre-refactor
+# loop + memoized-solver hit rate (asserts the >=10x bar)
+throughput:
+	$(PY) -m benchmarks.throughput_bench
+
+# doc link integrity + serving-API docstring coverage
+docs-check:
+	$(PY) tools/docs_check.py
+
 # full benchmark harness
 bench:
 	$(PY) -m benchmarks.run
+
+help:
+	@echo "make verify      - tier-1 test suite (pytest)"
+	@echo "make smoke       - <30s end-to-end smoke, both backends"
+	@echo "make fig4        - the paper's headline study"
+	@echo "make throughput  - 1M-request control-plane benchmark (>=10x bar)"
+	@echo "make docs-check  - doc links + serving-API docstring coverage"
+	@echo "make bench       - full benchmark harness"

@@ -13,7 +13,7 @@ import traceback
 from benchmarks import (ablation_bench, fig1_dynamic_slo, fig3_perf_model,
                         fig4_e2e, perf_iter, predictive_bench,
                         roofline_report, smoke, solver_bench,
-                        table1_latency_grid)
+                        table1_latency_grid, throughput_bench)
 
 BENCHES = [
     ("smoke", smoke),
@@ -26,6 +26,9 @@ BENCHES = [
     ("predictive", predictive_bench),
     ("perf", perf_iter),
     ("ablation", ablation_bench),
+    # control-plane throughput: the 1M-request scenario through the fast
+    # engine vs the pre-refactor loop (see benchmarks/throughput_bench.py)
+    ("throughput", throughput_bench),
 ]
 
 

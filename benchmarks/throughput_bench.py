@@ -1,0 +1,101 @@
+"""Control-plane throughput: the million-request scenario benchmark.
+
+Runs the ``steady`` scenario (Fig. 4's workload continued to scale) at
+1,000,000 requests through the struct-of-arrays fast engine
+(``FastSimRunner`` + memoized solver) and measures control-plane
+events/second, then replays a true prefix of the *same* workload through
+the verbatim pre-refactor loop (``repro.serving.reference``) to report
+the speedup ratio.  The acceptance bar is >= 10x; the equivalence tests
+in ``tests/test_fastpath.py`` separately prove the fast engine
+decision-identical to the baseline, so the ratio compares equal work.
+
+Also reported: the memoized solver's cache hit rate — the fraction of
+``decide()`` calls answered by a table lookup instead of a grid solve.
+
+    PYTHONPATH=src python -m benchmarks.throughput_bench
+    PYTHONPATH=src python benchmarks/throughput_bench.py --requests 200000
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+from repro.core.baselines import SpongePolicy
+from repro.core.perf_model import yolov5s_like
+from repro.core.scaler import SpongeScaler
+from repro.core.solver import DEFAULT_B, DEFAULT_C
+from repro.serving.api import SimBackend
+from repro.serving.fastpath import FastSimRunner
+from repro.serving.reference import ReferenceRunner
+from repro.serving.scenarios import build_scenario
+
+MIN_SPEEDUP = 10.0
+
+
+def run(n_requests: int = 1_000_000,
+        baseline_requests: int = 20_000,
+        seed: int = 1) -> list[tuple[str, float, str]]:
+    perf = yolov5s_like()
+    t0 = time.perf_counter()
+    batch, meta = build_scenario("steady", requests=n_requests, seed=seed)
+    gen_s = time.perf_counter() - t0
+    rps = meta["rps"]
+    print(f"steady scenario: {len(batch):,} requests generated in "
+          f"{gen_s:.1f} s (vectorized)")
+
+    # --- fast engine over the full trace ---------------------------------
+    scaler = SpongeScaler(perf, solver="memo",
+                          budget_quantum=0.01, lam_quantum=0.5)
+    fast = FastSimRunner(SpongePolicy(scaler), perf, DEFAULT_C, DEFAULT_B,
+                         c0=16, prior_rps=rps)
+    t0 = time.perf_counter()
+    rep = fast.run(batch)
+    fast_s = time.perf_counter() - t0
+    fast_eps = fast.events_processed / fast_s
+    stats = scaler.solver_stats()
+    print(f"fast engine : {rep.n_requests:,} requests, "
+          f"{fast.events_processed:,} events in {fast_s:.1f} s "
+          f"= {fast_eps:,.0f} events/s")
+    print(f"              violations={rep.violation_rate*100:.3f}%  "
+          f"avg_cores={rep.avg_cores:.2f}")
+    print(f"solver cache: hit_rate={stats['hit_rate']*100:.1f}% "
+          f"({stats['hits']:,} hits / {stats['misses']:,} grid solves)")
+
+    # --- pre-refactor baseline on a prefix of the same workload ----------
+    prefix = batch.head(baseline_requests)
+    ref = ReferenceRunner(SpongePolicy(SpongeScaler(perf)),
+                          SimBackend(perf, DEFAULT_C, DEFAULT_B, c0=16))
+    ref.monitor.rate.prior_rps = rps
+    reqs = prefix.to_requests()
+    t0 = time.perf_counter()
+    ref.run(reqs)
+    ref_s = time.perf_counter() - t0
+    ref_eps = ref.events_processed / ref_s
+    ratio = fast_eps / ref_eps
+    print(f"pre-refactor: {len(prefix):,}-request prefix, "
+          f"{ref.events_processed:,} events in {ref_s:.1f} s "
+          f"= {ref_eps:,.0f} events/s")
+    print(f"speedup     : {ratio:.1f}x control-plane events/s "
+          f"(bar: >= {MIN_SPEEDUP:.0f}x)")
+    assert ratio >= MIN_SPEEDUP, \
+        f"fast engine only {ratio:.1f}x over the pre-refactor runner"
+    return [
+        ("throughput_fast", 1e6 / fast_eps,
+         f"events_per_s={fast_eps:.0f};hit_rate={stats['hit_rate']:.3f};"
+         f"viol={rep.violation_rate:.5f}"),
+        ("throughput_baseline", 1e6 / ref_eps,
+         f"events_per_s={ref_eps:.0f};speedup={ratio:.1f}x"),
+    ]
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--requests", type=int, default=1_000_000)
+    ap.add_argument("--baseline-requests", type=int, default=20_000)
+    ap.add_argument("--seed", type=int, default=1)
+    args = ap.parse_args(argv)
+    run(args.requests, args.baseline_requests, args.seed)
+
+
+if __name__ == "__main__":
+    main()

@@ -2,13 +2,30 @@
 
 Requests are reordered by remaining SLO (earliest absolute deadline first);
 the batcher emits batches of the solver's current b.
+
+Two queue substrates share the EDF discipline:
+
+* ``EDFQueue``     — heap of ``Request`` objects (the live/exact path);
+* ``FastEDFQueue`` — heap of bare ``(deadline, index)`` pairs into a
+  struct-of-arrays request batch, used by the million-request fast path
+  (``repro.serving.fastpath``).  No per-request Python objects exist;
+  the solver snapshot is a single vectorized ``np.sort``.
 """
 from __future__ import annotations
 
 import heapq
 from typing import Iterable, List, Optional
 
+import numpy as np
+
 from repro.core.slo import Request
+
+
+def _remaining_array(heap: list, now: float) -> np.ndarray:
+    """Sorted remaining budgets from a deadline-first heap (item[0] is the
+    absolute deadline on both queue substrates) — one vectorized pass."""
+    dl = np.fromiter((item[0] for item in heap), np.float64, len(heap))
+    return np.sort(dl - now)
 
 
 class EDFQueue:
@@ -38,6 +55,10 @@ class EDFQueue:
         """Remaining budgets (sorted ascending) — the solver's input."""
         return sorted(r.deadline - now for _, _, r in self._heap)
 
+    def remaining_array(self, now: float) -> np.ndarray:
+        """Vectorized ``snapshot_remaining``: sorted np.float64 budgets."""
+        return _remaining_array(self._heap, now)
+
     def drop_expired(self, now: float) -> List[Request]:
         """Remove requests whose deadline already passed (counted as
         violations by the caller)."""
@@ -52,6 +73,44 @@ class EDFQueue:
             self._heap = keep
             heapq.heapify(self._heap)
         return dropped
+
+
+class FastEDFQueue:
+    """EDF queue over request *indices* — the fast-path substrate.
+
+    Entries are bare ``(deadline, index)`` tuples pointing into a
+    struct-of-arrays workload (``repro.serving.workload.RequestBatch``),
+    so a million queued requests cost two machine words each and no
+    object allocation.  Presents the same read surface the scheduling
+    policies use (``__len__`` / ``snapshot_remaining`` /
+    ``remaining_array`` / ``peek_deadline``), which lets any
+    decide-protocol ``SchedulingPolicy`` run unmodified on the fast path.
+    """
+
+    def __init__(self):
+        self._heap: list[tuple[float, int]] = []
+
+    def __len__(self):
+        return len(self._heap)
+
+    def push(self, deadline: float, idx: int) -> None:
+        heapq.heappush(self._heap, (deadline, idx))
+
+    def peek_deadline(self) -> float:
+        return self._heap[0][0]
+
+    def pop_batch(self, b: int) -> List[int]:
+        """Pop the ≤b earliest-deadline request indices (EDF order)."""
+        pop = heapq.heappop
+        h = self._heap
+        return [pop(h)[1] for _ in range(min(b, len(h)))]
+
+    def remaining_array(self, now: float) -> np.ndarray:
+        """Sorted remaining budgets — one vectorized pass over the heap."""
+        return _remaining_array(self._heap, now)
+
+    def snapshot_remaining(self, now: float) -> List[float]:
+        return self.remaining_array(now).tolist()
 
 
 class DynamicBatcher:

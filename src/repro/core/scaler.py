@@ -1,15 +1,32 @@
 """The Sponge scaler (paper §3.1 "Scaler"): every adaptation interval, read
 the queue snapshot + lambda estimate, solve the IP, and emit a Decision the
-engine applies via in-place vertical scaling."""
+engine applies via in-place vertical scaling.
+
+``solver`` selects the optimizer implementation:
+
+* ``"bruteforce"`` — the paper's Algorithm 1, a Python double loop (the
+  reference semantics);
+* ``"pruned"``     — the vectorized exact variant;
+* ``"memo"``       — a :class:`repro.core.solver.MemoizedSolver`: the
+  ``(c, b)`` grid is precomputed once and decisions are cached under a
+  quantized ``(budgets, λ, wait)`` signature.  With ``budget_quantum`` and
+  ``lam_quantum`` at their 0.0 defaults the cache key is exact and the
+  decisions are identical to Algorithm 1; positive quanta trade a bounded,
+  conservative coarsening for near-O(1) repeated decisions (the
+  million-request scenario-engine configuration).
+"""
 from __future__ import annotations
 
 from dataclasses import dataclass, field
 from typing import Callable, List, Optional, Sequence
 
+import numpy as np
+
 from repro.core.perf_model import PerfModel
 from repro.core.queueing import EDFQueue
 from repro.core.slo import Decision
-from repro.core.solver import DEFAULT_B, DEFAULT_C, solve_bruteforce, solve_pruned
+from repro.core.solver import (DEFAULT_B, DEFAULT_C, MemoizedSolver,
+                               solve_bruteforce, solve_pruned)
 
 
 @dataclass
@@ -21,26 +38,57 @@ class SpongeScaler:
     c_set: Sequence[int] = DEFAULT_C
     b_set: Sequence[int] = DEFAULT_B
     adaptation_interval: float = 1.0
-    solver: str = "bruteforce"          # bruteforce (paper Alg.1) | pruned
+    solver: str = "bruteforce"          # bruteforce (paper Alg.1) | pruned | memo
     delta_pen: float = 1e-3
     headroom: float = 0.05              # latency safety margin (seconds)
     lam_headroom: float = 1.05          # provision for lam * this factor
+    budget_quantum: float = 0.0         # memo solver: budget bucket (s)
+    lam_quantum: float = 0.0            # memo solver: lambda bucket (rps)
     decisions: List[tuple[float, Decision]] = field(default_factory=list)
     _next_t: float = 0.0
+    _memo: Optional[MemoizedSolver] = field(default=None, repr=False)
 
     def due(self, now: float) -> bool:
         return now + 1e-12 >= self._next_t
+
+    @property
+    def memo(self) -> MemoizedSolver:
+        """The lazily built memoized solver (valid for solver="memo")."""
+        if self._memo is None:
+            self._memo = MemoizedSolver(
+                self.perf, self.c_set, self.b_set,
+                budget_quantum=self.budget_quantum,
+                lam_quantum=self.lam_quantum)
+        return self._memo
+
+    def solver_stats(self) -> dict:
+        """Cache economics of the memo solver ({} for exact solvers)."""
+        if self._memo is None:
+            return {}
+        return {"hits": self._memo.hits, "misses": self._memo.misses,
+                "hit_rate": self._memo.hit_rate}
 
     def decide(self, now: float, queue: EDFQueue, lam: float,
                initial_wait: float = 0.0,
                extra_budgets: tuple = ()) -> Decision:
         self._next_t = now + self.adaptation_interval
-        remaining = [max(r - self.headroom, 0.0)
-                     for r in queue.snapshot_remaining(now)]
-        remaining += [max(r - self.headroom, 0.0) for r in extra_budgets]
-        remaining.sort()
-        fn = solve_bruteforce if self.solver == "bruteforce" else solve_pruned
-        d = fn(remaining, lam * self.lam_headroom, self.perf, self.c_set,
-               self.b_set, self.delta_pen, initial_wait=initial_wait)
+        if hasattr(queue, "remaining_array"):
+            snap = queue.remaining_array(now)
+        else:
+            snap = np.asarray(queue.snapshot_remaining(now), np.float64)
+        remaining = np.maximum(snap - self.headroom, 0.0)
+        if extra_budgets:
+            extra = np.maximum(
+                np.asarray(extra_budgets, np.float64) - self.headroom, 0.0)
+            remaining = np.sort(np.concatenate([remaining, extra]))
+        lam_eff = lam * self.lam_headroom
+        if self.solver == "memo":
+            d = self.memo.solve(remaining, lam_eff,
+                                initial_wait=initial_wait)
+        else:
+            fn = (solve_bruteforce if self.solver == "bruteforce"
+                  else solve_pruned)
+            d = fn(list(remaining), lam_eff, self.perf, self.c_set,
+                   self.b_set, self.delta_pen, initial_wait=initial_wait)
         self.decisions.append((now, d))
         return d

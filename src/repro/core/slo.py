@@ -51,6 +51,18 @@ class Decision:
     set a replica target ``n``; newly added replicas become ready after
     ``scale_up_delay`` seconds (the cold start — only ever paid on the
     horizontal axis).  Vertical-only policies leave both at the defaults.
+
+    Fields:
+
+    * ``c`` — per-replica core count (TPU adaptation: submesh degree);
+      backends round *up* to the nearest available entry, never down.
+    * ``b`` — batch size the dispatcher fills toward before releasing.
+    * ``feasible`` — False when no (c, b) met every deadline and the
+      solver fell back to the damage-minimizing drain configuration.
+    * ``solver_iters`` / ``solver_time`` — search cost telemetry; a
+      memoized-solver cache hit reports the original miss's numbers.
+    * ``n`` — replica target (1 for vertical-only policies).
+    * ``scale_up_delay`` — seconds before *newly added* replicas serve.
     """
     c: int
     b: int

@@ -23,6 +23,17 @@ Beyond the paper (recorded in EXPERIMENTS.md §Fig4 notes):
   predicted violation count instead of the paper's implicit "give up"
   (c_max, b_max), which would violate the whole queue.
 * ``solve_pruned`` — vectorized exact variant, O(|C||B|) numpy.
+* ``SolverTable`` — the ``(c, b)`` grid (latency, throughput, lexicographic
+  iteration order) precomputed ONCE per (perf, c_set, b_set), so each solve
+  is a handful of vectorized comparisons against ready-made arrays instead
+  of a Python double loop over the grid.
+* ``MemoizedSolver`` — a quantized decision cache in front of a
+  ``SolverTable``: queue budgets / λ / initial wait are bucketed
+  conservatively (budgets floored, λ and wait ceiled) and the Decision for
+  each bucket signature is computed once; repeated ``decide()`` calls in a
+  long scenario become dictionary lookups.  With all quanta at 0 the cache
+  key is the exact input and the solver is decision-for-decision identical
+  to Algorithm 1 (the contract ``tests/test_fastpath.py`` enforces).
 """
 from __future__ import annotations
 
@@ -145,3 +156,142 @@ def solve_pruned(remaining_slos: Sequence[float], lam: float,
     j, i = np.unravel_index(np.argmin(pool), pool.shape)
     return Decision(c=int(cs[i]), b=int(bs[j]), feasible=False,
                     solver_iters=cost.size, solver_time=solver_time)
+
+
+class SolverTable:
+    """Precomputed numpy feasibility grids over the ``(c, b)`` space.
+
+    Everything that depends only on (perf, c_set, b_set) — the latency
+    grid l(b, c), the throughput grid h(b, c), and the flattened
+    Algorithm-1 iteration order (c ascending, then b ascending) — is
+    computed once here.  ``solve`` then answers each query with O(|C||B|)
+    vectorized comparisons plus an O(n/b) reduction per batch size over
+    the EDF batch heads; there is no per-config Python loop.
+
+    The constraint set is exactly Algorithm 1's: batch i (0-indexed, EDF
+    order) finishes at ``initial_wait + (i+1)·l(b, c)`` and must meet the
+    budget of its head request ``rem[i·b]``; configs with
+    ``h(b, c) < λ`` are discarded; the first feasible entry in (c, b)
+    lexicographic order is the IP optimum.  The infeasible fallback
+    replicates ``solve_bruteforce``: among sustainable configs, fewest
+    predicted violations, ties broken by fastest drain.
+    """
+
+    def __init__(self, perf: PerfModel, c_set: Sequence[int] = DEFAULT_C,
+                 b_set: Sequence[int] = DEFAULT_B):
+        self.perf = perf
+        self.cs = np.asarray(sorted(c_set), np.int64)
+        self.bs = np.asarray(sorted(b_set), np.int64)
+        cc, bb = np.meshgrid(self.cs, self.bs, indexing="ij")   # (C, B)
+        self.lat = np.asarray(perf.latency(bb, cc), np.float64)
+        self.thr = bb / np.maximum(self.lat, 1e-12)
+        self.c_flat = cc.ravel()
+        self.b_flat = bb.ravel()
+        self.size = self.lat.size
+
+    def solve(self, remaining_slos, lam: float,
+              initial_wait: float = 0.0) -> Decision:
+        t0 = time.perf_counter()
+        rem = np.sort(np.asarray(remaining_slos, np.float64).ravel())
+        n = rem.size
+        C, B = self.lat.shape
+        feas = np.ones((C, B), bool)
+        if n:
+            for j in range(B):
+                b = int(self.bs[j])
+                heads = rem[::b]
+                k = np.arange(1, heads.size + 1, dtype=np.float64)
+                finish = initial_wait + self.lat[:, j, None] * k
+                feas[:, j] = (finish <= heads).all(axis=1)
+        sustain = (self.thr >= lam) if lam > 0 else np.ones((C, B), bool)
+        ok = (feas & sustain).ravel()
+        hit = np.flatnonzero(ok)
+        if hit.size:
+            i = int(hit[0])
+            return Decision(c=int(self.c_flat[i]), b=int(self.b_flat[i]),
+                            feasible=True, solver_iters=self.size,
+                            solver_time=time.perf_counter() - t0)
+        # fallback: among sustainable configs, fewest predicted violations,
+        # then max throughput, then first in (c, b) order — bruteforce's
+        # crisis ordering
+        sus_flat = sustain.ravel()
+        if sus_flat.any():
+            viol = np.zeros((C, B), np.int64)
+            if n:
+                idx = np.arange(n, dtype=np.int64)
+                for j in range(B):
+                    b = int(self.bs[j])
+                    mult = (idx // b + 1).astype(np.float64)
+                    finish = initial_wait + self.lat[:, j, None] * mult
+                    viol[:, j] = (finish > rem).sum(axis=1)
+            key1 = np.where(sus_flat, viol.ravel().astype(np.float64),
+                            np.inf)
+            cand = np.flatnonzero(key1 == key1.min())
+            thr_c = self.thr.ravel()[cand]
+            i = int(cand[np.flatnonzero(thr_c == thr_c.max())[0]])
+            c, b = int(self.c_flat[i]), int(self.b_flat[i])
+        else:  # nothing sustains lam: max capacity config
+            c = int(self.cs[-1])
+            j = int(np.argmax(self.thr[-1]))
+            b = int(self.bs[j])
+        return Decision(c=c, b=b, feasible=False, solver_iters=self.size,
+                        solver_time=time.perf_counter() - t0)
+
+
+class MemoizedSolver:
+    """Decision cache in front of a :class:`SolverTable`.
+
+    Inputs are quantized **conservatively** before solving and the result
+    is cached under the quantized signature ``(budget buckets, queue
+    length, λ bucket, wait bucket)``:
+
+    * remaining budgets are *floored* to ``budget_quantum`` — the cached
+      decision never assumes more slack than the live queue has;
+    * λ is *ceiled* to ``lam_quantum`` and ``initial_wait`` to
+      ``budget_quantum`` — the cached decision never assumes less load.
+
+    A cache hit returns the stored Decision verbatim (its ``solver_time``
+    and ``solver_iters`` describe the original miss).  With every quantum
+    at 0 the key is the exact input vector, so memoization cannot change
+    any decision — only deduplicate identical queue states.  ``hits`` /
+    ``misses`` / ``hit_rate`` expose the economics for the throughput
+    benchmark.
+    """
+
+    def __init__(self, perf: PerfModel, c_set: Sequence[int] = DEFAULT_C,
+                 b_set: Sequence[int] = DEFAULT_B,
+                 budget_quantum: float = 0.0, lam_quantum: float = 0.0,
+                 max_entries: int = 200_000):
+        self.table = SolverTable(perf, c_set, b_set)
+        self.budget_quantum = float(budget_quantum)
+        self.lam_quantum = float(lam_quantum)
+        self.max_entries = max_entries
+        self.cache: dict = {}
+        self.hits = 0
+        self.misses = 0
+
+    @property
+    def hit_rate(self) -> float:
+        return self.hits / max(self.hits + self.misses, 1)
+
+    def solve(self, remaining_slos, lam: float,
+              initial_wait: float = 0.0) -> Decision:
+        rem = np.sort(np.asarray(remaining_slos, np.float64).ravel())
+        bq, lq = self.budget_quantum, self.lam_quantum
+        if bq > 0:
+            rem = np.floor(rem / bq) * bq
+            iw = float(np.ceil(initial_wait / bq) * bq)
+        else:
+            iw = float(initial_wait)
+        lam_q = float(np.ceil(lam / lq) * lq) if lq > 0 else float(lam)
+        key = (rem.tobytes(), lam_q, iw)
+        d = self.cache.get(key)
+        if d is not None:
+            self.hits += 1
+            return d
+        self.misses += 1
+        d = self.table.solve(rem, lam_q, initial_wait=iw)
+        if len(self.cache) >= self.max_entries:
+            self.cache.clear()
+        self.cache[key] = d
+        return d

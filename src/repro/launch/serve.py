@@ -1,6 +1,6 @@
 """Serving launcher: Sponge end-to-end through the unified serving API.
 
-Two modes, one control plane (``repro.serving.api.SpongeServer``):
+Three modes, one control plane (``repro.serving.api.SpongeServer``):
 
 * ``--mode live`` — real JAX inference (reduced arch, resolved through
   ``configs.registry``) behind the Sponge control plane: EDF queue, dynamic
@@ -10,15 +10,24 @@ Two modes, one control plane (``repro.serving.api.SpongeServer``):
   executable table).
 * ``--mode sim``  — the trace-driven discrete-event study (Fig. 4):
   Sponge vs FA2 vs static 8/16 under a 4G bandwidth trace.
+* ``--scenario <name>`` — run a registered workload scenario
+  (``repro.serving.scenarios``; see ``docs/scenarios.md``) through the
+  million-request fast engine (or ``--engine exact`` for the object-based
+  loop).  ``--requests N`` sizes the run by request count instead of
+  duration.
 
     PYTHONPATH=src python -m repro.launch.serve --mode live \
         --arch smollm-135m-reduced --rps 10 --duration 10
     PYTHONPATH=src python -m repro.launch.serve --mode sim --duration 600
+    PYTHONPATH=src python -m repro.launch.serve --scenario flash-crowd
+    PYTHONPATH=src python -m repro.launch.serve --scenario steady \
+        --requests 1000000
 """
 from __future__ import annotations
 
 import argparse
 import json
+import time
 
 import numpy as np
 
@@ -89,19 +98,65 @@ def run_live(args) -> dict:
     return res
 
 
+def run_scenario_mode(args) -> dict:
+    from repro.serving.scenarios import run_scenario
+    report, stats = run_scenario(
+        args.scenario, policy=args.policy, engine=args.engine,
+        duration=args.duration, rps=args.rps,
+        seed=args.seed, requests=args.requests)
+    ev = stats["events"]
+    dt = stats["run_wall_s"]            # engine time only (no generation)
+    out = {"scenario": args.scenario, "engine": stats["engine"],
+           "policy": report.policy, "n": report.n_requests,
+           "violation_rate": report.violation_rate,
+           "p50": report.p50, "p99": report.p99,
+           "avg_cores": report.avg_cores,
+           "events": ev, "events_per_s": ev / max(dt, 1e-9),
+           "wall_s": dt}
+    if "solver" in stats:
+        out["solver_hit_rate"] = stats["solver"].get("hit_rate")
+    print(json.dumps(out, indent=1, default=float))
+    return out
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
-    ap.add_argument("--mode", choices=("sim", "live"), default="sim")
+    ap.add_argument("--mode", choices=("sim", "live", "scenario"),
+                    default="sim")
+    try:
+        from repro.serving.scenarios import list_scenarios
+        # argparse %-formats help text: escape literal percent signs
+        scenario_help = "; ".join(f"{k}: {v}"
+                                  for k, v in list_scenarios().items()
+                                  ).replace("%", "%%")
+    except Exception:                               # pragma: no cover
+        scenario_help = "registered workload scenario"
+    ap.add_argument("--scenario", default=None,
+                    help=f"run a registered scenario ({scenario_help})")
+    ap.add_argument("--engine", choices=("fast", "exact"), default="fast",
+                    help="scenario mode: struct-of-arrays fast engine or "
+                         "the object-based exact loop")
+    ap.add_argument("--requests", type=int, default=None,
+                    help="scenario mode: size the run by request count")
     ap.add_argument("--arch", default="smollm-135m-reduced")
     ap.add_argument("--policy", default="sponge")
-    ap.add_argument("--rps", type=float, default=20.0)
+    # None = "use the mode's default" (scenarios carry their own rps /
+    # duration defaults; sim/live keep the historical 20 rps / 600 s)
+    ap.add_argument("--rps", type=float, default=None)
     ap.add_argument("--slo", type=float, default=1.0)
     ap.add_argument("--size-kb", type=float, default=200.0)
-    ap.add_argument("--duration", type=float, default=600.0)
+    ap.add_argument("--duration", type=float, default=None)
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--gen-tokens", type=int, default=8)
     ap.add_argument("--seed", type=int, default=42)
     args = ap.parse_args(argv)
+    if args.scenario or args.mode == "scenario":
+        if not args.scenario:
+            ap.error("--mode scenario requires --scenario <name>")
+        run_scenario_mode(args)
+        return
+    args.rps = 20.0 if args.rps is None else args.rps
+    args.duration = 600.0 if args.duration is None else args.duration
     if args.mode == "sim":
         run_sim(args)
     else:

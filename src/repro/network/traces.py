@@ -1,11 +1,17 @@
-"""4G/LTE bandwidth traces (paper Fig. 1, van der Hooft et al. [34]).
+"""4G/5G bandwidth traces (paper Fig. 1, van der Hooft et al. [34]).
 
 The dataset (HTTP/2 adaptive streaming over Belgian 4G, 1 Hz samples) is not
 shipped offline, so ``synth_4g_trace`` generates traces statistically matched
 to the paper's description: bandwidth varying between ~0.5 MB/s and ~7 MB/s
 within a 10-minute window, with mobility-induced regime shifts (log-OU
-process + occasional deep fades).  A loader for the real CSV format is
-provided for when the dataset is available.
+process + occasional deep fades).  ``synth_5g_trace`` is the same generator
+re-parameterized to an mmWave-ish envelope (higher ceiling, rarer but deeper
+blockage fades) for the mixed-network scenario replays.  A loader for the
+real CSV format is provided for when the dataset is available.
+
+Lookups are vectorized: ``BandwidthTrace.at_many`` maps a whole arrival
+array to bandwidths in one numpy pass — the million-request workload
+generators never call the scalar ``at`` in a loop.
 """
 from __future__ import annotations
 
@@ -24,14 +30,27 @@ class BandwidthTrace:
         i = min(int(now), len(self.mbps) - 1)
         return float(self.mbps[max(i, 0)])
 
+    def at_many(self, times: np.ndarray) -> np.ndarray:
+        """Vectorized ``at``: bandwidth sample for every entry of ``times``
+        (same truncate-and-clamp indexing as the scalar path)."""
+        idx = np.clip(np.asarray(times, np.float64).astype(np.int64),
+                      0, len(self.mbps) - 1)
+        return self.mbps[idx]
+
     @property
     def duration(self) -> float:
         return float(self.t[-1])
 
 
 def synth_4g_trace(duration_s: int = 600, seed: int = 0,
-                   lo: float = 0.5, hi: float = 7.0) -> BandwidthTrace:
-    """Log-space Ornstein–Uhlenbeck bandwidth with regime shifts and fades."""
+                   lo: float = 0.5, hi: float = 7.0,
+                   fade_depth: tuple = (0.15, 0.3)) -> BandwidthTrace:
+    """Log-space Ornstein–Uhlenbeck bandwidth with regime shifts and fades.
+
+    Regime-shift and fade counts scale with the duration, so hour-long
+    scenario traces keep the paper's per-10-minute mobility statistics
+    (short traces draw the same RNG stream as before).
+    """
     rng = np.random.default_rng(seed)
     n = int(duration_s)
     x = np.zeros(n)
@@ -39,7 +58,8 @@ def synth_4g_trace(duration_s: int = 600, seed: int = 0,
     x[0] = mu
     theta, sigma = 0.05, 0.25
     # regime shifts every ~60-120 s (user mobility)
-    shift_times = np.cumsum(rng.integers(45, 150, size=20))
+    n_regimes = max(20, n // 90 + 1)
+    shift_times = np.cumsum(rng.integers(45, 150, size=n_regimes))
     shifts = {int(t): rng.uniform(np.log(lo * 1.6), np.log(hi * 0.8))
               for t in shift_times if t < n}
     for i in range(1, n):
@@ -49,11 +69,22 @@ def synth_4g_trace(duration_s: int = 600, seed: int = 0,
     bw = np.exp(x)
     # deep fades (handover/obstruction): a few seconds near the floor
     if n > 20:
-        for _ in range(rng.integers(2, 5)):
+        n_fades = int(rng.integers(2, 5)) if n <= 1200 else n // 250
+        for _ in range(n_fades):
             s = rng.integers(0, n - 15)
-            bw[s:s + rng.integers(4, 12)] *= rng.uniform(0.15, 0.3)
+            bw[s:s + rng.integers(4, 12)] *= rng.uniform(*fade_depth)
     bw = np.clip(bw, lo, hi)
     return BandwidthTrace(t=np.arange(n, dtype=np.float64), mbps=bw)
+
+
+def synth_5g_trace(duration_s: int = 600, seed: int = 0,
+                   lo: float = 1.5, hi: float = 40.0) -> BandwidthTrace:
+    """5G-class synthetic trace: an order of magnitude more bandwidth than
+    the 4G envelope but with mmWave-style blockage — fades are rarer yet
+    proportionally deeper, so the *dynamic-SLO* effect (budgets collapsing
+    when the link dips) survives even on the faster network."""
+    return synth_4g_trace(duration_s, seed=seed, lo=lo, hi=hi,
+                          fade_depth=(0.05, 0.15))
 
 
 def load_csv_trace(path: str, col: int = 1, scale_to_mbytes: float = 1e-6

@@ -188,6 +188,8 @@ class SimBackend(_PooledBackend):
 
 @dataclass
 class ServedRequest:
+    """A live-backend unit of work: the request, the payload it carried
+    (e.g. a token array), and the model output filled in by ``execute``."""
     req: Request
     payload: Any
     result: Any = None
@@ -273,7 +275,26 @@ def _index_result(out: Any, i: int):
 @dataclass
 class RunReport:
     """Uniform result of a scenario run, backend- and policy-agnostic.
-    Dict-style access (``report["p99"]``) is kept for existing callers."""
+    Dict-style access (``report["p99"]``) is kept for existing callers.
+
+    Fields:
+
+    * ``policy`` / ``backend`` — names of the pair that produced the run.
+    * ``n_requests`` — requests observed by the monitor (served + dropped).
+    * ``n_violations`` — requests finishing after their absolute deadline
+      (strictly later than ``deadline + 1e-9``), plus any drops.
+    * ``violation_rate`` — ``n_violations / max(n_requests, 1)``.
+    * ``core_seconds`` — allocated-core integral over the horizon, resize
+      penalties and dead replicas included (the paper's cost axis).
+    * ``avg_cores`` — ``core_seconds / horizon``.
+    * ``p50`` / ``p99`` / ``mean_latency`` — end-to-end latency statistics
+      measured from client *send* time (comm latency included), seconds.
+    * ``core_timeline`` — ``(tick_time, allocated_cores)`` samples.
+    * ``decisions`` — the policy's ``(time, Decision)`` log when it keeps
+      one (None otherwise).
+    * ``buckets`` — per dispatched batch: ``(dispatch_time, cores,
+      batch_bucket, actual_batch_len)``.
+    """
     policy: str
     backend: str
     n_requests: int
@@ -307,6 +328,16 @@ class ScenarioRunner:
     slack-aware EDF dispatch, server-free events — over any
     (policy, backend) pair.
 
+    The event engine is *streamed*: arrivals are consumed from the
+    (arrival-sorted) input sequence and adaptation ticks are generated
+    incrementally, so only dynamic events (batch completions and precise
+    wake-ups, deduplicated per slot) ever live on the heap — a
+    million-request trace keeps the heap at O(pool) instead of
+    pre-allocating O(n) event tuples the way the pre-refactor loop did
+    (kept verbatim in ``repro.serving.reference`` as the equivalence
+    oracle; ``repro.serving.fastpath`` is the struct-of-arrays engine for
+    simulation at full scale).
+
     Dispatch waits to fill the scaler's batch size b and releases a
     partial batch only when the head request's deadline would otherwise
     be at risk (GrandSLAm-style timeout).  Legacy ``on_tick(now, sim)``
@@ -326,6 +357,7 @@ class ScenarioRunner:
         backend.monitor = self.monitor
         self.b = 1
         self.now = 0.0
+        self.events_processed = 0
         self.core_samples: List[tuple[float, int]] = []
         self.bucket_log: List[tuple[float, int, int, int]] = []
 
@@ -375,71 +407,101 @@ class ScenarioRunner:
         self.backend.on_submit(req, payload)
 
     # -- main loop ---------------------------------------------------------
-    def run(self, arrivals: Sequence, horizon: Optional[float] = None
-            ) -> RunReport:
-        """``arrivals``: Requests, or (Request, payload) pairs for live
-        backends.  Runs the event loop to ``horizon`` (default: last
-        arrival + 60 s) in virtual time and returns a RunReport."""
+    def run(self, arrivals, horizon: Optional[float] = None) -> RunReport:
+        """``arrivals``: Requests, (Request, payload) pairs for live
+        backends, or a ``RequestBatch`` (materialized on entry).  Runs the
+        event loop to ``horizon`` (default: last arrival + 60 s) in
+        virtual time and returns a RunReport.
+
+        Event sources are merged lazily — sorted arrivals and the tick
+        train are streamed, only completions/wake-ups are heaped — with
+        the same total order the reference loop produces: time ascending;
+        at equal times arrivals, then ticks, then dynamic events in push
+        order.  Every event is followed by one dispatch pass.
+        """
+        from repro.serving.workload import RequestBatch
+        if isinstance(arrivals, RequestBatch):
+            arrivals = arrivals.to_requests()
         norm = [(a, None) if isinstance(a, Request) else (a[0], a[1])
                 for a in arrivals]
+        norm.sort(key=lambda p: p[0].arrival)   # stable: ties keep order
         if horizon is None:
-            horizon = (max(r.arrival for r, _ in norm) + 60.0
-                       if norm else 60.0)
+            horizon = norm[-1][0].arrival + 60.0 if norm else 60.0
         events: list[tuple[float, int, str, object]] = []
         seq = itertools.count()
         self._wake: Dict[int, float] = {}   # srv.id -> scheduled wake-up
-        for r, payload in norm:
-            heapq.heappush(events, (r.arrival, next(seq), "arrival",
-                                    (r, payload)))
-        t = 0.0
-        while t <= horizon:
-            heapq.heappush(events, (t, next(seq), "tick", None))
-            t += self.tick
+        self._slack_wake: Dict[int, float] = {}
+        self.events_processed = 0
+        ai, n_arr = 0, len(norm)
+        next_tick = 0.0
+        INF = float("inf")
 
-        while events:
-            t, _, kind, item = heapq.heappop(events)
-            if t > horizon:
+        while True:
+            ta = norm[ai][0].arrival if ai < n_arr else INF
+            tt = next_tick if next_tick <= horizon else INF
+            td = events[0][0] if events else INF
+            if ta <= tt and ta <= td:       # arrivals win ties (reference
+                t, kind = ta, "arrival"     # loop pushed them first)
+            elif tt <= td:
+                t, kind = tt, "tick"
+            else:
+                t, kind = td, "dyn"
+            if t == INF or t > horizon:
                 break
+            self.events_processed += 1
             self.now = t
             if kind == "arrival":
-                req, payload = item
+                req, payload = norm[ai]
+                ai += 1
                 self.submit(req, payload)
             elif kind == "tick":
+                next_tick += self.tick
                 if hasattr(self.policy, "on_tick"):
                     self.policy.on_tick(t, self)
                 else:                       # bare SchedulingPolicy
                     self.drive(self.policy, t)
                 self.core_samples.append((t, self.allocated_cores))
-            # "free" / "check": fall through to the dispatch pass
+            else:
+                # "free" / "check": fall through to the dispatch pass
+                heapq.heappop(events)
             self._dispatch(t, events, seq)
 
         return self.results(horizon)
 
     def _dispatch(self, t: float, events, seq) -> None:
+        queue = self.queue
+        if not len(queue):
+            return
         for srv in self.pool:
-            # a slot busy (or cold-starting) past this event with queued
-            # work gets a precise wake-up: a resize penalty can extend
-            # busy_until beyond the slot's scheduled "free" event, which
-            # would otherwise strand the queue until the next tick
-            wake_t = max(srv.ready_at, srv.busy_until)
-            if (len(self.queue) and wake_t > t
-                    and self._wake.get(srv.id) != wake_t):
-                self._wake[srv.id] = wake_t
-                heapq.heappush(events, (wake_t, next(seq), "check", srv.id))
-            while (len(self.queue) and srv.ready_at <= t
-                   and srv.busy_until <= t):
-                q = len(self.queue)
+            if srv.ready_at > t or srv.busy_until > t:
+                # a slot busy (or cold-starting) past this event with
+                # queued work gets a precise wake-up: a resize penalty can
+                # extend busy_until beyond the slot's scheduled "free"
+                # event, which would otherwise strand the queue until the
+                # next tick
+                wake_t = max(srv.ready_at, srv.busy_until)
+                if self._wake.get(srv.id) != wake_t:
+                    self._wake[srv.id] = wake_t
+                    heapq.heappush(events,
+                                   (wake_t, next(seq), "check", srv.id))
+                continue
+            while len(queue) and srv.ready_at <= t and srv.busy_until <= t:
+                q = len(queue)
                 if q < self.b:
-                    head = self.queue.peek()
+                    head = queue.peek()
                     l_full = srv.instance.latency(self.b)
                     t_force = head.deadline - l_full - self.dispatch_margin
                     if t < t_force:
                         # re-check when deadline pressure bites (new
-                        # arrivals also re-trigger dispatch)
-                        heapq.heappush(events, (min(t_force, t + self.tick),
-                                                next(seq), "check", srv.id))
+                        # arrivals also re-trigger dispatch); dedup per
+                        # slot so a waiting server schedules one wake-up
+                        tw = min(t_force, t + self.tick)
+                        if self._slack_wake.get(srv.id) != tw:
+                            self._slack_wake[srv.id] = tw
+                            heapq.heappush(events,
+                                           (tw, next(seq), "check", srv.id))
                         break
-                batch = self.queue.pop_batch(self.b)
+                batch = queue.pop_batch(self.b)
                 bucket = srv.instance.bucket_b(len(batch))
                 fin = self.backend.execute(batch, srv.instance.c, bucket, t)
                 srv.busy_until = fin
@@ -639,5 +701,7 @@ def toy_step_fns(c_set: Sequence[int], b_set: Sequence[int],
 
 
 def pad_vectors(payloads: List[np.ndarray], b: int) -> np.ndarray:
+    """Stack float payloads to the batch bucket ``b``, repeating the last
+    entry as padding (the toy-table counterpart of ``engine.pad_tokens``)."""
     x = np.stack(list(payloads) + [payloads[-1]] * (b - len(payloads)))
     return x.astype(np.float32)

@@ -1,6 +1,12 @@
 """Live serving engine: the non-simulated execution path — now a thin
 construction shim over the unified serving API.
 
+.. deprecated::
+    New code should construct through ``repro.serving.api.make_live_server``
+    (or compose ``SpongeServer`` with a ``JaxBackend`` directly);
+    ``ServingEngine`` remains only for callers holding a prebuilt
+    step-fn table and the historical constructor signature.
+
 Runs real jitted JAX inference behind the same Sponge control plane as the
 simulator: ``repro.serving.api.ScenarioRunner`` drives a ``JaxBackend``
 holding the executable table built at deploy time — one entry per (c, b)
@@ -34,6 +40,7 @@ __all__ = ["ServingEngine", "ServedRequest", "build_llm_step_fns",
 class ServingEngine:
     """Single-instance live engine with in-place vertical scaling.
 
+    Deprecated shim — prefer ``repro.serving.api.make_live_server``.
     Thin facade: queue/monitor/dispatch all run inside ScenarioRunner; the
     scaler itself is the SchedulingPolicy (it conforms to the protocol).
     """

@@ -1,0 +1,318 @@
+"""Million-request simulation fast path: the control plane on bare arrays.
+
+``ScenarioRunner`` is the general loop — any policy, any backend, live
+payloads, legacy escape hatches.  At a million requests its per-request
+Python objects (``Request``, monitor lists, heap tuples) dominate the
+wall clock even after the streamed-event refactor.  ``FastSimRunner`` is
+the same control plane rebuilt for scale, for the simulation backend
+only:
+
+* the workload is a ``RequestBatch`` — one numpy column per field, no
+  ``Request`` objects ever exist;
+* the EDF queue holds bare ``(deadline, index)`` pairs
+  (``core.queueing.FastEDFQueue``) and the solver snapshot is a single
+  vectorized sort;
+* arrivals and adaptation ticks are streamed; the event heap holds only
+  batch completions and per-slot wake-ups (deduplicated), so the heap
+  stays O(pool);
+* the λ estimator is a two-pointer sliding window over the arrival
+  array (same estimate as ``core.monitor.RateEstimator``, including the
+  deploy-prior blend);
+* batch latencies come from a table precomputed per ``(c, b)`` — the
+  same floats ``SimBackend.execute`` would produce;
+* completions are recorded by fancy-indexed array writes and every
+  aggregate in the final ``RunReport`` is one vectorized pass.
+
+The contract — enforced by ``tests/test_fastpath.py`` against the
+verbatim pre-refactor loop in ``repro.serving.reference`` — is
+*decision-for-decision equivalence*: same decision sequence, same batch
+buckets, same violation count on the same workload.  Policies must speak
+the bare ``decide(now, queue, lam, initial_wait)`` protocol (Sponge,
+static, FA2 all do); legacy policies that mutate the pool or inspect
+``Request`` objects (``MultiDimPolicy``, ``PredictivePolicy``) need the
+object-based ``ScenarioRunner``.
+"""
+from __future__ import annotations
+
+import heapq
+import itertools
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from repro.core.perf_model import PerfModel
+from repro.core.queueing import FastEDFQueue
+from repro.core.solver import DEFAULT_B, DEFAULT_C
+from repro.serving.api import RunReport, round_up_c
+from repro.serving.workload import RequestBatch
+
+
+class _Slot:
+    """One servable slot as plain scalars (the fast-path ``Server``)."""
+    __slots__ = ("id", "c", "ready_at", "busy_until", "alive_since",
+                 "dead_at", "core_seconds", "_last_t")
+
+    def __init__(self, sid: int, c: int, ready_at: float, now: float):
+        self.id = sid
+        self.c = c
+        self.ready_at = ready_at
+        self.busy_until = 0.0
+        self.alive_since = now
+        self.dead_at: Optional[float] = None
+        self.core_seconds = 0.0
+        self._last_t: Optional[float] = now
+
+    def account(self, now: float) -> None:
+        """Integrate allocated core-seconds up to ``now`` (same monotone
+        accumulation as ``VerticalScaledInstance.account``)."""
+        if now > self._last_t:
+            self.core_seconds += self.c * (now - self._last_t)
+            self._last_t = now
+
+
+class FastSimRunner:
+    """The Sponge control loop over a struct-of-arrays workload.
+
+    Drives any decide-protocol ``SchedulingPolicy`` against simulated
+    vertically/horizontally scalable slots, with identical scheduling
+    semantics to ``ScenarioRunner`` + ``SimBackend`` (slack-aware EDF
+    dispatch, adaptation ticks, resize penalties, cold starts) at a
+    fraction of the per-event cost.  See the module docstring for the
+    equivalence contract.
+    """
+
+    def __init__(self, policy, perf: PerfModel,
+                 c_set=DEFAULT_C, b_set=DEFAULT_B, *, c0: int = 1,
+                 tick: float = 1.0, resize_penalty: float = 0.005,
+                 dispatch_margin: float = 0.02, prior_rps: float = 0.0,
+                 rate_window: float = 5.0):
+        if not hasattr(policy, "decide"):
+            raise TypeError(
+                f"{type(policy).__name__} has no decide(); the fast path "
+                "drives bare SchedulingPolicy objects only — use "
+                "ScenarioRunner for legacy on_tick policies")
+        self.policy = policy
+        self.perf = perf
+        self.c_set = tuple(sorted(c_set))
+        self.b_set = tuple(sorted(b_set))
+        assert c0 in self.c_set, (c0, self.c_set)
+        self.tick = tick
+        self.resize_penalty = resize_penalty
+        self.dispatch_margin = dispatch_margin
+        self.prior_rps = prior_rps
+        self.rate_window = rate_window
+        # precomputed latency table: identical floats to SimBackend.execute
+        self._lat: Dict[tuple[int, int], float] = {
+            (c, b): float(perf.latency(b, c))
+            for c in self.c_set for b in self.b_set}
+        bmax = self.b_set[-1]
+        buckets = np.empty(bmax + 1, np.int64)
+        for x in range(bmax + 1):
+            buckets[x] = next((bb for bb in self.b_set if bb >= x), bmax)
+        self._bucket_arr = buckets
+        self._bmax = bmax
+        self._sid = itertools.count()
+        self.b = 1
+        self.queue = FastEDFQueue()
+        self.slots: List[_Slot] = [_Slot(next(self._sid), c0, 0.0, 0.0)]
+        self.dead: List[_Slot] = []
+        self.core_samples: List[tuple[float, int]] = []
+        self.bucket_log: List[tuple[float, int, int, int]] = []
+        self.events_processed = 0
+
+    # -- helpers -----------------------------------------------------------
+    def _bucket(self, b: int) -> int:
+        return int(self._bucket_arr[b]) if b <= self._bmax else self._bmax
+
+    @property
+    def allocated_cores(self) -> int:
+        return sum(s.c for s in self.slots)
+
+    def _rate(self, now: float) -> float:
+        """Sliding-window λ with deploy-prior blend — same estimate as
+        ``RateEstimator`` via two pointers over the arrival array."""
+        arr, ai = self._arr, self._ai
+        w0 = self._w0
+        lo = now - self.rate_window
+        while w0 < ai and arr[w0] < lo:
+            w0 += 1
+        self._w0 = w0
+        if ai == w0:
+            obs = 0.0
+        else:
+            span = min(self.rate_window, max(now - arr[w0], 1e-6))
+            obs = (ai - w0) / span
+        if self.prior_rps <= 0:
+            return obs
+        seen = max(now - arr[0], 0.0) if ai > 0 else 0.0
+        w = min(seen / self.rate_window, 1.0)
+        return obs * w + self.prior_rps * (1.0 - w)
+
+    def drive(self, policy, now: float) -> None:
+        """One adaptation step (same drive path as ``ScenarioRunner``)."""
+        due = policy.due(now) if hasattr(policy, "due") else True
+        if not due:
+            return
+        lam = self._rate(now)
+        wait0 = max(self.slots[0].busy_until - now, 0.0)
+        d = policy.decide(now, self.queue, lam, initial_wait=wait0)
+        self._apply(d, now)
+
+    def _apply(self, d, now: float) -> None:
+        c = round_up_c(self.c_set, d.c)
+        self.b = max(1, int(d.b))
+        pen = self.resize_penalty
+        for s in self.slots:
+            s.account(now)
+            if s.c != c:
+                s.c = c
+                if pen:
+                    s.busy_until = max(s.busy_until, now) + pen
+        n = max(1, getattr(d, "n", 1))
+        cur = len(self.slots)
+        if n > cur:
+            delay = getattr(d, "scale_up_delay", 0.0)
+            for _ in range(n - cur):
+                self.slots.append(_Slot(next(self._sid), c,
+                                        now + delay, now))
+        elif n < cur:
+            for _ in range(min(cur - n, cur - 1)):
+                s = self.slots.pop()
+                s.dead_at = max(now, s.busy_until)
+                self.dead.append(s)
+
+    # -- the loop ----------------------------------------------------------
+    def run(self, batch: RequestBatch,
+            horizon: Optional[float] = None) -> RunReport:
+        arr = np.ascontiguousarray(batch.arrival, np.float64)
+        dl = np.ascontiguousarray(batch.deadline, np.float64)
+        n = arr.size
+        if n and np.any(np.diff(arr) < 0):
+            raise ValueError("RequestBatch must be sorted by arrival")
+        if horizon is None:
+            horizon = float(arr[-1]) + 60.0 if n else 60.0
+        finish = np.full(n, np.nan)
+        self._arr = arr
+        self._ai = 0
+        self._w0 = 0
+        policy = self.policy
+        queue = self.queue
+        lat = self._lat
+        bucket_arr = self._bucket_arr
+        margin = self.dispatch_margin
+        tick = self.tick
+        slack_wake: Dict[int, float] = {}
+        busy_wake: Dict[int, float] = {}
+        events: list[tuple[float, int, int]] = []
+        seq = itertools.count()
+        has_on_tick = hasattr(policy, "on_tick")
+        push, pop = heapq.heappush, heapq.heappop
+        next_tick = 0.0
+        ai = 0
+        INF = float("inf")
+        n_events = 0
+
+        while True:
+            ta = arr[ai] if ai < n else INF
+            tt = next_tick if next_tick <= horizon else INF
+            td = events[0][0] if events else INF
+            if ta <= tt and ta <= td:
+                t = ta
+                kind = 0
+            elif tt <= td:
+                t = tt
+                kind = 1
+            else:
+                t = td
+                kind = 2
+            if t == INF or t > horizon:
+                break
+            n_events += 1
+            if kind == 0:
+                queue.push(dl[ai], ai)
+                ai += 1
+                self._ai = ai
+            elif kind == 1:
+                next_tick += tick
+                if has_on_tick:
+                    policy.on_tick(t, self)
+                else:
+                    self.drive(policy, t)
+                self.core_samples.append((t, self.allocated_cores))
+            else:
+                pop(events)
+            # -- dispatch pass (inlined hot path) --------------------------
+            if len(queue._heap):
+                b_now = self.b
+                for s in self.slots:
+                    if s.ready_at > t or s.busy_until > t:
+                        wake_t = (s.ready_at if s.ready_at > s.busy_until
+                                  else s.busy_until)
+                        if busy_wake.get(s.id) != wake_t:
+                            busy_wake[s.id] = wake_t
+                            push(events, (wake_t, next(seq), s.id))
+                        continue
+                    while queue._heap and s.busy_until <= t:
+                        q = len(queue._heap)
+                        if q < b_now:
+                            head_dl = queue._heap[0][0]
+                            l_full = lat[(s.c, self._bucket(b_now))]
+                            t_force = head_dl - l_full - margin
+                            if t < t_force:
+                                tw = min(t_force, t + tick)
+                                if slack_wake.get(s.id) != tw:
+                                    slack_wake[s.id] = tw
+                                    push(events, (tw, next(seq), s.id))
+                                break
+                        idxs = queue.pop_batch(b_now)
+                        m = len(idxs)
+                        bucket = int(bucket_arr[m])
+                        fin = t + lat[(s.c, bucket)]
+                        s.busy_until = fin
+                        self.bucket_log.append((t, s.c, bucket, m))
+                        finish[idxs] = fin
+                        push(events, (fin, next(seq), s.id))
+
+        self.events_processed = n_events
+        return self._report(batch, finish, horizon)
+
+    # -- reporting ---------------------------------------------------------
+    def _report(self, batch: RequestBatch, finish: np.ndarray,
+                horizon: float) -> RunReport:
+        served = ~np.isnan(finish)
+        fin = finish[served]
+        n_req = int(served.sum())
+        viol = int((fin > batch.deadline[served] + 1e-9).sum())
+        e2e = np.sort(fin - (batch.arrival[served]
+                             - batch.comm_latency[served]))
+        nn = e2e.size
+
+        def p(q: float) -> float:
+            if not nn:
+                return float("nan")
+            return float(e2e[min(int(q * nn), nn - 1)])
+
+        core_s = 0.0
+        for s in self.slots + self.dead:
+            end = min(s.dead_at if s.dead_at is not None else horizon,
+                      horizon)
+            s.account(max(end, s.alive_since))
+            core_s += s.core_seconds
+        decisions = getattr(self.policy, "decisions", None)
+        if decisions is None:
+            decisions = getattr(getattr(self.policy, "scaler", None),
+                                "decisions", None)
+        return RunReport(
+            policy=getattr(self.policy, "name", type(self.policy).__name__),
+            backend="sim-fast",
+            n_requests=n_req,
+            n_violations=viol,
+            violation_rate=viol / max(n_req, 1),
+            core_seconds=core_s,
+            avg_cores=core_s / max(horizon, 1e-9),
+            p50=p(0.50), p99=p(0.99),
+            mean_latency=float(e2e.sum()) / max(nn, 1),
+            core_timeline=self.core_samples,
+            decisions=decisions,
+            buckets=self.bucket_log,
+        )

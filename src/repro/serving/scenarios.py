@@ -1,0 +1,311 @@
+"""Scenario registry: named million-request-capable workload scripts.
+
+Each scenario is a *vectorized* workload generator — arrival pattern,
+network/dynamic-SLO model, request mix — returning a ``RequestBatch``
+plus the metadata policies need (nominal SLO, expected rate).  One
+scenario runs on either engine:
+
+* ``engine="fast"``  — ``FastSimRunner`` + memoized solver, the
+  million-request path (``benchmarks/throughput_bench.py``);
+* ``engine="exact"`` — ``make_sim_server``'s object-based
+  ``ScenarioRunner``, decision-equivalent at small scale and required
+  for legacy/object-inspecting policies (e.g. ``sponge-pred``).
+
+Registered scenarios (see ``docs/scenarios.md`` for the full briefs):
+
+* ``steady``         — fixed-rate arrivals over a 4G trace; the Fig. 4
+  study continued to arbitrary scale.
+* ``diurnal``        — one compressed day: sinusoidal Poisson rate
+  between ~25% and 100% of peak.
+* ``flash-crowd``    — low base load with two sudden arrival spikes that
+  exceed cluster capacity; exercises the solver's infeasible fallback.
+* ``network-replay`` — fixed-rate arrivals, clients split across a 4G
+  and a 5G bandwidth replay; the paper's dynamic-SLO mechanism under
+  heterogeneous networks.
+* ``mixed-slo``      — three interleaved request classes (interactive /
+  standard / batch) with different SLOs and payload sizes.
+
+Adding a scenario: write a ``build(duration, rps, rng) ->
+(RequestBatch, meta)`` function, wrap it in :class:`Scenario`, decorate
+with :func:`register`.  It is immediately runnable via
+``launch/serve.py --scenario <name>`` and picked up by the docs check
+and the scenario smoke tests.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable, Dict, Optional, Tuple
+
+import numpy as np
+
+from repro.core.perf_model import PerfModel, yolov5s_like
+from repro.core.solver import DEFAULT_B, DEFAULT_C
+from repro.network.latency import comm_latency_many
+from repro.network.traces import synth_4g_trace, synth_5g_trace
+from repro.serving.workload import RequestBatch
+
+
+@dataclass(frozen=True)
+class Scenario:
+    """A named workload script.
+
+    ``build(duration_s, rps, rng)`` returns ``(RequestBatch, meta)``;
+    ``meta`` must carry ``slo`` (nominal, what SLO-blind policies like
+    FA2 plan with) and ``expected_rps`` (deploy-time rate prior).
+    ``mean_rate_factor`` maps the scenario's ``rps`` knob to its actual
+    mean arrival rate, so ``requests=`` targets convert to a duration.
+    """
+    name: str
+    summary: str
+    build: Callable[[float, float, np.random.Generator],
+                    Tuple[RequestBatch, dict]]
+    default_rps: float
+    default_duration: float
+    mean_rate_factor: float = 1.0
+
+
+SCENARIOS: Dict[str, Scenario] = {}
+
+
+def register(scenario: Scenario) -> Scenario:
+    """Add a scenario to the registry (returns it, decorator-style)."""
+    SCENARIOS[scenario.name] = scenario
+    return scenario
+
+
+def get_scenario(name: str) -> Scenario:
+    """Look up a registered scenario; KeyError lists what exists."""
+    try:
+        return SCENARIOS[name]
+    except KeyError:
+        raise KeyError(f"unknown scenario {name!r}; "
+                       f"registered: {sorted(SCENARIOS)}") from None
+
+
+def list_scenarios() -> Dict[str, str]:
+    """name -> one-line summary, for --help output and the docs check."""
+    return {s.name: s.summary for s in SCENARIOS.values()}
+
+
+# --------------------------------------------------------------------------
+# arrival-process helpers (all batched numpy — no per-request Python)
+# --------------------------------------------------------------------------
+def poisson_times(rate: float, duration: float,
+                  rng: np.random.Generator) -> np.ndarray:
+    """Homogeneous Poisson send times on [0, duration)."""
+    n = rng.poisson(rate * duration)
+    return np.sort(rng.uniform(0.0, duration, n))
+
+
+def inhomogeneous_poisson_times(rate_fn: Callable[[np.ndarray], np.ndarray],
+                                rate_max: float, duration: float,
+                                rng: np.random.Generator) -> np.ndarray:
+    """Thinning: draw at ``rate_max``, keep each point w.p. rate(t)/max."""
+    t = poisson_times(rate_max, duration, rng)
+    keep = rng.uniform(0.0, 1.0, t.size) < rate_fn(t) / rate_max
+    return t[keep]
+
+
+def _trace_seconds(duration: float) -> int:
+    return int(duration) + 5
+
+
+# --------------------------------------------------------------------------
+# the registered scenarios
+# --------------------------------------------------------------------------
+def _build_steady(duration, rps, rng):
+    seed = int(rng.integers(2**31))
+    trace = synth_4g_trace(_trace_seconds(duration), seed=seed)
+    send = np.arange(0, duration, 1.0 / rps)
+    cl = comm_latency_many(np.full(send.shape, 200.0), trace, send)
+    batch = RequestBatch.from_send(send, cl, slo=1.0, size_kb=200.0)
+    return batch, {"slo": 1.0, "expected_rps": rps, "trace": trace}
+
+
+register(Scenario(
+    name="steady",
+    summary="fixed-rate arrivals over a 4G bandwidth replay (Fig. 4 at "
+            "arbitrary scale)",
+    build=_build_steady, default_rps=20.0, default_duration=600.0))
+
+
+def _build_diurnal(duration, rps, rng):
+    seed = int(rng.integers(2**31))
+    trace = synth_4g_trace(_trace_seconds(duration), seed=seed)
+
+    def rate(t):
+        # one compressed "day": trough ~25% of peak, peak at mid-window
+        return rps * (0.25 + 0.75 * 0.5 * (1 - np.cos(2 * np.pi
+                                                      * t / duration)))
+
+    send = inhomogeneous_poisson_times(rate, rps, duration, rng)
+    cl = comm_latency_many(np.full(send.shape, 200.0), trace, send)
+    batch = RequestBatch.from_send(send, cl, slo=1.0, size_kb=200.0)
+    return batch, {"slo": 1.0, "expected_rps": 0.625 * rps, "trace": trace,
+                   "tick": 0.5}
+
+
+register(Scenario(
+    name="diurnal",
+    summary="sinusoidal day/night Poisson load, trough 25% of peak — "
+            "tests sustained scale-down without violations",
+    build=_build_diurnal, default_rps=16.0, default_duration=600.0,
+    mean_rate_factor=0.625))
+
+
+def _build_flash_crowd(duration, rps, rng):
+    seed = int(rng.integers(2**31))
+    trace = synth_4g_trace(_trace_seconds(duration), seed=seed)
+    spikes = ((0.40, 0.02, 6.0), (0.70, 0.03, 3.0))   # (start, len, x-rate)
+
+    def rate(t):
+        r = np.full(t.shape, float(rps))
+        for frac, width, mult in spikes:
+            s = frac * duration
+            r = np.where((t >= s) & (t < s + width * duration),
+                         rps * mult, r)
+        return r
+
+    send = inhomogeneous_poisson_times(rate, rps * 6.0, duration, rng)
+    cl = comm_latency_many(np.full(send.shape, 200.0), trace, send)
+    batch = RequestBatch.from_send(send, cl, slo=1.0, size_kb=200.0)
+    return batch, {"slo": 1.0, "expected_rps": rps, "trace": trace}
+
+
+register(Scenario(
+    name="flash-crowd",
+    summary="low base load with two arrival spikes beyond cluster "
+            "capacity — exercises the infeasible-fallback drain",
+    build=_build_flash_crowd, default_rps=10.0, default_duration=600.0,
+    mean_rate_factor=1.16))   # 1 + 0.02*(6-1) + 0.03*(3-1)
+
+
+def _build_network_replay(duration, rps, rng):
+    s4 = int(rng.integers(2**31))
+    s5 = int(rng.integers(2**31))
+    t4 = synth_4g_trace(_trace_seconds(duration), seed=s4)
+    t5 = synth_5g_trace(_trace_seconds(duration), seed=s5)
+    send = np.arange(0, duration, 1.0 / rps)
+    on_5g = rng.uniform(0.0, 1.0, send.size) < 0.5
+    sizes = np.full(send.shape, 200.0)
+    cl = np.where(on_5g, comm_latency_many(sizes, t5, send),
+                  comm_latency_many(sizes, t4, send))
+    batch = RequestBatch.from_send(send, cl, slo=1.0, size_kb=sizes)
+    return batch, {"slo": 1.0, "expected_rps": rps,
+                   "trace": t4, "trace_5g": t5}
+
+
+register(Scenario(
+    name="network-replay",
+    summary="fixed-rate clients split 50/50 across 4G and 5G bandwidth "
+            "replays — the paper's dynamic-SLO squeeze, heterogeneous",
+    build=_build_network_replay, default_rps=20.0,
+    default_duration=600.0))
+
+
+def _build_mixed_slo(duration, rps, rng):
+    seed = int(rng.integers(2**31))
+    trace = synth_4g_trace(_trace_seconds(duration), seed=seed)
+    send = poisson_times(rps, duration, rng)
+    # class mix: (weight, slo, size_kb).  The interactive SLO sits close
+    # to — but inside — the perf model's batch-latency floor, so EDF must
+    # consistently front-run the tight class for the run to stay clean.
+    classes = np.array([[0.20, 0.6, 50.0],
+                        [0.55, 1.0, 200.0],
+                        [0.25, 3.0, 800.0]])
+    pick = rng.choice(3, size=send.size, p=classes[:, 0])
+    slo = classes[pick, 1]
+    sizes = classes[pick, 2]
+    cl = comm_latency_many(sizes, trace, send)
+    batch = RequestBatch.from_send(send, cl, slo=slo, size_kb=sizes)
+    return batch, {"slo": float(classes[:, 1].min()),
+                   "expected_rps": rps, "trace": trace,
+                   "tick": 0.5}
+
+
+register(Scenario(
+    name="mixed-slo",
+    summary="three interleaved SLO classes (0.6s/1s/3s, 50KB-800KB) — "
+            "EDF + per-request budgets must prioritize the tight class",
+    build=_build_mixed_slo, default_rps=12.0, default_duration=600.0))
+
+
+# --------------------------------------------------------------------------
+# building + running
+# --------------------------------------------------------------------------
+def build_scenario(name: str, *, duration: Optional[float] = None,
+                   rps: Optional[float] = None, seed: int = 0,
+                   requests: Optional[int] = None
+                   ) -> Tuple[RequestBatch, dict]:
+    """Materialize a registered scenario.  ``requests`` (if given)
+    overrides ``duration`` with the window expected to produce that many
+    arrivals at the scenario's mean rate — the million-request knob."""
+    sc = get_scenario(name)
+    rps = rps if rps is not None else sc.default_rps
+    if requests is not None:
+        duration = requests / (rps * sc.mean_rate_factor)
+    duration = duration if duration is not None else sc.default_duration
+    rng = np.random.default_rng(seed)
+    batch, meta = sc.build(duration, rps, rng)
+    meta.update(scenario=name, duration=duration, rps=rps, seed=seed)
+    return batch, meta
+
+
+def run_scenario(name: str, *, policy: str = "sponge",
+                 engine: str = "fast", duration: Optional[float] = None,
+                 rps: Optional[float] = None, seed: int = 0,
+                 requests: Optional[int] = None,
+                 perf: Optional[PerfModel] = None,
+                 c_set=DEFAULT_C, b_set=DEFAULT_B, c0: int = 16,
+                 tick: Optional[float] = None,
+                 horizon: Optional[float] = None,
+                 budget_quantum: float = 0.01, lam_quantum: float = 0.5,
+                 **policy_kw):
+    """Run a registered scenario end to end; returns ``(RunReport,
+    stats)`` where ``stats`` carries engine/meta/solver-cache info.
+
+    The fast engine pairs ``FastSimRunner`` with the memoized solver
+    (quantized as given); the exact engine goes through
+    ``make_sim_server`` with the paper's bruteforce solver.
+    """
+    import time
+    from repro.serving.api import make_policy, make_sim_server
+    from repro.serving.fastpath import FastSimRunner
+    assert engine in ("fast", "exact"), engine
+    perf = perf if perf is not None else yolov5s_like()
+    batch, meta = build_scenario(name, duration=duration, rps=rps,
+                                 seed=seed, requests=requests)
+    # a scenario with sub-second SLOs recommends its adaptation cadence
+    tick = tick if tick is not None else meta.get("tick", 1.0)
+    common = dict(slo=meta["slo"], expected_rps=meta["expected_rps"],
+                  adaptation_interval=tick)
+    if engine == "fast":
+        if policy.startswith("sponge-pred"):
+            raise ValueError("sponge-pred inspects Request objects; "
+                             "run it with engine='exact'")
+        kw = dict(common, **policy_kw)
+        if policy == "sponge":
+            kw.update(solver="memo", budget_quantum=budget_quantum,
+                      lam_quantum=lam_quantum)
+        pol = make_policy(policy, perf, c_set=c_set, b_set=b_set, **kw)
+        runner = FastSimRunner(pol, perf, c_set, b_set, c0=c0, tick=tick,
+                               prior_rps=meta["expected_rps"])
+        t0 = time.perf_counter()
+        report = runner.run(batch, horizon)
+        stats = {"engine": "fast", "events": runner.events_processed,
+                 "run_wall_s": time.perf_counter() - t0, "meta": meta}
+        scaler = getattr(pol, "scaler", None)
+        if scaler is not None and hasattr(scaler, "solver_stats"):
+            stats["solver"] = scaler.solver_stats()
+        return report, stats
+    server = make_sim_server(perf, policy, c_set=c_set, b_set=b_set,
+                             c0=c0, tick=tick,
+                             prior_rps=meta["expected_rps"],
+                             **dict(common, **policy_kw))
+    reqs = batch.to_requests()
+    t0 = time.perf_counter()
+    report = server.run(reqs, horizon)
+    return report, {"engine": "exact",
+                    "events": server.runner.events_processed,
+                    "run_wall_s": time.perf_counter() - t0,
+                    "meta": meta}

@@ -1,6 +1,13 @@
 """Discrete-event cluster simulator for the Fig. 4 study — now a thin
 construction shim over the unified serving API.
 
+.. deprecated::
+    New code should construct through ``repro.serving.api``
+    (``make_sim_server`` or ``ScenarioRunner`` + ``SimBackend``), or use
+    ``repro.serving.fastpath.FastSimRunner`` for million-request traces.
+    This module remains only for callers of the historical
+    ``ClusterSimulator`` signature.
+
 The event loop, EDF dispatch, pool management and reporting live in
 ``repro.serving.api.ScenarioRunner``; this module only binds it to a
 ``SimBackend`` (batch finish times from the calibrated PerfModel) with the
@@ -21,6 +28,7 @@ __all__ = ["ClusterSimulator", "Server", "simulate"]
 class ClusterSimulator(ScenarioRunner):
     """ScenarioRunner preconfigured with a SimBackend.
 
+    Deprecated shim — prefer ``repro.serving.api.make_sim_server``.
     Accepts both decide-protocol policies (``repro.serving.api``) and
     legacy ``on_tick(now, sim)`` policies that mutate the pool directly.
     """

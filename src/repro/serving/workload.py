@@ -1,6 +1,19 @@
-"""Workload generator (paper §4): asynchronous requests at a fixed (or
+"""Workload generation (paper §4): asynchronous requests at a fixed (or
 Poisson) rate with per-request communication latency from the bandwidth
-trace and a predefined SLO."""
+trace and a predefined SLO.
+
+Two output shapes, one arrival model:
+
+* ``WorkloadGenerator.generate`` — a list of ``Request`` objects in send
+  order (the historical surface; the per-request fields are now computed
+  in batched numpy, the Python loop only materializes the dataclasses).
+* ``WorkloadGenerator.generate_batch`` / ``RequestBatch`` — the
+  struct-of-arrays form used by the million-request fast path
+  (``repro.serving.fastpath``) and the scenario registry: every column is
+  one numpy array, sorted by server-arrival time, and no ``Request``
+  object exists until ``to_requests()`` materializes them for the exact
+  event loop.
+"""
 from __future__ import annotations
 
 from dataclasses import dataclass
@@ -9,8 +22,65 @@ from typing import List, Optional
 import numpy as np
 
 from repro.core.slo import Request
-from repro.network.latency import comm_latency
+from repro.network.latency import comm_latency_many
 from repro.network.traces import BandwidthTrace
+
+
+@dataclass(frozen=True)
+class RequestBatch:
+    """A workload as parallel numpy columns, sorted by ``arrival``.
+
+    Fields mirror ``repro.core.slo.Request``: ``send`` is the client send
+    time, ``arrival = send + comm_latency`` the server-side arrival, and
+    ``deadline = arrival - comm_latency + slo`` the absolute EDF deadline
+    (computed with the same float expression ``Request.make`` uses, so a
+    materialized batch is bit-identical to per-request construction).
+    """
+    send: np.ndarray
+    arrival: np.ndarray
+    comm_latency: np.ndarray
+    slo: np.ndarray
+    deadline: np.ndarray
+    size_kb: np.ndarray
+
+    @classmethod
+    def from_send(cls, send: np.ndarray, comm_latency: np.ndarray,
+                  slo, size_kb=200.0) -> "RequestBatch":
+        """Build + arrival-sort a batch from send times and comm latencies
+        (``slo`` / ``size_kb`` may be scalars or per-request arrays)."""
+        send = np.asarray(send, np.float64)
+        cl = np.asarray(comm_latency, np.float64)
+        slo = np.broadcast_to(np.asarray(slo, np.float64), send.shape)
+        size_kb = np.broadcast_to(np.asarray(size_kb, np.float64),
+                                  send.shape)
+        arrival = send + cl
+        order = np.argsort(arrival, kind="stable")
+        send, cl = send[order], cl[order]
+        slo, size_kb = slo[order].copy(), size_kb[order].copy()
+        arrival = arrival[order]
+        return cls(send=send, arrival=arrival, comm_latency=cl, slo=slo,
+                   deadline=arrival - cl + slo, size_kb=size_kb)
+
+    def __len__(self) -> int:
+        return int(self.arrival.size)
+
+    def head(self, k: int) -> "RequestBatch":
+        """The first ``k`` arrivals — a true prefix of the scenario (used
+        to benchmark baseline runners on a slice of the same workload)."""
+        return RequestBatch(send=self.send[:k], arrival=self.arrival[:k],
+                            comm_latency=self.comm_latency[:k],
+                            slo=self.slo[:k], deadline=self.deadline[:k],
+                            size_kb=self.size_kb[:k])
+
+    def to_requests(self) -> List[Request]:
+        """Materialize ``Request`` objects (arrival order) for the exact
+        event loop — only sensible at small scale."""
+        return [Request(deadline=float(d), arrival=float(a),
+                        comm_latency=float(c), slo=float(s),
+                        size_kb=float(k))
+                for d, a, c, s, k in zip(self.deadline, self.arrival,
+                                         self.comm_latency, self.slo,
+                                         self.size_kb)]
 
 
 @dataclass
@@ -22,8 +92,9 @@ class WorkloadGenerator:
     size_jitter: float = 0.0           # +- fraction of size_kb
     seed: int = 0
 
-    def generate(self, trace: BandwidthTrace,
-                 duration_s: Optional[float] = None) -> List[Request]:
+    def _columns(self, trace: BandwidthTrace,
+                 duration_s: Optional[float] = None):
+        """Vectorized arrival model: (send, comm_latency, size) arrays."""
         dur = duration_s or trace.duration
         rng = np.random.default_rng(self.seed)
         if self.poisson:
@@ -33,13 +104,23 @@ class WorkloadGenerator:
             send_times = send_times[send_times < dur]
         else:
             send_times = np.arange(0, dur, 1.0 / self.rps)
-        reqs = []
-        for ts in send_times:
-            size = self.size_kb
-            if self.size_jitter:
-                size *= 1.0 + rng.uniform(-self.size_jitter, self.size_jitter)
-            cl = comm_latency(size, trace, ts)
-            reqs.append(Request.make(arrival=float(ts + cl),
-                                     comm_latency=float(cl),
-                                     slo=self.slo, size_kb=float(size)))
-        return reqs
+        sizes = np.full(send_times.shape, self.size_kb, np.float64)
+        if self.size_jitter:
+            sizes = self.size_kb * (1.0 + rng.uniform(
+                -self.size_jitter, self.size_jitter, size=len(send_times)))
+        cl = comm_latency_many(sizes, trace, send_times)
+        return send_times, cl, sizes
+
+    def generate(self, trace: BandwidthTrace,
+                 duration_s: Optional[float] = None) -> List[Request]:
+        """Request objects in send order (the historical surface)."""
+        send, cl, sizes = self._columns(trace, duration_s)
+        return [Request.make(arrival=float(ts + c), comm_latency=float(c),
+                             slo=self.slo, size_kb=float(k))
+                for ts, c, k in zip(send, cl, sizes)]
+
+    def generate_batch(self, trace: BandwidthTrace,
+                       duration_s: Optional[float] = None) -> RequestBatch:
+        """The same workload as an arrival-sorted ``RequestBatch``."""
+        send, cl, sizes = self._columns(trace, duration_s)
+        return RequestBatch.from_send(send, cl, slo=self.slo, size_kb=sizes)

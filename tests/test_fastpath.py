@@ -1,0 +1,179 @@
+"""The fast-path equivalence contract (ISSUE 2).
+
+The pre-refactor event loop is kept verbatim in
+``repro.serving.reference``; these tests prove that
+
+* the refactored ``ScenarioRunner`` (streamed arrivals/ticks, indexed
+  wake-ups),
+* the struct-of-arrays ``FastSimRunner``, and
+* the memoized solver at quantum 0
+
+all produce *identical decision sequences, batch buckets and aggregate
+results* on the same workloads — across the vertical (sponge), static,
+and horizontal (FA2, cold starts) policy families.
+"""
+import numpy as np
+import pytest
+from _hyp import given, settings, st  # guarded hypothesis import
+
+from repro.core.baselines import FA2Policy, SpongePolicy, StaticPolicy
+from repro.core.perf_model import yolov5s_like
+from repro.core.scaler import SpongeScaler
+from repro.core.solver import (DEFAULT_B, DEFAULT_C, MemoizedSolver,
+                               SolverTable, solve_bruteforce)
+from repro.network.traces import synth_4g_trace
+from repro.serving.api import ScenarioRunner, SimBackend
+from repro.serving.fastpath import FastSimRunner
+from repro.serving.reference import ReferenceRunner
+from repro.serving.workload import RequestBatch, WorkloadGenerator
+
+PERF = yolov5s_like()
+
+
+def _batch(seed=3, rps=20, duration=90, poisson=True):
+    trace = synth_4g_trace(duration, seed=seed)
+    wl = WorkloadGenerator(rps=rps, slo=1.0, size_kb=200,
+                           poisson=poisson, seed=seed)
+    return wl.generate_batch(trace)
+
+
+def _policy(name, solver="bruteforce"):
+    if name == "sponge":
+        return SpongePolicy(SpongeScaler(PERF, solver=solver))
+    if name == "fa2":
+        return FA2Policy(PERF, slo=1.0, expected_rps=20)
+    return StaticPolicy(PERF, cores=8)
+
+
+def _sig(report):
+    """Everything that must match across runners."""
+    decisions = [(t, d.c, d.b, d.n, d.scale_up_delay, d.feasible)
+                 for t, d in (report.decisions or [])]
+    return (decisions, report.buckets, report.n_requests,
+            report.n_violations, report.core_seconds, report.p50,
+            report.p99, report.core_timeline)
+
+
+def _run_reference(policy, reqs):
+    r = ReferenceRunner(policy, SimBackend(PERF, DEFAULT_C, DEFAULT_B,
+                                           c0=16))
+    r.monitor.rate.prior_rps = 20
+    return r.run(reqs)
+
+
+@pytest.mark.parametrize("name", ["sponge", "fa2", "static"])
+@pytest.mark.parametrize("seed", [3, 11])
+def test_runner_matches_reference(name, seed):
+    """Streamed-event ScenarioRunner == verbatim pre-refactor loop."""
+    batch = _batch(seed=seed)
+    ref = _run_reference(_policy(name), batch.to_requests())
+    new = ScenarioRunner(_policy(name),
+                         SimBackend(PERF, DEFAULT_C, DEFAULT_B, c0=16))
+    new.monitor.rate.prior_rps = 20
+    got = new.run(batch.to_requests())
+    assert _sig(got) == _sig(ref)
+
+
+@pytest.mark.parametrize("name", ["sponge", "fa2", "static"])
+@pytest.mark.parametrize("seed", [3, 11])
+def test_fastpath_matches_reference(name, seed):
+    """Struct-of-arrays FastSimRunner == verbatim pre-refactor loop."""
+    batch = _batch(seed=seed)
+    ref = _run_reference(_policy(name), batch.to_requests())
+    fast = FastSimRunner(_policy(name), PERF, DEFAULT_C, DEFAULT_B,
+                         c0=16, prior_rps=20)
+    got = fast.run(batch)
+    assert _sig(got) == _sig(ref)
+
+
+def test_memoized_solver_is_decision_identical_at_quantum_zero():
+    """scaler(solver="memo", quanta=0) == scaler(solver="bruteforce")
+    through the full control loop."""
+    batch = _batch(seed=5)
+    ref = _run_reference(_policy("sponge"), batch.to_requests())
+    memo_pol = SpongePolicy(SpongeScaler(PERF, solver="memo"))
+    fast = FastSimRunner(memo_pol, PERF, DEFAULT_C, DEFAULT_B,
+                         c0=16, prior_rps=20)
+    got = fast.run(batch)
+    assert _sig(got) == _sig(ref)
+    stats = memo_pol.scaler.solver_stats()
+    assert stats["hits"] + stats["misses"] == len(got.decisions or [])
+
+
+def test_fastpath_accepts_only_decide_policies():
+    class OnTickOnly:
+        def on_tick(self, now, sim):  # pragma: no cover
+            pass
+
+    with pytest.raises(TypeError):
+        FastSimRunner(OnTickOnly(), PERF, DEFAULT_C, DEFAULT_B)
+
+
+def test_request_batch_roundtrip():
+    batch = _batch(seed=9)
+    assert np.all(np.diff(batch.arrival) >= 0), "must be arrival-sorted"
+    reqs = batch.to_requests()
+    assert len(reqs) == len(batch)
+    i = len(batch) // 2
+    r = reqs[i]
+    assert r.deadline == batch.deadline[i] and r.arrival == batch.arrival[i]
+    head = batch.head(10)
+    assert len(head) == 10
+    assert np.array_equal(head.arrival, batch.arrival[:10])
+
+
+# --------------------------------------------------------------------------
+# solver-level properties
+# --------------------------------------------------------------------------
+budgets = st.lists(st.floats(0.05, 3.0), min_size=0, max_size=40)
+lams = st.floats(0.0, 40.0)
+waits = st.floats(0.0, 0.5)
+
+
+@given(budgets, lams, waits)
+@settings(max_examples=200, deadline=None)
+def test_table_solver_agrees_with_bruteforce(rem, lam, wait):
+    """The precomputed-grid solver is Algorithm 1, vectorized."""
+    tab = SolverTable(PERF)
+    d1 = solve_bruteforce(rem, lam, PERF, initial_wait=wait)
+    d2 = tab.solve(rem, lam, initial_wait=wait)
+    assert (d1.c, d1.b, d1.feasible) == (d2.c, d2.b, d2.feasible)
+
+
+@given(budgets, lams, waits)
+@settings(max_examples=100, deadline=None)
+def test_quantized_memo_is_conservative(rem, lam, wait):
+    """Quantization floors budgets and ceils λ/wait, so when the exact
+    solver is feasible and the quantized one is too, the quantized
+    allocation is at least as large (never an optimistic under-provision).
+    """
+    memo = MemoizedSolver(PERF, budget_quantum=0.02, lam_quantum=0.5)
+    exact = solve_bruteforce(rem, lam, PERF, initial_wait=wait)
+    q = memo.solve(rem, lam, initial_wait=wait)
+    if exact.feasible and q.feasible:
+        assert q.c >= exact.c
+    if not exact.feasible:
+        # exact infeasible => the tighter quantized problem is too
+        assert not q.feasible
+
+
+def test_table_solver_fuzz_without_hypothesis():
+    """Seeded fuzz kept independent of hypothesis availability."""
+    tab = SolverTable(PERF)
+    rng = np.random.default_rng(0)
+    for _ in range(300):
+        n = int(rng.integers(0, 40))
+        rem = np.sort(rng.uniform(0.0, 3.0, n))
+        lam = float(rng.uniform(0, 40))
+        iw = float(rng.uniform(0, 0.5))
+        d1 = solve_bruteforce(rem, lam, PERF, initial_wait=iw)
+        d2 = tab.solve(rem, lam, initial_wait=iw)
+        assert (d1.c, d1.b, d1.feasible) == (d2.c, d2.b, d2.feasible)
+
+
+def test_memo_cache_hits_on_repeated_states():
+    memo = MemoizedSolver(PERF, budget_quantum=0.01, lam_quantum=0.5)
+    for _ in range(5):
+        memo.solve([0.5, 0.7, 0.9], 12.3, initial_wait=0.01)
+    assert memo.misses == 1 and memo.hits == 4
+    assert memo.hit_rate == pytest.approx(0.8)

@@ -1,0 +1,93 @@
+"""Documentation integrity check (``make docs-check``).
+
+Two gates, both cheap enough for every verify run:
+
+1. **Link integrity** — every relative markdown link in README.md,
+   ARCHITECTURE.md and docs/*.md must resolve to an existing file
+   (fragments are stripped; http(s)/mailto links are skipped).
+2. **Docstring coverage** — every public class and function defined in
+   ``repro.serving.api`` (the serving contract surface) must carry a
+   docstring, as must the scenario registry's public surface.
+
+Exit code 0 when clean; 1 with a findings list otherwise.
+
+    PYTHONPATH=src python tools/docs_check.py
+"""
+from __future__ import annotations
+
+import inspect
+import re
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+DOC_FILES = [REPO / "README.md", REPO / "ARCHITECTURE.md",
+             *sorted((REPO / "docs").glob("*.md"))]
+# [text](target) — excluding images; target split from optional title
+_LINK = re.compile(r"(?<!\!)\[[^\]]+\]\(([^)\s]+)(?:\s+\"[^\"]*\")?\)")
+
+DOCSTRING_MODULES = ["repro.serving.api", "repro.serving.scenarios",
+                     "repro.serving.fastpath"]
+
+
+def check_links() -> list[str]:
+    problems = []
+    for doc in DOC_FILES:
+        if not doc.exists():
+            problems.append(f"{doc.relative_to(REPO)}: file missing")
+            continue
+        for m in _LINK.finditer(doc.read_text(encoding="utf-8")):
+            target = m.group(1)
+            if target.startswith(("http://", "https://", "mailto:", "#")):
+                continue
+            path = target.split("#", 1)[0]
+            if not path:
+                continue
+            resolved = (doc.parent / path).resolve()
+            if not resolved.exists():
+                problems.append(f"{doc.relative_to(REPO)}: broken link "
+                                f"-> {target}")
+    return problems
+
+
+def check_docstrings() -> list[str]:
+    problems = []
+    sys.path.insert(0, str(REPO / "src"))
+    for modname in DOCSTRING_MODULES:
+        try:
+            mod = __import__(modname, fromlist=["_"])
+        except Exception as e:           # pragma: no cover
+            problems.append(f"{modname}: import failed ({e!r})")
+            continue
+        if not (mod.__doc__ or "").strip():
+            problems.append(f"{modname}: missing module docstring")
+        for name, obj in vars(mod).items():
+            if name.startswith("_"):
+                continue
+            if not (inspect.isclass(obj) or inspect.isfunction(obj)):
+                continue
+            if getattr(obj, "__module__", None) != modname:
+                continue                 # re-exports are checked at home
+            if not (inspect.getdoc(obj) or "").strip():
+                problems.append(f"{modname}.{name}: public "
+                                f"{'class' if inspect.isclass(obj) else 'function'}"
+                                " missing docstring")
+    return problems
+
+
+def main() -> int:
+    problems = check_links() + check_docstrings()
+    if problems:
+        print("docs-check: FAILED")
+        for p in problems:
+            print(f"  - {p}")
+        return 1
+    n_links = sum(len(_LINK.findall(d.read_text(encoding='utf-8')))
+                  for d in DOC_FILES if d.exists())
+    print(f"docs-check: OK ({len(DOC_FILES)} docs, {n_links} links, "
+          f"{len(DOCSTRING_MODULES)} modules docstring-complete)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
