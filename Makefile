@@ -1,7 +1,7 @@
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: verify smoke fig4 bench throughput docs-check help
+.PHONY: verify smoke fig4 bench throughput token-bench docs-check help
 
 # tier-1 verification (the ROADMAP contract)
 # companions: `make docs-check` (doc gates) and `make throughput`
@@ -22,6 +22,11 @@ fig4:
 throughput:
 	$(PY) -m benchmarks.throughput_bench
 
+# 100k-request autoregressive continuous-batching benchmark + the
+# real-kernel TokenJaxBackend slice (tokens/s, TTFT p99, TBT violations)
+token-bench:
+	$(PY) -m benchmarks.token_serving_bench
+
 # doc link integrity + serving-API docstring coverage
 docs-check:
 	$(PY) tools/docs_check.py
@@ -35,5 +40,6 @@ help:
 	@echo "make smoke       - <30s end-to-end smoke, both backends"
 	@echo "make fig4        - the paper's headline study"
 	@echo "make throughput  - 1M-request control-plane benchmark (>=10x bar)"
+	@echo "make token-bench - 100k-request autoregressive serving benchmark"
 	@echo "make docs-check  - doc links + serving-API docstring coverage"
 	@echo "make bench       - full benchmark harness"

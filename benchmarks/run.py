@@ -13,7 +13,8 @@ import traceback
 from benchmarks import (ablation_bench, fig1_dynamic_slo, fig3_perf_model,
                         fig4_e2e, perf_iter, predictive_bench,
                         roofline_report, smoke, solver_bench,
-                        table1_latency_grid, throughput_bench)
+                        table1_latency_grid, throughput_bench,
+                        token_serving_bench)
 
 BENCHES = [
     ("smoke", smoke),
@@ -29,6 +30,9 @@ BENCHES = [
     # control-plane throughput: the 1M-request scenario through the fast
     # engine vs the pre-refactor loop (see benchmarks/throughput_bench.py)
     ("throughput", throughput_bench),
+    # autoregressive serving: 100k-request continuous batching + the
+    # real-kernel TokenJaxBackend slice (benchmarks/token_serving_bench.py)
+    ("token", token_serving_bench),
 ]
 
 

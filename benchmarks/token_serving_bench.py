@@ -1,0 +1,93 @@
+"""Token serving benchmark: the autoregressive continuous-batching path.
+
+Two measurements (ISSUE 3 acceptance):
+
+1. **Scale** — the ``llm-chat`` scenario at >= 100,000 autoregressive
+   requests through ``TokenFastSimRunner`` (struct-of-arrays decode
+   streams + token memoized solver).  Reports simulated tokens/s, TTFT
+   p50/p99, the per-token (TBT) deadline violation rate, engine
+   events/s, and the token-solver cache hit rate.  Asserts the run
+   actually sustains the 100k-request bar.
+2. **Real kernels** (skippable with ``--no-jax``) — a small slice of the
+   same scenario executed for real through ``TokenJaxBackend``: prefill
+   via the Pallas ``swa_prefill`` kernel, decode steps via the Pallas
+   ``decode_attention`` kernel, smollm-135m-reduced config, jitted per
+   (c, b).  Reports executed tokens and the same SLO metrics.
+
+    PYTHONPATH=src python -m benchmarks.token_serving_bench
+    PYTHONPATH=src python benchmarks/token_serving_bench.py \
+        --requests 200000 --no-jax
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+MIN_REQUESTS = 100_000
+
+
+def run(n_requests: int = 101_000, jax_requests: int = 12,
+        seed: int = 1) -> list[tuple[str, float, str]]:
+    from repro.serving.scenarios import run_scenario
+
+    t0 = time.perf_counter()
+    rep, stats = run_scenario("llm-chat", engine="fast",
+                              requests=n_requests, seed=seed)
+    wall = stats["run_wall_s"]
+    gen_s = time.perf_counter() - t0 - wall
+    hit = stats["solver"].get("hit_rate", 0.0)
+    print(f"llm-chat fast engine: {rep.n_requests:,} requests "
+          f"({rep.tokens_served:,} tokens) generated in {gen_s:.1f} s, "
+          f"served in {wall:.1f} s engine wall")
+    print(f"  tokens/s (sim)  : {rep.tokens_per_s:,.1f}")
+    print(f"  TTFT p50/p99    : {rep.ttft_p50*1e3:.1f} / "
+          f"{rep.ttft_p99*1e3:.1f} ms")
+    print(f"  TBT violations  : {rep.tbt_violation_rate*100:.4f}% of "
+          f"decode tokens")
+    print(f"  request viols   : {rep.violation_rate*100:.3f}%   "
+          f"avg_cores={rep.avg_cores:.2f}")
+    print(f"  engine          : {stats['events']:,} events "
+          f"= {stats['events']/max(wall,1e-9):,.0f} events/s, "
+          f"solver hit rate {hit*100:.1f}%")
+    assert rep.n_requests >= MIN_REQUESTS, \
+        f"only {rep.n_requests:,} autoregressive requests served " \
+        f"(bar: >= {MIN_REQUESTS:,})"
+    rows = [("token_fast", 1e6 * wall / max(stats["events"], 1),
+             f"tokens_per_s={rep.tokens_per_s:.0f};"
+             f"ttft_p99={rep.ttft_p99:.4f};"
+             f"tbt_viol={rep.tbt_violation_rate:.6f};"
+             f"hit_rate={hit:.3f}")]
+
+    if jax_requests > 0:
+        from repro.serving.token_backend import run_token_jax_scenario
+        rep, stats = run_token_jax_scenario("llm-chat",
+                                            requests=jax_requests,
+                                            seed=seed)
+        wall = stats["run_wall_s"]
+        print(f"llm-chat TokenJaxBackend ({stats['arch']}): "
+              f"{rep.n_requests} requests, "
+              f"{stats['tokens_executed']} real tokens in {wall:.1f} s")
+        print(f"  tokens/s (virtual): {rep.tokens_per_s:.2f}   "
+              f"TTFT p99: {rep.ttft_p99*1e3:.1f} ms   "
+              f"TBT violations: {rep.tbt_violation_rate*100:.2f}%")
+        rows.append(("token_jax",
+                     1e6 * wall / max(stats["tokens_executed"], 1),
+                     f"tokens={stats['tokens_executed']};"
+                     f"ttft_p99={rep.ttft_p99:.4f};"
+                     f"tbt_viol={rep.tbt_violation_rate:.6f}"))
+    return rows
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--requests", type=int, default=101_000)
+    ap.add_argument("--jax-requests", type=int, default=12)
+    ap.add_argument("--no-jax", action="store_true",
+                    help="skip the real-kernel TokenJaxBackend slice")
+    ap.add_argument("--seed", type=int, default=1)
+    args = ap.parse_args(argv)
+    run(args.requests, 0 if args.no_jax else args.jax_requests, args.seed)
+
+
+if __name__ == "__main__":
+    main()

@@ -87,6 +87,9 @@ class ModelConfig:
     use_pallas_decode: bool = False    # decode attention via the Pallas
                                        # flash-decode kernel (TPU; interpret
                                        # mode on CPU)
+    use_pallas_prefill: bool = False   # prefill attention via the Pallas
+                                       # swa_prefill kernel (full causal ==
+                                       # window >= S; serving path only)
     rwkv_chunked: bool = False         # chunked-parallel WKV6 for training
                                        # (vs per-step lax.scan)
     # --- numerics ------------------------------------------------------------

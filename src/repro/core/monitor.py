@@ -32,6 +32,12 @@ class RateEstimator:
             self._arrivals.popleft()
         if not self._arrivals:
             obs = 0.0
+        elif len(self._arrivals) == 1:
+            # single-arrival guard: the observed span collapses to ~0 at
+            # the first tick after an idle gap (the lone arrival may sit
+            # exactly at ``now``), so count/span would report a huge
+            # spurious rate; one arrival in the window is 1/window_s
+            obs = 1.0 / self.window_s
         else:
             span = min(self.window_s, max(now - self._arrivals[0], 1e-6))
             obs = len(self._arrivals) / span

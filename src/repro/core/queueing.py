@@ -59,6 +59,22 @@ class EDFQueue:
         """Vectorized ``snapshot_remaining``: sorted np.float64 budgets."""
         return _remaining_array(self._heap, now)
 
+    def token_snapshot(self, now: float):
+        """Token-aware solver input: ``(ttft_budgets, prompt_tokens,
+        tbt_min)`` with budgets EDF-sorted ascending, token counts
+        aligned to that order, and the tightest per-token SLO queued
+        (``inf`` when empty or all-fixed-work)."""
+        if not self._heap:
+            return (np.empty(0, np.float64), np.empty(0, np.float64),
+                    float("inf"))
+        dl = np.fromiter((item[0] for item in self._heap), np.float64,
+                         len(self._heap))
+        toks = np.fromiter((item[2].prompt_tokens for item in self._heap),
+                           np.float64, len(self._heap))
+        tbt = min(item[2].tbt_slo for item in self._heap)
+        order = np.argsort(dl, kind="stable")
+        return dl[order] - now, toks[order], float(tbt)
+
     def drop_expired(self, now: float) -> List[Request]:
         """Remove requests whose deadline already passed (counted as
         violations by the caller)."""
@@ -111,6 +127,43 @@ class FastEDFQueue:
 
     def snapshot_remaining(self, now: float) -> List[float]:
         return self.remaining_array(now).tolist()
+
+
+class TokenFastEDFQueue(FastEDFQueue):
+    """Fast-path EDF queue bound to a struct-of-arrays token workload.
+
+    ``bind`` attaches the workload's per-request ``prompt_tokens`` and
+    ``tbt_slo`` columns once; ``token_snapshot`` then assembles the
+    token-aware solver input (EDF-sorted budgets, aligned token counts,
+    tightest queued TBT) from the bare ``(deadline, index)`` heap with
+    three vectorized passes — the same no-objects discipline as
+    :class:`FastEDFQueue`.
+    """
+
+    def __init__(self):
+        super().__init__()
+        self._prompt_tokens: Optional[np.ndarray] = None
+        self._tbt: Optional[np.ndarray] = None
+
+    def bind(self, prompt_tokens: np.ndarray, tbt_slo: np.ndarray) -> None:
+        """Attach the workload columns the snapshots index into."""
+        self._prompt_tokens = np.asarray(prompt_tokens, np.float64)
+        self._tbt = np.asarray(tbt_slo, np.float64)
+
+    def token_snapshot(self, now: float):
+        """Same contract as ``EDFQueue.token_snapshot``."""
+        if not self._heap:
+            return (np.empty(0, np.float64), np.empty(0, np.float64),
+                    float("inf"))
+        assert self._prompt_tokens is not None, "bind() the workload first"
+        dl = np.fromiter((item[0] for item in self._heap), np.float64,
+                         len(self._heap))
+        idx = np.fromiter((item[1] for item in self._heap), np.int64,
+                          len(self._heap))
+        order = np.argsort(dl, kind="stable")
+        toks = self._prompt_tokens[idx[order]]
+        tbt = float(self._tbt[idx].min())
+        return dl[order] - now, toks, tbt
 
 
 class DynamicBatcher:

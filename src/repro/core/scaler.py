@@ -18,22 +18,29 @@ engine applies via in-place vertical scaling.
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Callable, List, Optional, Sequence
+from typing import Callable, List, Optional, Sequence, Union
 
 import numpy as np
 
+from repro.core.cost_model import CostModel, TokenCostModel
 from repro.core.perf_model import PerfModel
 from repro.core.queueing import EDFQueue
 from repro.core.slo import Decision
 from repro.core.solver import (DEFAULT_B, DEFAULT_C, MemoizedSolver,
-                               solve_bruteforce, solve_pruned)
+                               TokenMemoizedSolver, solve_bruteforce,
+                               solve_pruned, solve_token_bruteforce)
 
 
 @dataclass
 class SpongeScaler:
     """Conforms to ``repro.serving.api.SchedulingPolicy`` — a bare scaler
-    can be handed to the ScenarioRunner directly (the live engine does)."""
-    perf: PerfModel
+    can be handed to the ScenarioRunner directly (the live engine does).
+
+    ``perf`` may be a ``PerfModel`` or any fixed-work-capable
+    ``repro.core.cost_model.CostModel`` (they share the ``latency(b, c)``
+    / ``throughput(b, c)`` surface; the ``FixedWorkCostModel`` adapter is
+    decision-identical to its wrapped PerfModel by construction)."""
+    perf: Union[PerfModel, CostModel]
     name: str = "sponge"
     c_set: Sequence[int] = DEFAULT_C
     b_set: Sequence[int] = DEFAULT_B
@@ -90,5 +97,92 @@ class SpongeScaler:
                   else solve_pruned)
             d = fn(list(remaining), lam_eff, self.perf, self.c_set,
                    self.b_set, self.delta_pen, initial_wait=initial_wait)
+        self.decisions.append((now, d))
+        return d
+
+
+@dataclass
+class TokenSpongeScaler:
+    """The Sponge scaler over the token-level cost model (ISSUE 3).
+
+    Same control-loop role as :class:`SpongeScaler` — every adaptation
+    interval, read the queue snapshot + λ estimate, solve, emit a
+    Decision — but the snapshot is token-aware (per-request TTFT budgets
+    + prompt-token counts + the tightest per-token SLO, via
+    ``queue.token_snapshot``) and the solve runs the token-composition
+    Algorithm 1 (``repro.core.solver.TokenSolverTable`` behind a
+    ``TokenMemoizedSolver``; quanta 0 keep it exact).  The Decision's
+    ``b`` doubles as the decode-slot cap the continuous-batching engines
+    run at; ``predicted_tbt`` carries the solver's sustained decode-step
+    latency for telemetry.
+
+    Token-aware runners pass ``active_slots`` (running decode slots) and
+    ``tbt_budget`` (tightest per-token budget across queued *and*
+    running requests); plain runners may omit both — the scaler then
+    derives the TBT bound from the queue alone.
+    """
+    cost: TokenCostModel
+    name: str = "sponge-token"
+    c_set: Sequence[int] = DEFAULT_C
+    b_set: Sequence[int] = DEFAULT_B
+    adaptation_interval: float = 1.0
+    solver: str = "memo"                # memo (table+cache) | bruteforce
+    headroom: float = 0.05              # TTFT safety margin (seconds)
+    tbt_headroom: float = 0.0           # per-token safety margin (seconds)
+    lam_headroom: float = 1.05
+    budget_quantum: float = 0.0
+    lam_quantum: float = 0.0
+    token_quantum: int = 0
+    # decode-steps of slot-turnover drag per EDF prefill group; None =
+    # the cost model's mean decode length (a slot frees when its stream
+    # finishes) — see ``repro.core.solver.solve_token_bruteforce``
+    drag_steps: Optional[float] = None
+    decisions: List[tuple[float, Decision]] = field(default_factory=list)
+    _next_t: float = 0.0
+    _memo: Optional[TokenMemoizedSolver] = field(default=None, repr=False)
+
+    def due(self, now: float) -> bool:
+        """Adaptation-interval gate (same cadence rule as SpongeScaler)."""
+        return now + 1e-12 >= self._next_t
+
+    @property
+    def memo(self) -> TokenMemoizedSolver:
+        """The lazily built token memoized solver."""
+        if self._memo is None:
+            self._memo = TokenMemoizedSolver(
+                self.cost, self.c_set, self.b_set,
+                budget_quantum=self.budget_quantum,
+                lam_quantum=self.lam_quantum,
+                token_quantum=self.token_quantum)
+        return self._memo
+
+    def solver_stats(self) -> dict:
+        """Cache economics of the memo solver ({} before first use)."""
+        if self._memo is None:
+            return {}
+        return {"hits": self._memo.hits, "misses": self._memo.misses,
+                "hit_rate": self._memo.hit_rate}
+
+    def decide(self, now: float, queue, lam: float,
+               initial_wait: float = 0.0, active_slots: int = 0,
+               tbt_budget: Optional[float] = None) -> Decision:
+        """One adaptation step: snapshot, solve, log, return."""
+        self._next_t = now + self.adaptation_interval
+        rem, toks, queue_tbt = queue.token_snapshot(now)
+        remaining = np.maximum(rem - self.headroom, 0.0)
+        tbt = queue_tbt if tbt_budget is None else min(tbt_budget, queue_tbt)
+        if np.isfinite(tbt):
+            tbt = max(tbt - self.tbt_headroom, 0.0)
+        lam_eff = lam * self.lam_headroom
+        if self.solver == "bruteforce":
+            d = solve_token_bruteforce(
+                remaining, toks, lam_eff, self.cost, self.c_set, self.b_set,
+                initial_wait=initial_wait, tbt_budget=tbt,
+                active_slots=active_slots, drag_steps=self.drag_steps)
+        else:
+            d = self.memo.solve(remaining, toks, lam_eff,
+                                initial_wait=initial_wait, tbt_budget=tbt,
+                                active_slots=active_slots,
+                                drag_steps=self.drag_steps)
         self.decisions.append((now, d))
         return d

@@ -7,6 +7,16 @@ end-to-end SLO covers communication + queuing + processing (paper §3.3):
 
 so the *remaining* budget when the request reaches the server is SLO - cl —
 the dynamic-SLO quantity that varies with network bandwidth.
+
+Autoregressive extension (ISSUE 3): a request may additionally carry a
+token shape — ``prompt_tokens`` to prefill and ``decode_tokens`` to
+stream out — plus a per-token SLO ``tbt_slo`` (max gap between
+consecutive generated tokens).  For such requests ``deadline`` is the
+**TTFT** deadline (the dynamic-SLO budget gates the *first* token; the
+decode stream is gated per token), and the lifecycle gains
+``first_token`` / ``tbt_violations``.  The defaults (1 prompt token,
+0 decode tokens, infinite TBT) reproduce the paper's fixed-work request
+exactly, which is what keeps every pre-token code path bit-identical.
 """
 from __future__ import annotations
 
@@ -25,21 +35,42 @@ class Request:
     comm_latency: float = field(compare=False, default=0.0)
     slo: float = field(compare=False, default=1.0)
     size_kb: float = field(compare=False, default=200.0)
+    # token shape (fixed-work defaults: one-shot prefill, no decode)
+    prompt_tokens: int = field(compare=False, default=1)
+    decode_tokens: int = field(compare=False, default=0)
+    tbt_slo: float = field(compare=False, default=float("inf"))
     # lifecycle (filled by the system)
     start_proc: Optional[float] = field(compare=False, default=None)
+    first_token: Optional[float] = field(compare=False, default=None)
     finish: Optional[float] = field(compare=False, default=None)
+    tbt_violations: int = field(compare=False, default=0)
 
     @classmethod
     def make(cls, arrival: float, comm_latency: float, slo: float,
-             size_kb: float = 200.0) -> "Request":
+             size_kb: float = 200.0, prompt_tokens: int = 1,
+             decode_tokens: int = 0,
+             tbt_slo: float = float("inf")) -> "Request":
         return cls(deadline=arrival - comm_latency + slo, arrival=arrival,
-                   comm_latency=comm_latency, slo=slo, size_kb=size_kb)
+                   comm_latency=comm_latency, slo=slo, size_kb=size_kb,
+                   prompt_tokens=prompt_tokens, decode_tokens=decode_tokens,
+                   tbt_slo=tbt_slo)
 
     def remaining(self, now: float) -> float:
         return self.deadline - now
 
     @property
+    def is_autoregressive(self) -> bool:
+        return self.decode_tokens > 0
+
+    @property
     def violated(self) -> bool:
+        """Deadline miss: for fixed work the completion deadline; for an
+        autoregressive request the TTFT deadline (first token late) or
+        any per-token gap beyond ``tbt_slo``."""
+        if self.is_autoregressive:
+            late_first = (self.first_token is not None
+                          and self.first_token > self.deadline + 1e-9)
+            return late_first or self.tbt_violations > 0
         return self.finish is not None and self.finish > self.deadline + 1e-9
 
 
@@ -63,6 +94,10 @@ class Decision:
       memoized-solver cache hit reports the original miss's numbers.
     * ``n`` — replica target (1 for vertical-only policies).
     * ``scale_up_delay`` — seconds before *newly added* replicas serve.
+    * ``predicted_tbt`` — token-aware solvers only: the decode-step
+      latency the chosen (c, b) is predicted to sustain (b doubles as
+      the decode-slot cap on the continuous-batching engines); 0.0 for
+      fixed-work decisions.
     """
     c: int
     b: int
@@ -71,6 +106,7 @@ class Decision:
     solver_time: float = 0.0
     n: int = 1
     scale_up_delay: float = 0.0
+    predicted_tbt: float = 0.0
 
     @property
     def cost(self) -> float:

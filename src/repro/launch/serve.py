@@ -14,7 +14,11 @@ Three modes, one control plane (``repro.serving.api.SpongeServer``):
   (``repro.serving.scenarios``; see ``docs/scenarios.md``) through the
   million-request fast engine (or ``--engine exact`` for the object-based
   loop).  ``--requests N`` sizes the run by request count instead of
-  duration.
+  duration.  Token scenarios (``llm-chat``, ``llm-mixed-len``) run the
+  continuous-batching engines and report tokens/s, TTFT p99 and the
+  per-token violation rate; ``--engine jax`` serves a slice of them on
+  the **real Pallas kernels** (swa_prefill + decode_attention) through
+  ``repro.serving.token_backend.TokenJaxBackend``.
 
     PYTHONPATH=src python -m repro.launch.serve --mode live \
         --arch smollm-135m-reduced --rps 10 --duration 10
@@ -22,6 +26,10 @@ Three modes, one control plane (``repro.serving.api.SpongeServer``):
     PYTHONPATH=src python -m repro.launch.serve --scenario flash-crowd
     PYTHONPATH=src python -m repro.launch.serve --scenario steady \
         --requests 1000000
+    PYTHONPATH=src python -m repro.launch.serve --scenario llm-chat \
+        --requests 100000
+    PYTHONPATH=src python -m repro.launch.serve --scenario llm-chat \
+        --engine jax --requests 24
 """
 from __future__ import annotations
 
@@ -99,11 +107,24 @@ def run_live(args) -> dict:
 
 
 def run_scenario_mode(args) -> dict:
-    from repro.serving.scenarios import run_scenario
-    report, stats = run_scenario(
-        args.scenario, policy=args.policy, engine=args.engine,
-        duration=args.duration, rps=args.rps,
-        seed=args.seed, requests=args.requests)
+    if args.engine == "jax":
+        from repro.serving.token_backend import run_token_jax_scenario
+        if args.policy != "sponge":
+            raise SystemExit("--engine jax runs the sponge policy only "
+                             f"(got --policy {args.policy!r})")
+        if args.duration is not None:
+            raise SystemExit("--engine jax sizes the run by --requests, "
+                             "not --duration")
+        report, stats = run_token_jax_scenario(
+            args.scenario, requests=args.requests or 24, seed=args.seed,
+            arch=args.arch, prompt_len=args.prompt_len,
+            max_decode=args.gen_tokens, rps=args.rps)
+    else:
+        from repro.serving.scenarios import run_scenario
+        report, stats = run_scenario(
+            args.scenario, policy=args.policy, engine=args.engine,
+            duration=args.duration, rps=args.rps,
+            seed=args.seed, requests=args.requests)
     ev = stats["events"]
     dt = stats["run_wall_s"]            # engine time only (no generation)
     out = {"scenario": args.scenario, "engine": stats["engine"],
@@ -113,6 +134,11 @@ def run_scenario_mode(args) -> dict:
            "avg_cores": report.avg_cores,
            "events": ev, "events_per_s": ev / max(dt, 1e-9),
            "wall_s": dt}
+    if report.tokens_served:            # token scenarios: the ISSUE-3 bar
+        out.update(tokens_served=report.tokens_served,
+                   tokens_per_s=report.tokens_per_s,
+                   ttft_p50=report.ttft_p50, ttft_p99=report.ttft_p99,
+                   tbt_violation_rate=report.tbt_violation_rate)
     if "solver" in stats:
         out["solver_hit_rate"] = stats["solver"].get("hit_rate")
     print(json.dumps(out, indent=1, default=float))
@@ -133,9 +159,11 @@ def main(argv=None):
         scenario_help = "registered workload scenario"
     ap.add_argument("--scenario", default=None,
                     help=f"run a registered scenario ({scenario_help})")
-    ap.add_argument("--engine", choices=("fast", "exact"), default="fast",
-                    help="scenario mode: struct-of-arrays fast engine or "
-                         "the object-based exact loop")
+    ap.add_argument("--engine", choices=("fast", "exact", "jax"),
+                    default="fast",
+                    help="scenario mode: struct-of-arrays fast engine, "
+                         "the object-based exact loop, or (token "
+                         "scenarios) the real-kernel TokenJaxBackend")
     ap.add_argument("--requests", type=int, default=None,
                     help="scenario mode: size the run by request count")
     ap.add_argument("--arch", default="smollm-135m-reduced")

@@ -177,8 +177,20 @@ def _attn_prefill(p, h, ctx, cfg, window, cache_size):
         q = attn._bp_constrain(q, mesh, bp_axes)
         k = attn._bp_constrain(k, mesh, bp_axes)
         v = attn._bp_constrain(v, mesh, bp_axes)
-    out = attn.blocked_attention(q, k, v, qp, qp, causal=True, window=window,
-                                 scale=d ** -0.5, cap=cfg.logit_softcap)
+    # Pallas swa_prefill kernel route (serving prefill): the kernel is
+    # causal-SWA, so full attention is window >= S; usable when nothing
+    # needs the pure-jnp path's extras (softcap, batch-parallel shards,
+    # non-divisible block shapes)
+    if (cfg.use_pallas_prefill and cfg.logit_softcap == 0
+            and bp_axes is None and (s <= 256 or s % 256 == 0)):
+        from repro.kernels.swa_prefill.ops import swa_prefill_attention
+        out = swa_prefill_attention(q, k, v,
+                                    window=window if window > 0 else s,
+                                    block=min(256, s))
+    else:
+        out = attn.blocked_attention(q, k, v, qp, qp, causal=True,
+                                     window=window, scale=d ** -0.5,
+                                     cap=cfg.logit_softcap)
     if bp_axes:
         out = attn._bp_constrain(out, mesh, bp_axes)
     y = linear(out.reshape(b, s, hh * d), p["wo"])

@@ -91,6 +91,15 @@ def round_up_c(c_set: Sequence[int], c: int) -> int:
     return min(up) if up else max(c_set)
 
 
+def resolve_decision(c_set: Sequence[int], d: Decision) -> Tuple[int, int]:
+    """The ONE decision-application rule shared by every engine: ``c``
+    rounds *up* to the nearest available entry (a feasible Decision must
+    never be weakened — the PR 1 fix), ``b`` is floored at 1.  Both the
+    object-based runner and the struct-of-arrays fast paths resolve
+    through this helper so the rule cannot drift between engines."""
+    return round_up_c(c_set, d.c), max(1, int(d.b))
+
+
 # --------------------------------------------------------------------------
 # server slots (shared by both backends)
 # --------------------------------------------------------------------------
@@ -157,7 +166,7 @@ class _PooledBackend:
 
     # -- decision application (vertical + horizontal) ----------------------
     def apply(self, d: Decision, now: float) -> None:
-        c = round_up_c(self.c_set, d.c)
+        c, _ = resolve_decision(self.c_set, d)
         for srv in self.pool:
             penalty = srv.instance.resize(c, now)
             if penalty:
@@ -184,6 +193,65 @@ class SimBackend(_PooledBackend):
     def execute(self, batch: List[Request], c: int, b: int,
                 now: float) -> float:
         return now + float(self.perf.latency(b, c))
+
+
+class TokenSimBackend(_PooledBackend):
+    """Discrete-event *continuous-batching* execution over a token-level
+    cost model (``repro.core.cost_model.TokenCostModel``).
+
+    A dispatched gang is served phase-aware: one prefill burst covering
+    every prompt (each request's **first token** — its TTFT — lands when
+    the burst finishes), then decode steps in which every live stream
+    gains one token and requests **leave the running batch as their
+    streams finish** (step latency tracks the shrinking slot count, per
+    the token cost model).  Per-request ``first_token`` / ``finish`` /
+    ``tbt_violations`` are written here — the runner keeps whatever the
+    backend recorded — and the slot frees when the last stream drains.
+
+    The cost model also quacks like a PerfModel (full-service
+    ``latency(b, c)``), which is what the runner's slack-aware dispatch
+    and the pooled-slot bookkeeping consume.  True join-mid-stream
+    continuous batching (new requests entering between decode steps of a
+    running gang) lives in the struct-of-arrays
+    ``repro.serving.fastpath.TokenFastSimRunner``; this backend keeps
+    the object-based exact loop intact for token workloads.
+    """
+
+    name = "token-sim"
+
+    def __init__(self, cost, c_set: Sequence[int], b_set: Sequence[int],
+                 c0: int = 1, resize_penalty: float = 0.005):
+        super().__init__(cost, c_set, b_set, c0=c0,
+                         resize_penalty=resize_penalty)
+        self.cost = cost
+        self.tokens_served = 0
+
+    def execute(self, batch: List[Request], c: int, b: int,
+                now: float) -> float:
+        total_prompt = sum(r.prompt_tokens for r in batch)
+        t = now + float(self.cost.prefill_latency(c, total_prompt))
+        live: List[tuple[Request, int]] = []
+        for r in batch:
+            r.first_token = t
+            self.tokens_served += 1          # the prefill's first token
+            if r.decode_tokens > 0:
+                live.append((r, r.decode_tokens))
+            else:
+                r.finish = t
+        while live:
+            l_d = float(self.cost.decode_latency(c, len(live)))
+            t += l_d
+            nxt: List[tuple[Request, int]] = []
+            for r, remaining in live:
+                if l_d > r.tbt_slo + 1e-12:
+                    r.tbt_violations += 1
+                self.tokens_served += 1
+                if remaining - 1 > 0:
+                    nxt.append((r, remaining - 1))
+                else:
+                    r.finish = t
+            live = nxt
+        return t
 
 
 @dataclass
@@ -294,6 +362,15 @@ class RunReport:
       one (None otherwise).
     * ``buckets`` — per dispatched batch: ``(dispatch_time, cores,
       batch_bucket, actual_batch_len)``.
+
+    Token-serving extras (zero/NaN on fixed-work runs):
+
+    * ``tokens_served`` / ``tokens_per_s`` — generated tokens (first
+      token + decode stream) and their rate over the horizon.
+    * ``ttft_p50`` / ``ttft_p99`` — time-to-first-token percentiles
+      measured from client send time, seconds.
+    * ``tbt_violation_rate`` — fraction of decode tokens whose gap from
+      the previous token exceeded the request's per-token SLO.
     """
     policy: str
     backend: str
@@ -308,6 +385,11 @@ class RunReport:
     core_timeline: List[tuple]
     decisions: Optional[List[tuple]]
     buckets: List[tuple]
+    tokens_served: int = 0
+    tokens_per_s: float = 0.0
+    ttft_p50: float = float("nan")
+    ttft_p99: float = float("nan")
+    tbt_violation_rate: float = 0.0
 
     def __getitem__(self, key: str):
         return getattr(self, key)
@@ -388,7 +470,8 @@ class ScenarioRunner:
         self.b = max(1, int(b))
 
     def apply_decision(self, d: Decision, now: float) -> None:
-        self.set_batch(d.b)
+        _, b = resolve_decision(self.backend.c_set, d)
+        self.set_batch(b)
         self.backend.apply(d, now)
 
     def drive(self, policy, now: float) -> None:
@@ -509,7 +592,8 @@ class ScenarioRunner:
                                         len(batch)))
                 for r in batch:
                     r.start_proc = t
-                    r.finish = fin
+                    if r.finish is None:   # phase-aware backends record
+                        r.finish = fin     # per-request finishes themselves
                     self.monitor.observe_completion(r)
                 heapq.heappush(events, (fin, next(seq), "free", srv.id))
 
@@ -521,6 +605,20 @@ class ScenarioRunner:
         if decisions is None:
             decisions = getattr(getattr(self.policy, "scaler", None),
                                 "decisions", None)
+        token_kw = {}
+        streamed = [r for r in mon.completed if r.first_token is not None]
+        if streamed:
+            ttft = sorted(r.first_token - (r.arrival - r.comm_latency)
+                          for r in streamed)
+            tokens = sum(1 + r.decode_tokens for r in streamed)
+            dec_tokens = sum(r.decode_tokens for r in streamed)
+            tbt_viol = sum(r.tbt_violations for r in streamed)
+            token_kw = dict(
+                tokens_served=tokens,
+                tokens_per_s=tokens / max(horizon, 1e-9),
+                ttft_p50=ttft[min(int(0.50 * len(ttft)), len(ttft) - 1)],
+                ttft_p99=ttft[min(int(0.99 * len(ttft)), len(ttft) - 1)],
+                tbt_violation_rate=tbt_viol / max(dec_tokens, 1))
         return RunReport(
             policy=getattr(self.policy, "name", type(self.policy).__name__),
             backend=getattr(self.backend, "name", "?"),
@@ -534,6 +632,7 @@ class ScenarioRunner:
             core_timeline=self.core_samples,
             decisions=decisions,
             buckets=self.bucket_log,
+            **token_kw,
         )
 
 

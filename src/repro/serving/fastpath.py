@@ -40,10 +40,11 @@ from typing import Dict, List, Optional
 
 import numpy as np
 
+from repro.core.cost_model import Composition, TokenCostModel
 from repro.core.perf_model import PerfModel
-from repro.core.queueing import FastEDFQueue
+from repro.core.queueing import FastEDFQueue, TokenFastEDFQueue
 from repro.core.solver import DEFAULT_B, DEFAULT_C
-from repro.serving.api import RunReport, round_up_c
+from repro.serving.api import RunReport, resolve_decision, round_up_c
 from repro.serving.workload import RequestBatch
 
 
@@ -130,7 +131,10 @@ class FastSimRunner:
 
     def _rate(self, now: float) -> float:
         """Sliding-window λ with deploy-prior blend — same estimate as
-        ``RateEstimator`` via two pointers over the arrival array."""
+        ``RateEstimator`` via two pointers over the arrival array,
+        including the single-arrival guard (a lone arrival at the first
+        tick after an idle gap gives a ~zero-length window; dividing by
+        it would report a million-rps spike and over-provision)."""
         arr, ai = self._arr, self._ai
         w0 = self._w0
         lo = now - self.rate_window
@@ -139,6 +143,8 @@ class FastSimRunner:
         self._w0 = w0
         if ai == w0:
             obs = 0.0
+        elif ai - w0 == 1:
+            obs = 1.0 / self.rate_window
         else:
             span = min(self.rate_window, max(now - arr[w0], 1e-6))
             obs = (ai - w0) / span
@@ -159,8 +165,7 @@ class FastSimRunner:
         self._apply(d, now)
 
     def _apply(self, d, now: float) -> None:
-        c = round_up_c(self.c_set, d.c)
-        self.b = max(1, int(d.b))
+        c, self.b = resolve_decision(self.c_set, d)
         pen = self.resize_penalty
         for s in self.slots:
             s.account(now)
@@ -315,4 +320,266 @@ class FastSimRunner:
             core_timeline=self.core_samples,
             decisions=decisions,
             buckets=self.bucket_log,
+        )
+
+
+class TokenFastSimRunner(FastSimRunner):
+    """Continuous-batching decode streams on the struct-of-arrays engine.
+
+    The autoregressive extension of :class:`FastSimRunner` (ISSUE 3):
+    the workload is a token-shaped ``RequestBatch`` (``prompt_tokens`` /
+    ``decode_tokens`` / ``tbt_slo`` columns) and the single vertically
+    scaled instance runs a **decode stream** with true continuous
+    batching — between consecutive engine steps, requests *join* the
+    running batch (their prompts prefill as part of the next step, first
+    token = TTFT at the step boundary) and *leave* it the moment their
+    stream completes, with per-slot token counters in plain arrays and
+    step latency from the token cost model's composition surface
+    (``step_latency(c, (prefill_tokens, decode_slots))``).
+
+    Scheduling semantics:
+
+    * admission is greedy EDF: whenever the running batch has free slots
+      (``Decision.b`` is the slot cap) the earliest-deadline waiting
+      requests join the next step — continuous batching does not hold
+      prompts back to fill buckets;
+    * the engine never idles while streams run: the next step starts at
+      the previous step's boundary; with no work it sleeps until the
+      next arrival;
+    * in-place vertical resizes (and their penalty) take effect at the
+      next step boundary — a step in flight finishes at the old c;
+    * per-token SLOs are checked per step: a running slot's token gap is
+      the distance between consecutive step boundaries, so a step longer
+      than the slot's ``tbt_slo`` counts one violation for that slot.
+
+    This runner is single-instance (the paper's Sponge mechanism);
+    horizontal ``Decision.n`` targets are ignored.  It sustains >=100k
+    autoregressive requests per run (``benchmarks/token_serving_bench``).
+    """
+
+    def __init__(self, policy, cost: TokenCostModel,
+                 c_set=DEFAULT_C, b_set=DEFAULT_B, *, c0: int = 1,
+                 tick: float = 1.0, resize_penalty: float = 0.005,
+                 prior_rps: float = 0.0, rate_window: float = 5.0):
+        super().__init__(policy, cost, c_set, b_set, c0=c0, tick=tick,
+                         resize_penalty=resize_penalty,
+                         prior_rps=prior_rps, rate_window=rate_window)
+        self.cost = cost
+        self.queue = TokenFastEDFQueue()
+        self._pending_penalty = 0.0
+
+    def _apply(self, d, now: float) -> None:
+        """In-place vertical resize; the penalty lands on the next step."""
+        c, self.b = resolve_decision(self.c_set, d)
+        s = self.slots[0]
+        s.account(now)
+        if s.c != c:
+            s.c = c
+            self._pending_penalty += self.resize_penalty
+
+    def drive(self, policy, now: float, active_slots: int = 0,
+              tbt_budget: float = float("inf"),
+              initial_wait: float = 0.0) -> None:
+        """One adaptation step over the token-aware decide protocol."""
+        due = policy.due(now) if hasattr(policy, "due") else True
+        if not due:
+            return
+        lam = self._rate(now)
+        d = policy.decide(now, self.queue, lam, initial_wait=initial_wait,
+                          active_slots=active_slots, tbt_budget=tbt_budget)
+        self._apply(d, now)
+
+    # -- the loop ----------------------------------------------------------
+    def run(self, batch: RequestBatch,
+            horizon: Optional[float] = None) -> RunReport:
+        arr = np.ascontiguousarray(batch.arrival, np.float64)
+        dl = np.ascontiguousarray(batch.deadline, np.float64)
+        ptoks = np.ascontiguousarray(batch.prompt_tokens, np.int64)
+        dtoks = np.ascontiguousarray(batch.decode_tokens, np.int64)
+        tbts = np.ascontiguousarray(batch.tbt_slo, np.float64)
+        n = arr.size
+        if n and np.any(np.diff(arr) < 0):
+            raise ValueError("RequestBatch must be sorted by arrival")
+        if horizon is None:
+            horizon = float(arr[-1]) + 60.0 if n else 60.0
+        self.queue.bind(ptoks, tbts)
+        first_tok = np.full(n, np.nan)
+        finish = np.full(n, np.nan)
+        tbt_bad = np.zeros(n, bool)
+        self._arr = arr
+        self._ai = 0
+        self._w0 = 0
+        policy = self.policy
+        queue = self.queue
+        cost = self.cost
+        slot = self.slots[0]
+        tick = self.tick
+        next_tick = 0.0
+        ai = 0
+        INF = float("inf")
+        n_events = 0
+        # running decode streams (slot cap <= max(b_set): plain lists)
+        run_idx: list[int] = []
+        run_rem: list[int] = []
+        run_tbt: list[float] = []
+        # the step in flight
+        step_end = INF
+        step_start = 0.0
+        step_admit: list[int] = []
+        step_decoders = 0
+        tokens_served = 0
+        decode_tokens_served = 0
+        tbt_viol_tokens = 0
+
+        def start_step(t0: float) -> float:
+            """Admit waiting requests, compose the step, return its end
+            (INF when there is no work to run).
+
+            Admission is EDF-ordered and **chunk-bounded**: the total
+            prefill tokens joining one step are capped by the cost
+            model's ``prefill_token_allowance`` for the tightest
+            per-token SLO among running streams, so a large joining
+            prompt cannot stall running decoders past their TBT budget
+            (the deferred prompt re-queues at the head and joins once
+            slots free up or the scaler raises c)."""
+            nonlocal step_admit, step_decoders, step_start
+            free = self.b - len(run_idx)
+            admit: list[int] = []
+            if free > 0 and queue._heap:
+                allowance = (cost.prefill_token_allowance(
+                    slot.c, len(run_idx), min(run_tbt))
+                    if run_tbt else INF)
+                total = 0
+                heap = queue._heap
+                while heap and len(admit) < free:
+                    i = heap[0][1]
+                    if total + ptoks[i] > allowance:
+                        break
+                    heapq.heappop(heap)
+                    admit.append(i)
+                    total += int(ptoks[i])
+            if not admit and not run_idx:
+                return INF
+            step_admit = admit
+            step_decoders = len(run_idx)
+            ptok = int(ptoks[admit].sum()) if admit else 0
+            l = cost.step_latency(slot.c,
+                                  Composition(ptok, step_decoders))
+            l += self._pending_penalty
+            self._pending_penalty = 0.0
+            step_start = t0
+            return t0 + l
+
+        while True:
+            ta = arr[ai] if ai < n else INF
+            tt = next_tick if next_tick <= horizon else INF
+            if ta <= tt and ta <= step_end:
+                t, kind = ta, 0
+            elif tt <= step_end:
+                t, kind = tt, 1
+            else:
+                t, kind = step_end, 2
+            if t == INF or t > horizon:
+                break
+            n_events += 1
+            if kind == 0:                        # arrival
+                queue.push(dl[ai], ai)
+                ai += 1
+                self._ai = ai
+            elif kind == 1:                      # adaptation tick
+                next_tick += tick
+                run_tbt_min = min(run_tbt) if run_tbt else INF
+                iw = max(step_end - t, 0.0) if step_end < INF else 0.0
+                self.drive(policy, t, active_slots=len(run_idx),
+                           tbt_budget=run_tbt_min, initial_wait=iw)
+                self.core_samples.append((t, slot.c))
+            else:                                # step boundary
+                gap = t - step_start
+                # one decode token per stream that ran this step (the
+                # first ``step_decoders`` entries; joins append later)
+                nxt_idx: list[int] = []
+                nxt_rem: list[int] = []
+                nxt_tbt: list[float] = []
+                for k in range(step_decoders):
+                    i = run_idx[k]
+                    tokens_served += 1
+                    decode_tokens_served += 1
+                    if gap > run_tbt[k] + 1e-12:
+                        tbt_viol_tokens += 1
+                        tbt_bad[i] = True
+                    if run_rem[k] > 1:
+                        nxt_idx.append(i)
+                        nxt_rem.append(run_rem[k] - 1)
+                        nxt_tbt.append(run_tbt[k])
+                    else:
+                        finish[i] = t
+                # first tokens (TTFT) for the requests admitted this step
+                for i in step_admit:
+                    first_tok[i] = t
+                    tokens_served += 1
+                    if dtoks[i] > 0:
+                        nxt_idx.append(i)
+                        nxt_rem.append(int(dtoks[i]))
+                        nxt_tbt.append(float(tbts[i]))
+                    else:
+                        finish[i] = t
+                run_idx, run_rem, run_tbt = nxt_idx, nxt_rem, nxt_tbt
+                step_admit = []
+                step_decoders = 0
+                step_end = start_step(t)
+            if step_end == INF and (queue._heap or run_idx):
+                step_end = start_step(t)
+
+        self.events_processed = n_events
+        return self._token_report(batch, first_tok, finish, tbt_bad,
+                                  tokens_served, decode_tokens_served,
+                                  tbt_viol_tokens, horizon)
+
+    # -- reporting ---------------------------------------------------------
+    def _token_report(self, batch: RequestBatch, first_tok: np.ndarray,
+                      finish: np.ndarray, tbt_bad: np.ndarray,
+                      tokens_served: int, decode_tokens_served: int,
+                      tbt_viol_tokens: int, horizon: float) -> RunReport:
+        """Vectorized aggregates over the token run."""
+        served = ~np.isnan(finish)
+        send = batch.arrival - batch.comm_latency
+        fin = finish[served]
+        n_req = int(served.sum())
+        ttft_late = first_tok[served] > batch.deadline[served] + 1e-9
+        viol = int((ttft_late | tbt_bad[served]).sum())
+        e2e = np.sort(fin - send[served])
+        ttft = np.sort(first_tok[served] - send[served])
+        nn = e2e.size
+
+        def p(a: np.ndarray, q: float) -> float:
+            if not a.size:
+                return float("nan")
+            return float(a[min(int(q * a.size), a.size - 1)])
+
+        core_s = 0.0
+        for s in self.slots + self.dead:
+            s.account(horizon)
+            core_s += s.core_seconds
+        decisions = getattr(self.policy, "decisions", None)
+        if decisions is None:
+            decisions = getattr(getattr(self.policy, "scaler", None),
+                                "decisions", None)
+        return RunReport(
+            policy=getattr(self.policy, "name", type(self.policy).__name__),
+            backend="token-sim-fast",
+            n_requests=n_req,
+            n_violations=viol,
+            violation_rate=viol / max(n_req, 1),
+            core_seconds=core_s,
+            avg_cores=core_s / max(horizon, 1e-9),
+            p50=p(e2e, 0.50), p99=p(e2e, 0.99),
+            mean_latency=float(e2e.sum()) / max(nn, 1),
+            core_timeline=self.core_samples,
+            decisions=decisions,
+            buckets=self.bucket_log,
+            tokens_served=tokens_served,
+            tokens_per_s=tokens_served / max(horizon, 1e-9),
+            ttft_p50=p(ttft, 0.50), ttft_p99=p(ttft, 0.99),
+            tbt_violation_rate=(tbt_viol_tokens
+                                / max(decode_tokens_served, 1)),
         )

@@ -24,6 +24,14 @@ Registered scenarios (see ``docs/scenarios.md`` for the full briefs):
   heterogeneous networks.
 * ``mixed-slo``      — three interleaved request classes (interactive /
   standard / batch) with different SLOs and payload sizes.
+* ``llm-chat``       — autoregressive chat serving: log-normal prompt /
+  decode token lengths, TTFT + per-token (TBT) SLOs, continuous
+  batching (``meta["token"] is True`` routes the run through the
+  token-level engines).
+* ``llm-mixed-len``  — chat traffic interleaved with long-document
+  requests (8x longer prompts, longer streams, looser SLOs) — batch
+  *composition* varies wildly, which is exactly what the token-level
+  cost model exists for.
 
 Adding a scenario: write a ``build(duration, rps, rng) ->
 (RequestBatch, meta)`` function, wrap it in :class:`Scenario`, decorate
@@ -38,11 +46,12 @@ from typing import Callable, Dict, Optional, Tuple
 
 import numpy as np
 
+from repro.core.cost_model import TokenCostModel
 from repro.core.perf_model import PerfModel, yolov5s_like
 from repro.core.solver import DEFAULT_B, DEFAULT_C
 from repro.network.latency import comm_latency_many
 from repro.network.traces import synth_4g_trace, synth_5g_trace
-from repro.serving.workload import RequestBatch
+from repro.serving.workload import RequestBatch, lognormal_lengths
 
 
 @dataclass(frozen=True)
@@ -231,6 +240,75 @@ register(Scenario(
 
 
 # --------------------------------------------------------------------------
+# autoregressive (token-level) scenarios — ISSUE 3
+# --------------------------------------------------------------------------
+def _token_meta(batch: RequestBatch, rps: float, trace, slo: float,
+                tbt: float) -> dict:
+    """Shared meta for token scenarios: the cost model's mean request
+    shape is calibrated to the *generated* length distributions."""
+    cost = TokenCostModel.smollm_like(
+        mean_prompt=float(batch.prompt_tokens.mean()),
+        mean_decode=float(batch.decode_tokens.mean()))
+    return {"slo": slo, "expected_rps": rps, "trace": trace,
+            "token": True, "cost": cost, "tbt": tbt, "tick": 0.25}
+
+
+def _build_llm_chat(duration, rps, rng):
+    seed = int(rng.integers(2**31))
+    trace = synth_4g_trace(_trace_seconds(duration), seed=seed)
+    send = poisson_times(rps, duration, rng)
+    n = send.size
+    prompt = lognormal_lengths(rng, n, median=64, sigma=0.7, lo=8, hi=512)
+    decode = lognormal_lengths(rng, n, median=24, sigma=0.6, lo=1, hi=128)
+    # chat payloads are small: ~8 bytes per prompt token on the wire
+    sizes = np.maximum(prompt * 0.008, 1.0)
+    cl = comm_latency_many(sizes, trace, send)
+    batch = RequestBatch.from_send(send, cl, slo=1.0, size_kb=sizes,
+                                   prompt_tokens=prompt,
+                                   decode_tokens=decode, tbt_slo=0.08)
+    return batch, _token_meta(batch, rps, trace, slo=1.0, tbt=0.08)
+
+
+register(Scenario(
+    name="llm-chat",
+    summary="autoregressive chat: log-normal prompt/decode lengths, "
+            "1s TTFT + 80ms TBT SLOs, continuous batching",
+    build=_build_llm_chat, default_rps=25.0, default_duration=600.0))
+
+
+def _build_llm_mixed_len(duration, rps, rng):
+    seed = int(rng.integers(2**31))
+    trace = synth_4g_trace(_trace_seconds(duration), seed=seed)
+    send = poisson_times(rps, duration, rng)
+    n = send.size
+    is_doc = rng.uniform(0.0, 1.0, n) < 0.25
+    prompt = np.where(
+        is_doc,
+        lognormal_lengths(rng, n, median=384, sigma=0.4, lo=128, hi=1024),
+        lognormal_lengths(rng, n, median=48, sigma=0.5, lo=8, hi=256))
+    decode = np.where(
+        is_doc,
+        lognormal_lengths(rng, n, median=48, sigma=0.5, lo=8, hi=192),
+        lognormal_lengths(rng, n, median=16, sigma=0.5, lo=1, hi=64))
+    slo = np.where(is_doc, 2.5, 0.8)            # TTFT budgets
+    tbt = np.where(is_doc, 0.15, 0.06)          # per-token budgets
+    sizes = np.maximum(prompt * 0.008, 1.0)
+    cl = comm_latency_many(sizes, trace, send)
+    batch = RequestBatch.from_send(send, cl, slo=slo, size_kb=sizes,
+                                   prompt_tokens=prompt,
+                                   decode_tokens=decode, tbt_slo=tbt)
+    meta = _token_meta(batch, rps, trace, slo=0.8, tbt=0.06)
+    return batch, meta
+
+
+register(Scenario(
+    name="llm-mixed-len",
+    summary="chat + long-document mix (8x prompt spread, per-class "
+            "TTFT/TBT SLOs) — batch composition varies wildly",
+    build=_build_llm_mixed_len, default_rps=18.0, default_duration=600.0))
+
+
+# --------------------------------------------------------------------------
 # building + running
 # --------------------------------------------------------------------------
 def build_scenario(name: str, *, duration: Optional[float] = None,
@@ -277,6 +355,12 @@ def run_scenario(name: str, *, policy: str = "sponge",
                                  seed=seed, requests=requests)
     # a scenario with sub-second SLOs recommends its adaptation cadence
     tick = tick if tick is not None else meta.get("tick", 1.0)
+    if meta.get("token"):
+        return _run_token_scenario(batch, meta, policy=policy,
+                                   engine=engine, c_set=c_set, b_set=b_set,
+                                   c0=c0, tick=tick, horizon=horizon,
+                                   budget_quantum=budget_quantum,
+                                   lam_quantum=lam_quantum, **policy_kw)
     common = dict(slo=meta["slo"], expected_rps=meta["expected_rps"],
                   adaptation_interval=tick)
     if engine == "fast":
@@ -309,3 +393,54 @@ def run_scenario(name: str, *, policy: str = "sponge",
                     "events": server.runner.events_processed,
                     "run_wall_s": time.perf_counter() - t0,
                     "meta": meta}
+
+
+def _run_token_scenario(batch: RequestBatch, meta: dict, *, policy: str,
+                        engine: str, c_set, b_set, c0: int, tick: float,
+                        horizon, budget_quantum: float, lam_quantum: float,
+                        token_quantum: int = 16, **policy_kw):
+    """Token-scenario execution: the continuous-batching engines.
+
+    ``engine="fast"`` — :class:`repro.serving.fastpath.TokenFastSimRunner`
+    (struct-of-arrays decode streams, the >=100k-request path) with the
+    quantized :class:`repro.core.solver.TokenMemoizedSolver`;
+    ``engine="exact"`` — the object-based ``ScenarioRunner`` over a
+    gang-scheduled :class:`repro.serving.api.TokenSimBackend`.  Only the
+    ``sponge`` policy understands token compositions; ask for the real
+    kernel path via ``launch/serve.py --engine jax``.
+    """
+    import time
+    from repro.core.scaler import TokenSpongeScaler
+    from repro.serving.api import ScenarioRunner, TokenSimBackend
+    from repro.serving.fastpath import TokenFastSimRunner
+    if policy != "sponge":
+        raise ValueError(
+            f"token scenarios run the sponge policy only (got {policy!r}); "
+            "fixed-work baselines cannot see token compositions")
+    cost: TokenCostModel = meta["cost"]
+    scaler = TokenSpongeScaler(
+        cost, c_set=tuple(c_set), b_set=tuple(b_set),
+        adaptation_interval=tick, budget_quantum=budget_quantum,
+        lam_quantum=lam_quantum, token_quantum=token_quantum, **policy_kw)
+    if engine == "fast":
+        runner = TokenFastSimRunner(scaler, cost, c_set, b_set, c0=c0,
+                                    tick=tick,
+                                    prior_rps=meta["expected_rps"])
+        t0 = time.perf_counter()
+        report = runner.run(batch, horizon)
+        stats = {"engine": "fast", "events": runner.events_processed,
+                 "run_wall_s": time.perf_counter() - t0, "meta": meta,
+                 "solver": scaler.solver_stats()}
+        return report, stats
+    scaler.budget_quantum = 0.0
+    scaler.lam_quantum = 0.0
+    scaler.token_quantum = 0
+    backend = TokenSimBackend(cost, c_set, b_set, c0=c0)
+    runner = ScenarioRunner(scaler, backend, tick=tick)
+    runner.monitor.rate.prior_rps = meta["expected_rps"]
+    reqs = batch.to_requests()
+    t0 = time.perf_counter()
+    report = runner.run(reqs, horizon)
+    return report, {"engine": "exact",
+                    "events": runner.events_processed,
+                    "run_wall_s": time.perf_counter() - t0, "meta": meta}

@@ -177,3 +177,64 @@ def test_memo_cache_hits_on_repeated_states():
         memo.solve([0.5, 0.7, 0.9], 12.3, initial_wait=0.01)
     assert memo.misses == 1 and memo.hits == 4
     assert memo.hit_rate == pytest.approx(0.8)
+
+
+# --------------------------------------------------------------------------
+# CostModel fixed-work identity (ISSUE 3): the FixedWorkCostModel adapter
+# must reproduce PerfModel decisions bit-identically through all three
+# loops — the refactor's "provably decision-identical special case".
+# --------------------------------------------------------------------------
+from repro.core.cost_model import FixedWorkCostModel, as_cost_model
+
+COST = FixedWorkCostModel(PERF)
+
+
+def test_fixed_work_adapter_latency_floats_identical():
+    import numpy as np
+    bs, cs = np.arange(1, 17), np.arange(1, 17)
+    bb, cc = np.meshgrid(bs, cs, indexing="ij")
+    assert np.array_equal(COST.batch_latency(bb, cc), PERF.latency(bb, cc))
+    assert np.array_equal(COST.latency(bb, cc), PERF.latency(bb, cc))
+    assert np.array_equal(COST.throughput(bb, cc), PERF.throughput(bb, cc))
+    assert np.array_equal(COST.prefill_latency(cc, bb),
+                          PERF.latency(bb, cc))
+    assert as_cost_model(PERF) == COST
+    assert as_cost_model(COST) is COST
+
+
+@pytest.mark.parametrize("solver", ["bruteforce", "memo"])
+@pytest.mark.parametrize("seed", [3, 11])
+def test_cost_model_adapter_identical_across_all_loops(solver, seed):
+    """scaler(FixedWorkCostModel(perf)) == scaler(perf) through the
+    reference loop, the streamed ScenarioRunner and the fast path."""
+    batch = _batch(seed=seed)
+    ref = _run_reference(_policy("sponge"), batch.to_requests())
+
+    def cost_policy():
+        return SpongePolicy(SpongeScaler(COST, solver=solver))
+
+    ref_cost = _run_reference(cost_policy(), batch.to_requests())
+    assert _sig(ref_cost) == _sig(ref)
+
+    new = ScenarioRunner(cost_policy(),
+                         SimBackend(COST, DEFAULT_C, DEFAULT_B, c0=16))
+    new.monitor.rate.prior_rps = 20
+    assert _sig(new.run(batch.to_requests())) == _sig(ref)
+
+    fast = FastSimRunner(cost_policy(), COST, DEFAULT_C, DEFAULT_B,
+                         c0=16, prior_rps=20)
+    assert _sig(fast.run(batch)) == _sig(ref)
+
+
+@given(st.integers(0, 2**16), st.floats(8.0, 30.0),
+       st.integers(30, 70))
+@settings(max_examples=10, deadline=None)
+def test_cost_model_identity_property(seed, rps, duration):
+    """Hypothesis sweep of the adapter identity on the fast path: any
+    workload, bit-identical decisions/buckets/core-seconds."""
+    batch = _batch(seed=seed, rps=rps, duration=duration)
+    a = FastSimRunner(_policy("sponge"), PERF, DEFAULT_C, DEFAULT_B,
+                      c0=16, prior_rps=rps)
+    b = FastSimRunner(SpongePolicy(SpongeScaler(COST)), COST,
+                      DEFAULT_C, DEFAULT_B, c0=16, prior_rps=rps)
+    assert _sig(a.run(batch)) == _sig(b.run(batch))

@@ -27,7 +27,8 @@ DOC_FILES = [REPO / "README.md", REPO / "ARCHITECTURE.md",
 _LINK = re.compile(r"(?<!\!)\[[^\]]+\]\(([^)\s]+)(?:\s+\"[^\"]*\")?\)")
 
 DOCSTRING_MODULES = ["repro.serving.api", "repro.serving.scenarios",
-                     "repro.serving.fastpath"]
+                     "repro.serving.fastpath", "repro.core.cost_model",
+                     "repro.serving.token_backend"]
 
 
 def check_links() -> list[str]:
