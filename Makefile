@@ -1,13 +1,22 @@
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: verify smoke fig4 bench throughput token-bench docs-check help
+.PHONY: verify test-fast smoke fig4 bench throughput token-bench \
+	fleet-bench docs-check help
 
 # tier-1 verification (the ROADMAP contract)
 # companions: `make docs-check` (doc gates) and `make throughput`
 # (the million-request control-plane benchmark) — see `make help`
 verify:
 	$(PY) -m pytest -x -q
+
+# the fast tier-1 subset: control plane, solvers, scenarios, fleet —
+# no model builds, no kernel interpret-mode sweeps (a couple of minutes)
+test-fast:
+	$(PY) -m pytest -x -q tests/test_solver.py tests/test_solver_properties.py \
+		tests/test_queueing.py tests/test_network.py tests/test_perf_model.py \
+		tests/test_fastpath.py tests/test_scenarios.py tests/test_fleet.py \
+		tests/test_determinism.py
 
 # fast end-to-end smoke of the unified serving API on both backends (<30 s)
 smoke:
@@ -27,6 +36,11 @@ throughput:
 token-bench:
 	$(PY) -m benchmarks.token_serving_bench
 
+# 500k-request fleet benchmark: joint (n, c, b) scaling across >=8
+# replicas vs a static fleet (asserts the >=20% core-seconds bar)
+fleet-bench:
+	$(PY) -m benchmarks.fleet_bench
+
 # doc link integrity + serving-API docstring coverage
 docs-check:
 	$(PY) tools/docs_check.py
@@ -37,9 +51,11 @@ bench:
 
 help:
 	@echo "make verify      - tier-1 test suite (pytest)"
+	@echo "make test-fast   - fast tier-1 subset (control plane + solvers)"
 	@echo "make smoke       - <30s end-to-end smoke, both backends"
 	@echo "make fig4        - the paper's headline study"
 	@echo "make throughput  - 1M-request control-plane benchmark (>=10x bar)"
 	@echo "make token-bench - 100k-request autoregressive serving benchmark"
+	@echo "make fleet-bench - 500k-request fleet benchmark (>=20% savings bar)"
 	@echo "make docs-check  - doc links + serving-API docstring coverage"
 	@echo "make bench       - full benchmark harness"

@@ -11,7 +11,7 @@ import sys
 import traceback
 
 from benchmarks import (ablation_bench, fig1_dynamic_slo, fig3_perf_model,
-                        fig4_e2e, perf_iter, predictive_bench,
+                        fig4_e2e, fleet_bench, perf_iter, predictive_bench,
                         roofline_report, smoke, solver_bench,
                         table1_latency_grid, throughput_bench,
                         token_serving_bench)
@@ -33,6 +33,9 @@ BENCHES = [
     # autoregressive serving: 100k-request continuous batching + the
     # real-kernel TokenJaxBackend slice (benchmarks/token_serving_bench.py)
     ("token", token_serving_bench),
+    # fleet serving: 500k requests across >=8 replicas, joint (n, c, b)
+    # scaling vs a static fleet (benchmarks/fleet_bench.py)
+    ("fleet", fleet_bench),
 ]
 
 

@@ -9,6 +9,39 @@ from typing import Deque, List, Optional
 from repro.core.slo import Request
 
 
+def array_window_rate(arr, ai: int, w0: int, now: float,
+                      window_s: float, prior_rps: float
+                      ) -> tuple[float, int]:
+    """:class:`RateEstimator`'s estimate over a bare arrival array — the
+    ONE sliding-window λ shared by every struct-of-arrays engine
+    (``serving.fastpath`` and both ``serving.fleet`` runners resolve
+    through this helper, so the estimate cannot drift between engines).
+
+    ``arr`` is the (sorted) arrival-time column, ``ai`` the count of
+    arrivals observed so far, ``w0`` the caller-held left window pointer.
+    Returns ``(lambda, new_w0)``.  Semantics match ``RateEstimator``
+    exactly: the single-arrival guard (a lone arrival at the first tick
+    after an idle gap gives a ~zero-length window; dividing by it would
+    report a million-rps spike and over-provision) and the deploy-prior
+    blend that fades ``prior_rps`` out as the window fills.
+    """
+    lo = now - window_s
+    while w0 < ai and arr[w0] < lo:
+        w0 += 1
+    if ai == w0:
+        obs = 0.0
+    elif ai - w0 == 1:
+        obs = 1.0 / window_s
+    else:
+        span = min(window_s, max(now - arr[w0], 1e-6))
+        obs = (ai - w0) / span
+    if prior_rps <= 0:
+        return obs, w0
+    seen = max(now - arr[0], 0.0) if ai > 0 else 0.0
+    w = min(seen / window_s, 1.0)
+    return obs * w + prior_rps * (1.0 - w), w0
+
+
 class RateEstimator:
     """Sliding-window arrival-rate (lambda) estimate in requests/second.
 

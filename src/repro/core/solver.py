@@ -73,6 +73,8 @@ from repro.core.slo import Decision
 
 DEFAULT_C = tuple(range(1, 17))
 DEFAULT_B = tuple(range(1, 17))
+# fleet layer (ISSUE 4): feasible replica counts for the joint solver
+DEFAULT_N = tuple(range(1, 17))
 # TPU adaptation: feasible submesh degrees are powers of two (DESIGN.md §2)
 TPU_C = (1, 2, 4, 8, 16)
 TPU_B = (1, 2, 4, 8, 16)
@@ -265,32 +267,26 @@ class SolverTable:
                         solver_time=time.perf_counter() - t0)
 
 
-class MemoizedSolver:
-    """Decision cache in front of a :class:`SolverTable`.
+class _QuantizedDecisionCache:
+    """The conservative quantize-and-cache shell shared by every
+    memoized solver (fixed-work, token, joint fleet).
 
-    Inputs are quantized **conservatively** before solving and the result
-    is cached under the quantized signature ``(budget buckets, queue
-    length, λ bucket, wait bucket)``:
-
-    * remaining budgets are *floored* to ``budget_quantum`` — the cached
-      decision never assumes more slack than the live queue has;
-    * λ is *ceiled* to ``lam_quantum`` and ``initial_wait`` to
-      ``budget_quantum`` — the cached decision never assumes less load.
-
-    A cache hit returns the stored Decision verbatim (its ``solver_time``
-    and ``solver_iters`` describe the original miss).  With every quantum
-    at 0 the key is the exact input vector, so memoization cannot change
-    any decision — only deduplicate identical queue states.  ``hits`` /
-    ``misses`` / ``hit_rate`` expose the economics for the throughput
-    benchmark.
+    The bucketing rule is correctness-critical and lives HERE once: all
+    load-like inputs round *against* the caller — remaining budgets are
+    **floored** to ``budget_quantum`` (a cached decision never assumes
+    more slack than the live queue has), λ and ``initial_wait`` are
+    **ceiled** (never less load) — so a cache hit can over-provision but
+    can never admit a decision the exact constraint set rejects.  With
+    every quantum at 0 the key is the exact input and memoization cannot
+    change a decision, only deduplicate identical states.  Cache hits
+    return the stored Decision verbatim (``solver_time``/``solver_iters``
+    describe the original miss); ``hits``/``misses``/``hit_rate`` expose
+    the economics to the benchmarks.  Eviction is clear-on-full at
+    ``max_entries``.
     """
 
-    def __init__(self, perf: Union[PerfModel, CostModel],
-                 c_set: Sequence[int] = DEFAULT_C,
-                 b_set: Sequence[int] = DEFAULT_B,
-                 budget_quantum: float = 0.0, lam_quantum: float = 0.0,
-                 max_entries: int = 200_000):
-        self.table = SolverTable(perf, c_set, b_set)
+    def __init__(self, budget_quantum: float = 0.0,
+                 lam_quantum: float = 0.0, max_entries: int = 200_000):
         self.budget_quantum = float(budget_quantum)
         self.lam_quantum = float(lam_quantum)
         self.max_entries = max_entries
@@ -300,11 +296,12 @@ class MemoizedSolver:
 
     @property
     def hit_rate(self) -> float:
+        """Fraction of ``solve`` calls answered from the cache."""
         return self.hits / max(self.hits + self.misses, 1)
 
-    def solve(self, remaining_slos, lam: float,
-              initial_wait: float = 0.0) -> Decision:
-        rem = np.sort(np.asarray(remaining_slos, np.float64).ravel())
+    def _quantize(self, rem: np.ndarray, lam: float, initial_wait: float
+                  ) -> tuple[np.ndarray, float, float]:
+        """Floor budgets, ceil λ/wait to their quanta (0 = exact)."""
         bq, lq = self.budget_quantum, self.lam_quantum
         if bq > 0:
             rem = np.floor(rem / bq) * bq
@@ -312,17 +309,272 @@ class MemoizedSolver:
         else:
             iw = float(initial_wait)
         lam_q = float(np.ceil(lam / lq) * lq) if lq > 0 else float(lam)
-        key = (rem.tobytes(), lam_q, iw)
+        return rem, lam_q, iw
+
+    def _cached(self, key, compute) -> Decision:
+        """One hit/miss round trip; ``compute`` runs on a miss."""
         d = self.cache.get(key)
         if d is not None:
             self.hits += 1
             return d
         self.misses += 1
-        d = self.table.solve(rem, lam_q, initial_wait=iw)
+        d = compute()
         if len(self.cache) >= self.max_entries:
             self.cache.clear()
         self.cache[key] = d
         return d
+
+
+class MemoizedSolver(_QuantizedDecisionCache):
+    """Decision cache in front of a :class:`SolverTable` — the
+    :class:`_QuantizedDecisionCache` bucketing over the fixed-work
+    Algorithm 1 (the million-request scenario-engine configuration)."""
+
+    def __init__(self, perf: Union[PerfModel, CostModel],
+                 c_set: Sequence[int] = DEFAULT_C,
+                 b_set: Sequence[int] = DEFAULT_B,
+                 budget_quantum: float = 0.0, lam_quantum: float = 0.0,
+                 max_entries: int = 200_000):
+        super().__init__(budget_quantum, lam_quantum, max_entries)
+        self.table = SolverTable(perf, c_set, b_set)
+
+    def solve(self, remaining_slos, lam: float,
+              initial_wait: float = 0.0) -> Decision:
+        """Quantize conservatively, then cache per bucket signature."""
+        rem = np.sort(np.asarray(remaining_slos, np.float64).ravel())
+        rem, lam_q, iw = self._quantize(rem, lam, initial_wait)
+        return self._cached(
+            (rem.tobytes(), lam_q, iw),
+            lambda: self.table.solve(rem, lam_q, initial_wait=iw))
+
+
+# ---------------------------------------------------------------------------
+# joint horizontal + vertical scaling (ISSUE 4 — the fleet layer)
+# ---------------------------------------------------------------------------
+def joint_candidates(c_set: Sequence[int], b_set: Sequence[int],
+                     n_set: Sequence[int], replica_pen: float = 0.0):
+    """The joint search order: every ``(n, c, b)`` triple sorted by
+    ``(n*c + replica_pen*n, n, b)`` ascending — cheapest total core
+    allocation first, fewer replicas on ties (less management churn,
+    fewer cold starts), then smallest batch.  Returning the first
+    feasible candidate in this order makes the joint solve the
+    lexicographic optimum of the fleet IP (minimize total core-seconds
+    ``n*c``), exactly as Algorithm 1's (c, b) iteration order does for
+    the single-replica IP.
+
+    ``replica_pen`` charges each replica a fixed core-equivalent
+    overhead (control plane, weight duplication, cold-start exposure).
+    At 0 the objective is pure total cores — which systematically
+    prefers wide fleets of 1-core replicas (Amdahl makes low c the most
+    core-efficient) whose thin latency margins amplify routing
+    imbalance; a fraction of a core per replica restores the paper's
+    vertical-first behavior (scale up in place, go horizontal only when
+    the vertical axis saturates)."""
+    return sorted((n * c + replica_pen * n, n, b, c)
+                  for n in sorted(set(int(x) for x in n_set))
+                  for c in sorted(set(int(x) for x in c_set))
+                  for b in sorted(set(int(x) for x in b_set)))
+
+
+def solve_joint_bruteforce(remaining_slos: Sequence[float], lam: float,
+                           perf: Union[PerfModel, CostModel],
+                           c_set: Sequence[int] = DEFAULT_C,
+                           b_set: Sequence[int] = DEFAULT_B,
+                           n_set: Sequence[int] = DEFAULT_N,
+                           initial_wait: float = 0.0,
+                           replica_pen: float = 0.0) -> Decision:
+    """Algorithm 1 lifted to the fleet: pick ``(n, c, b)`` together.
+
+    A fleet of ``n`` replicas, each vertically scaled to ``c`` cores and
+    batching up to ``b``, drains the global EDF queue as a *striped*
+    split: the k-th tightest request lands on replica ``k mod n``, so
+    the fleet consumes EDF groups of ``n*b`` requests per batch round
+    and every round takes one batch latency ``l(b, c)``.  The
+    constraint set is therefore exactly Algorithm 1's with the group
+    size ``b`` replaced by ``n*b`` and throughput ``n · h(b, c)``:
+
+    * group i (0-indexed) finishes at ``initial_wait + (i+1)·l(b, c)``
+      and must meet its head request's remaining budget ``rem[i·n·b]``;
+    * sustained throughput ``n·b / l(b, c) >= λ``.
+
+    Candidates are searched in :func:`joint_candidates` order (total
+    cores ``n*c`` ascending), so the first feasible triple minimizes the
+    fleet's total core allocation.  With ``n_set=(1,)`` this degenerates
+    to :func:`solve_bruteforce` decision-for-decision (the reduction
+    ``tests/test_fleet.py`` property-checks).  The infeasible fallback
+    mirrors ``solve_bruteforce``: among λ-sustaining candidates, fewest
+    predicted violations, ties broken by fastest drain.
+    """
+    t0 = time.perf_counter()
+    rem = sorted(float(x) for x in remaining_slos)
+    n_req = len(rem)
+    iters = 0
+    best_fallback = None  # (key, n, c, b)
+    for _total, n, b, c in joint_candidates(c_set, b_set, n_set,
+                                            replica_pen):
+        iters += 1
+        l = float(perf.latency(b, c))
+        thr = n * float(perf.throughput(b, c))
+        if lam > 0 and thr < lam:
+            continue
+        g = n * b
+        ok = True
+        q_r = initial_wait
+        for i in range(0, max(n_req, 1), g):
+            budget = rem[i] if n_req else float("inf")
+            if l + q_r > budget:
+                ok = False
+                break
+            q_r += l
+            if n_req == 0:
+                break
+        if ok:
+            return Decision(c=c, b=b, n=n, feasible=True,
+                            solver_iters=iters,
+                            solver_time=time.perf_counter() - t0)
+        v = _predicted_violations(rem, l, g, initial_wait)
+        key = (v, -thr)
+        if best_fallback is None or key < best_fallback[0]:
+            best_fallback = (key, n, c, b)
+    if best_fallback is None:  # nothing sustains lam: max capacity config
+        n = max(n_set)
+        c = max(c_set)
+        b = max(b_set, key=lambda bb: float(perf.throughput(bb, c)))
+        best_fallback = ((n_req, 0.0), n, c, b)
+    _, n, c, b = best_fallback
+    return Decision(c=c, b=b, n=n, feasible=False, solver_iters=iters,
+                    solver_time=time.perf_counter() - t0)
+
+
+class JointSolverTable:
+    """Vectorized joint ``(n, c, b)`` Algorithm 1 over precomputed grids.
+
+    Shares the latency/throughput grids of a :class:`SolverTable` (they
+    depend only on ``(perf, c_set, b_set)``) and pre-sorts the joint
+    candidate order once (:func:`joint_candidates`).  ``solve`` answers
+    each query with one vectorized drain check per ``(n, b)`` pair over
+    all core counts at once; constraint set and fallback are exactly
+    :func:`solve_joint_bruteforce`'s, term for term, so the two agree
+    decision-for-decision (property-tested in ``tests/test_fleet.py``).
+
+    ``only_n`` pins the replica count — the hysteresis re-solve path
+    (``repro.serving.fleet.FleetSpongeScaler`` blocks a scale-down until
+    the target persists, re-solving ``(c, b)`` at the current fleet
+    size in the meantime).
+    """
+
+    def __init__(self, perf: Union[PerfModel, CostModel],
+                 c_set: Sequence[int] = DEFAULT_C,
+                 b_set: Sequence[int] = DEFAULT_B,
+                 n_set: Sequence[int] = DEFAULT_N,
+                 replica_pen: float = 0.0):
+        self.base = SolverTable(perf, c_set, b_set)
+        self.perf = perf
+        self.replica_pen = float(replica_pen)
+        self.ns = np.asarray(sorted(set(int(x) for x in n_set)), np.int64)
+        cands = joint_candidates(c_set, b_set, n_set, replica_pen)
+        self.order_n = np.asarray([n for _, n, _, _ in cands], np.int64)
+        self.order_b = np.asarray([b for _, _, b, _ in cands], np.int64)
+        self.order_c = np.asarray([c for _, _, _, c in cands], np.int64)
+        # map each ordered candidate to its (n, c, b) grid cell
+        n_pos = {int(n): i for i, n in enumerate(self.ns)}
+        c_pos = {int(c): i for i, c in enumerate(self.base.cs)}
+        b_pos = {int(b): j for j, b in enumerate(self.base.bs)}
+        self._flat = np.asarray(
+            [(n_pos[int(n)] * self.base.lat.size
+              + c_pos[int(c)] * len(self.base.bs) + b_pos[int(b)])
+             for _, n, b, c in cands], np.int64)
+        self.size = len(cands)
+
+    def solve(self, remaining_slos, lam: float, initial_wait: float = 0.0,
+              only_n: Optional[int] = None) -> Decision:
+        """Joint solve; same inputs/semantics as
+        :func:`solve_joint_bruteforce` (plus the ``only_n`` pin)."""
+        t0 = time.perf_counter()
+        rem = np.sort(np.asarray(remaining_slos, np.float64).ravel())
+        n_req = rem.size
+        lat, thr = self.base.lat, self.base.thr          # (C, B)
+        C, B = lat.shape
+        N = len(self.ns)
+        feas = np.ones((N, C, B), bool)
+        thr_n = self.ns[:, None, None] * thr[None]       # (N, C, B)
+        if lam > 0:
+            feas &= thr_n >= lam
+        sustain = feas.copy()
+        if n_req:
+            for i, n in enumerate(self.ns):
+                for j in range(B):
+                    g = int(n) * int(self.base.bs[j])
+                    heads = rem[::g]
+                    k = np.arange(1, heads.size + 1, dtype=np.float64)
+                    finish = initial_wait + lat[:, j, None] * k
+                    feas[i, :, j] &= (finish <= heads).all(axis=1)
+        ok = feas.reshape(-1)[self._flat]
+        if only_n is not None:
+            ok = ok & (self.order_n == only_n)
+        hit = np.flatnonzero(ok)
+        if hit.size:
+            i = int(hit[0])
+            return Decision(c=int(self.order_c[i]), b=int(self.order_b[i]),
+                            n=int(self.order_n[i]), feasible=True,
+                            solver_iters=self.size,
+                            solver_time=time.perf_counter() - t0)
+        # fallback: among λ-sustaining candidates, fewest predicted
+        # violations, then max fleet throughput, then candidate order
+        sus = sustain.reshape(-1)[self._flat]
+        if only_n is not None:
+            sus = sus & (self.order_n == only_n)
+        if sus.any():
+            viol = np.zeros((N, C, B), np.int64)
+            if n_req:
+                idx = np.arange(n_req, dtype=np.int64)
+                for i, n in enumerate(self.ns):
+                    for j in range(B):
+                        g = int(n) * int(self.base.bs[j])
+                        mult = (idx // g + 1).astype(np.float64)
+                        finish = initial_wait + lat[:, j, None] * mult
+                        viol[i, :, j] = (finish > rem).sum(axis=1)
+            key1 = np.where(sus, viol.reshape(-1)[self._flat]
+                            .astype(np.float64), np.inf)
+            cand = np.flatnonzero(key1 == key1.min())
+            thr_flat = thr_n.reshape(-1)[self._flat][cand]
+            i = int(cand[np.flatnonzero(thr_flat == thr_flat.max())[0]])
+            n, c, b = (int(self.order_n[i]), int(self.order_c[i]),
+                       int(self.order_b[i]))
+        else:   # nothing sustains lam: max capacity config
+            n = int(only_n if only_n is not None else self.ns[-1])
+            c = int(self.base.cs[-1])
+            j = int(np.argmax(self.base.thr[-1]))
+            b = int(self.base.bs[j])
+        return Decision(c=c, b=b, n=n, feasible=False,
+                        solver_iters=self.size,
+                        solver_time=time.perf_counter() - t0)
+
+
+class JointMemoizedSolver(_QuantizedDecisionCache):
+    """Quantized decision cache in front of a :class:`JointSolverTable`
+    — the shared :class:`_QuantizedDecisionCache` bucketing with the
+    replica pin ``only_n`` folded into the cache key."""
+
+    def __init__(self, perf: Union[PerfModel, CostModel],
+                 c_set: Sequence[int] = DEFAULT_C,
+                 b_set: Sequence[int] = DEFAULT_B,
+                 n_set: Sequence[int] = DEFAULT_N,
+                 budget_quantum: float = 0.0, lam_quantum: float = 0.0,
+                 replica_pen: float = 0.0, max_entries: int = 200_000):
+        super().__init__(budget_quantum, lam_quantum, max_entries)
+        self.table = JointSolverTable(perf, c_set, b_set, n_set,
+                                      replica_pen)
+
+    def solve(self, remaining_slos, lam: float, initial_wait: float = 0.0,
+              only_n: Optional[int] = None) -> Decision:
+        """Quantize conservatively, then cache per bucket signature."""
+        rem = np.sort(np.asarray(remaining_slos, np.float64).ravel())
+        rem, lam_q, iw = self._quantize(rem, lam, initial_wait)
+        return self._cached(
+            (rem.tobytes(), lam_q, iw, only_n),
+            lambda: self.table.solve(rem, lam_q, initial_wait=iw,
+                                     only_n=only_n))
 
 
 # ---------------------------------------------------------------------------
@@ -523,20 +775,19 @@ class TokenSolverTable:
                         predicted_tbt=l_d)
 
 
-class TokenMemoizedSolver:
+class TokenMemoizedSolver(_QuantizedDecisionCache):
     """Quantized decision cache in front of a :class:`TokenSolverTable`.
 
-    The conservative bucketing mirrors :class:`MemoizedSolver`, extended
-    to the token inputs:
+    The shared :class:`_QuantizedDecisionCache` bucketing, extended to
+    the token inputs with the same conservative direction:
 
-    * TTFT budgets *floored* and the TBT budget *floored* to
-      ``budget_quantum`` — cached decisions never assume more slack;
-    * prompt-token counts *ceiled* to ``token_quantum`` tokens and λ /
-      ``initial_wait`` ceiled — never less work, never less load.
+    * the TBT budget is *floored* to ``budget_quantum`` — cached
+      decisions never assume more per-token slack;
+    * prompt-token counts are *ceiled* to ``token_quantum`` tokens —
+      never less work.
 
-    With every quantum at 0 the key is the exact input and memoization
-    cannot change a decision.  ``hits`` / ``misses`` / ``hit_rate``
-    expose the cache economics (``benchmarks/token_serving_bench.py``).
+    ``hits`` / ``misses`` / ``hit_rate`` feed
+    ``benchmarks/token_serving_bench.py``.
     """
 
     def __init__(self, cost: TokenCostModel,
@@ -544,19 +795,9 @@ class TokenMemoizedSolver:
                  b_set: Sequence[int] = DEFAULT_B,
                  budget_quantum: float = 0.0, lam_quantum: float = 0.0,
                  token_quantum: int = 0, max_entries: int = 200_000):
+        super().__init__(budget_quantum, lam_quantum, max_entries)
         self.table = TokenSolverTable(cost, c_set, b_set)
-        self.budget_quantum = float(budget_quantum)
-        self.lam_quantum = float(lam_quantum)
         self.token_quantum = int(token_quantum)
-        self.max_entries = max_entries
-        self.cache: dict = {}
-        self.hits = 0
-        self.misses = 0
-
-    @property
-    def hit_rate(self) -> float:
-        """Fraction of ``solve`` calls answered from the cache."""
-        return self.hits / max(self.hits + self.misses, 1)
 
     def solve(self, ttft_budgets, prompt_tokens, lam: float,
               initial_wait: float = 0.0,
@@ -566,33 +807,19 @@ class TokenMemoizedSolver:
               drag_steps: Optional[float] = None) -> Decision:
         """Quantize conservatively, then cache per bucket signature."""
         rem, toks = _token_edf_order(ttft_budgets, prompt_tokens)
-        bq, lq, tq = self.budget_quantum, self.lam_quantum, self.token_quantum
-        if bq > 0:
-            rem = np.floor(rem / bq) * bq
-            iw = float(np.ceil(initial_wait / bq) * bq)
-            tbt = (float(np.floor(tbt_budget / bq) * bq)
-                   if np.isfinite(tbt_budget) else tbt_budget)
-        else:
-            iw = float(initial_wait)
-            tbt = float(tbt_budget)
+        rem, lam_q, iw = self._quantize(rem, lam, initial_wait)
+        bq, tq = self.budget_quantum, self.token_quantum
+        tbt = (float(np.floor(tbt_budget / bq) * bq)
+               if bq > 0 and np.isfinite(tbt_budget) else float(tbt_budget))
         if tq > 0:
             toks = np.ceil(toks / tq) * tq
-        lam_q = float(np.ceil(lam / lq) * lq) if lq > 0 else float(lam)
         md = self.table.cost.mean_decode if mean_decode is None \
             else mean_decode
         decode_present = active_slots > 0 or md > 0
-        key = (rem.tobytes(), toks.tobytes(), lam_q, iw, tbt,
-               decode_present, drag_steps, md)
-        d = self.cache.get(key)
-        if d is not None:
-            self.hits += 1
-            return d
-        self.misses += 1
-        d = self.table.solve(rem, toks, lam_q, initial_wait=iw,
-                             tbt_budget=tbt,
-                             active_slots=1 if decode_present else 0,
-                             mean_decode=md, drag_steps=drag_steps)
-        if len(self.cache) >= self.max_entries:
-            self.cache.clear()
-        self.cache[key] = d
-        return d
+        return self._cached(
+            (rem.tobytes(), toks.tobytes(), lam_q, iw, tbt,
+             decode_present, drag_steps, md),
+            lambda: self.table.solve(
+                rem, toks, lam_q, initial_wait=iw, tbt_budget=tbt,
+                active_slots=1 if decode_present else 0,
+                mean_decode=md, drag_steps=drag_steps))

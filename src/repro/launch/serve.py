@@ -18,7 +18,11 @@ Three modes, one control plane (``repro.serving.api.SpongeServer``):
   continuous-batching engines and report tokens/s, TTFT p99 and the
   per-token violation rate; ``--engine jax`` serves a slice of them on
   the **real Pallas kernels** (swa_prefill + decode_attention) through
-  ``repro.serving.token_backend.TokenJaxBackend``.
+  ``repro.serving.token_backend.TokenJaxBackend``.  Fleet scenarios
+  (``replica-failure``, ``rolling-restart``, ``fleet-flash-crowd``) run
+  the joint horizontal + vertical engines (``repro.serving.fleet``);
+  ``--replicas`` sizes the deploy-time fleet and ``--router`` picks the
+  arrival router (``least-loaded`` / ``jsq`` / ``edf-deadline``).
 
     PYTHONPATH=src python -m repro.launch.serve --mode live \
         --arch smollm-135m-reduced --rps 10 --duration 10
@@ -124,7 +128,8 @@ def run_scenario_mode(args) -> dict:
         report, stats = run_scenario(
             args.scenario, policy=args.policy, engine=args.engine,
             duration=args.duration, rps=args.rps,
-            seed=args.seed, requests=args.requests)
+            seed=args.seed, requests=args.requests,
+            replicas=args.replicas, router=args.router)
     ev = stats["events"]
     dt = stats["run_wall_s"]            # engine time only (no generation)
     out = {"scenario": args.scenario, "engine": stats["engine"],
@@ -139,6 +144,9 @@ def run_scenario_mode(args) -> dict:
                    tokens_per_s=report.tokens_per_s,
                    ttft_p50=report.ttft_p50, ttft_p99=report.ttft_p99,
                    tbt_violation_rate=report.tbt_violation_rate)
+    if "max_replicas" in stats:         # fleet scenarios: the ISSUE-4 bar
+        out.update(max_replicas=stats["max_replicas"],
+                   router=stats["router"])
     if "solver" in stats:
         out["solver_hit_rate"] = stats["solver"].get("hit_rate")
     print(json.dumps(out, indent=1, default=float))
@@ -166,6 +174,12 @@ def main(argv=None):
                          "scenarios) the real-kernel TokenJaxBackend")
     ap.add_argument("--requests", type=int, default=None,
                     help="scenario mode: size the run by request count")
+    ap.add_argument("--replicas", type=int, default=None,
+                    help="fleet scenarios: deploy-time replica count "
+                         "(overrides the scenario's n0)")
+    ap.add_argument("--router", default=None,
+                    choices=("least-loaded", "jsq", "edf-deadline"),
+                    help="fleet scenarios: arrival router across replicas")
     ap.add_argument("--arch", default="smollm-135m-reduced")
     ap.add_argument("--policy", default="sponge")
     # None = "use the mode's default" (scenarios carry their own rps /

@@ -405,6 +405,56 @@ class RunReport:
                 for f in dataclasses.fields(self)}
 
 
+def build_array_report(policy, backend: str, batch, finish: np.ndarray,
+                       horizon: float, slots, core_samples,
+                       bucket_log) -> RunReport:
+    """The ONE report aggregation shared by the struct-of-arrays engines
+    (``fastpath.FastSimRunner`` and both ``fleet`` runners): served mask
+    over the ``finish`` column, violations strictly past ``deadline +
+    1e-9``, end-to-end latency from client send time, the nearest-rank
+    percentile rule, and the per-slot core-seconds integral clamped to
+    each slot's release point.  Centralized so the acceptance metrics
+    (the violation epsilon, the percentile indexing) cannot drift
+    between the single-replica and fleet engines."""
+    served = ~np.isnan(finish)
+    fin = finish[served]
+    n_req = int(served.sum())
+    viol = int((fin > batch.deadline[served] + 1e-9).sum())
+    e2e = np.sort(fin - (batch.arrival[served]
+                         - batch.comm_latency[served]))
+    nn = e2e.size
+
+    def p(q: float) -> float:
+        if not nn:
+            return float("nan")
+        return float(e2e[min(int(q * nn), nn - 1)])
+
+    core_s = 0.0
+    for s in slots:
+        end = min(s.dead_at if s.dead_at is not None else horizon,
+                  horizon)
+        s.account(max(end, s.alive_since))
+        core_s += s.core_seconds
+    decisions = getattr(policy, "decisions", None)
+    if decisions is None:
+        decisions = getattr(getattr(policy, "scaler", None),
+                            "decisions", None)
+    return RunReport(
+        policy=getattr(policy, "name", type(policy).__name__),
+        backend=backend,
+        n_requests=n_req,
+        n_violations=viol,
+        violation_rate=viol / max(n_req, 1),
+        core_seconds=core_s,
+        avg_cores=core_s / max(horizon, 1e-9),
+        p50=p(0.50), p99=p(0.99),
+        mean_latency=float(e2e.sum()) / max(nn, 1),
+        core_timeline=core_samples,
+        decisions=decisions,
+        buckets=bucket_log,
+    )
+
+
 class ScenarioRunner:
     """The single Sponge control loop: request arrivals, adaptation ticks,
     slack-aware EDF dispatch, server-free events — over any

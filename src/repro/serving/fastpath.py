@@ -41,10 +41,12 @@ from typing import Dict, List, Optional
 import numpy as np
 
 from repro.core.cost_model import Composition, TokenCostModel
+from repro.core.monitor import array_window_rate
 from repro.core.perf_model import PerfModel
 from repro.core.queueing import FastEDFQueue, TokenFastEDFQueue
 from repro.core.solver import DEFAULT_B, DEFAULT_C
-from repro.serving.api import RunReport, resolve_decision, round_up_c
+from repro.serving.api import (RunReport, build_array_report,
+                               resolve_decision, round_up_c)
 from repro.serving.workload import RequestBatch
 
 
@@ -130,29 +132,13 @@ class FastSimRunner:
         return sum(s.c for s in self.slots)
 
     def _rate(self, now: float) -> float:
-        """Sliding-window λ with deploy-prior blend — same estimate as
-        ``RateEstimator`` via two pointers over the arrival array,
-        including the single-arrival guard (a lone arrival at the first
-        tick after an idle gap gives a ~zero-length window; dividing by
-        it would report a million-rps spike and over-provision)."""
-        arr, ai = self._arr, self._ai
-        w0 = self._w0
-        lo = now - self.rate_window
-        while w0 < ai and arr[w0] < lo:
-            w0 += 1
-        self._w0 = w0
-        if ai == w0:
-            obs = 0.0
-        elif ai - w0 == 1:
-            obs = 1.0 / self.rate_window
-        else:
-            span = min(self.rate_window, max(now - arr[w0], 1e-6))
-            obs = (ai - w0) / span
-        if self.prior_rps <= 0:
-            return obs
-        seen = max(now - arr[0], 0.0) if ai > 0 else 0.0
-        w = min(seen / self.rate_window, 1.0)
-        return obs * w + self.prior_rps * (1.0 - w)
+        """Sliding-window λ with deploy-prior blend — the shared
+        ``core.monitor.array_window_rate`` two-pointer estimate (same
+        floats as ``RateEstimator``, single-arrival guard included)."""
+        lam, self._w0 = array_window_rate(self._arr, self._ai, self._w0,
+                                          now, self.rate_window,
+                                          self.prior_rps)
+        return lam
 
     def drive(self, policy, now: float) -> None:
         """One adaptation step (same drive path as ``ScenarioRunner``)."""
@@ -284,43 +270,9 @@ class FastSimRunner:
     # -- reporting ---------------------------------------------------------
     def _report(self, batch: RequestBatch, finish: np.ndarray,
                 horizon: float) -> RunReport:
-        served = ~np.isnan(finish)
-        fin = finish[served]
-        n_req = int(served.sum())
-        viol = int((fin > batch.deadline[served] + 1e-9).sum())
-        e2e = np.sort(fin - (batch.arrival[served]
-                             - batch.comm_latency[served]))
-        nn = e2e.size
-
-        def p(q: float) -> float:
-            if not nn:
-                return float("nan")
-            return float(e2e[min(int(q * nn), nn - 1)])
-
-        core_s = 0.0
-        for s in self.slots + self.dead:
-            end = min(s.dead_at if s.dead_at is not None else horizon,
-                      horizon)
-            s.account(max(end, s.alive_since))
-            core_s += s.core_seconds
-        decisions = getattr(self.policy, "decisions", None)
-        if decisions is None:
-            decisions = getattr(getattr(self.policy, "scaler", None),
-                                "decisions", None)
-        return RunReport(
-            policy=getattr(self.policy, "name", type(self.policy).__name__),
-            backend="sim-fast",
-            n_requests=n_req,
-            n_violations=viol,
-            violation_rate=viol / max(n_req, 1),
-            core_seconds=core_s,
-            avg_cores=core_s / max(horizon, 1e-9),
-            p50=p(0.50), p99=p(0.99),
-            mean_latency=float(e2e.sum()) / max(nn, 1),
-            core_timeline=self.core_samples,
-            decisions=decisions,
-            buckets=self.bucket_log,
-        )
+        return build_array_report(self.policy, "sim-fast", batch, finish,
+                                  horizon, self.slots + self.dead,
+                                  self.core_samples, self.bucket_log)
 
 
 class TokenFastSimRunner(FastSimRunner):

@@ -32,6 +32,11 @@ Registered scenarios (see ``docs/scenarios.md`` for the full briefs):
   requests (8x longer prompts, longer streams, looser SLOs) — batch
   *composition* varies wildly, which is exactly what the token-level
   cost model exists for.
+* ``replica-failure`` / ``rolling-restart`` / ``fleet-flash-crowd`` —
+  fleet scenarios (``meta["fleet"] is True`` routes the run through the
+  joint horizontal + vertical engines in ``repro.serving.fleet``):
+  mid-run replica loss, a rolling deploy under live traffic, and
+  arrival spikes against a peak-provisioned static-fleet baseline.
 
 Adding a scenario: write a ``build(duration, rps, rng) ->
 (RequestBatch, meta)`` function, wrap it in :class:`Scenario`, decorate
@@ -309,6 +314,86 @@ register(Scenario(
 
 
 # --------------------------------------------------------------------------
+# fleet scenarios (joint horizontal + vertical scaling — ISSUE 4)
+# --------------------------------------------------------------------------
+def _fleet_meta(rps: float, trace, *, n0: int, c0: int = 16,
+                events=(), router: str = "least-loaded",
+                tick: float = 0.5) -> dict:
+    """Shared meta for fleet scenarios: ``fleet=True`` routes the run
+    through the fleet engines (``repro.serving.fleet``); ``n0``/``c0``
+    size the deploy-time fleet, ``fleet_events`` inject disruptions."""
+    return {"slo": 1.0, "expected_rps": rps, "trace": trace,
+            "fleet": True, "n0": n0, "c0": c0, "router": router,
+            "fleet_events": tuple(events), "tick": tick}
+
+
+def _build_replica_failure(duration, rps, rng):
+    seed = int(rng.integers(2**31))
+    trace = synth_4g_trace(_trace_seconds(duration), seed=seed)
+    send = poisson_times(rps, duration, rng)
+    cl = comm_latency_many(np.full(send.shape, 200.0), trace, send)
+    batch = RequestBatch.from_send(send, cl, slo=1.0, size_kb=200.0)
+    events = ((0.45 * duration, "kill", 1),)
+    return batch, _fleet_meta(rps, trace, n0=4, events=events)
+
+
+register(Scenario(
+    name="replica-failure",
+    summary="steady fleet load; one replica fails mid-run — the joint "
+            "scaler must re-target n and absorb the re-routed queue",
+    build=_build_replica_failure, default_rps=60.0,
+    default_duration=600.0))
+
+
+def _build_rolling_restart(duration, rps, rng):
+    seed = int(rng.integers(2**31))
+    trace = synth_4g_trace(_trace_seconds(duration), seed=seed)
+    send = poisson_times(rps, duration, rng)
+    cl = comm_latency_many(np.full(send.shape, 200.0), trace, send)
+    batch = RequestBatch.from_send(send, cl, slo=1.0, size_kb=200.0)
+    # restart each deploy-time replica in turn, 4 s cold start apiece
+    events = tuple((frac * duration, "restart", 0, 4.0)
+                   for frac in (0.30, 0.45, 0.60, 0.75))
+    return batch, _fleet_meta(rps, trace, n0=4, events=events)
+
+
+register(Scenario(
+    name="rolling-restart",
+    summary="each replica is drained and replaced in sequence (4 s cold "
+            "start) — a deploy rollout under live traffic",
+    build=_build_rolling_restart, default_rps=60.0,
+    default_duration=600.0))
+
+
+def _build_fleet_flash_crowd(duration, rps, rng):
+    seed = int(rng.integers(2**31))
+    trace = synth_4g_trace(_trace_seconds(duration), seed=seed)
+    spikes = ((0.40, 0.03, 3.0), (0.70, 0.04, 2.0))   # (start, len, x-rate)
+
+    def rate(t):
+        r = np.full(t.shape, float(rps))
+        for frac, width, mult in spikes:
+            s = frac * duration
+            r = np.where((t >= s) & (t < s + width * duration),
+                         rps * mult, r)
+        return r
+
+    send = inhomogeneous_poisson_times(rate, rps * 3.0, duration, rng)
+    cl = comm_latency_many(np.full(send.shape, 200.0), trace, send)
+    batch = RequestBatch.from_send(send, cl, slo=1.0, size_kb=200.0)
+    return batch, _fleet_meta(rps, trace, n0=8)
+
+
+register(Scenario(
+    name="fleet-flash-crowd",
+    summary="fleet-scale base load with 3x/2x arrival spikes — joint "
+            "(n, c, b) scaling vs a peak-provisioned static fleet",
+    build=_build_fleet_flash_crowd, default_rps=120.0,
+    default_duration=600.0,
+    mean_rate_factor=1.10))   # 1 + 0.03*(3-1) + 0.04*(2-1)
+
+
+# --------------------------------------------------------------------------
 # building + running
 # --------------------------------------------------------------------------
 def build_scenario(name: str, *, duration: Optional[float] = None,
@@ -338,13 +423,18 @@ def run_scenario(name: str, *, policy: str = "sponge",
                  tick: Optional[float] = None,
                  horizon: Optional[float] = None,
                  budget_quantum: float = 0.01, lam_quantum: float = 0.5,
+                 replicas: Optional[int] = None,
+                 router: Optional[str] = None,
                  **policy_kw):
     """Run a registered scenario end to end; returns ``(RunReport,
     stats)`` where ``stats`` carries engine/meta/solver-cache info.
 
     The fast engine pairs ``FastSimRunner`` with the memoized solver
     (quantized as given); the exact engine goes through
-    ``make_sim_server`` with the paper's bruteforce solver.
+    ``make_sim_server`` with the paper's bruteforce solver.  Fleet
+    scenarios (``meta["fleet"]``) run the joint engines instead
+    (``replicas`` overrides the deploy-time fleet size, ``router`` the
+    arrival router — see ``repro.serving.fleet``).
     """
     import time
     from repro.serving.api import make_policy, make_sim_server
@@ -361,6 +451,14 @@ def run_scenario(name: str, *, policy: str = "sponge",
                                    c0=c0, tick=tick, horizon=horizon,
                                    budget_quantum=budget_quantum,
                                    lam_quantum=lam_quantum, **policy_kw)
+    if meta.get("fleet"):
+        return _run_fleet_scenario(batch, meta, policy=policy,
+                                   engine=engine, perf=perf, c_set=c_set,
+                                   b_set=b_set, tick=tick, horizon=horizon,
+                                   budget_quantum=budget_quantum,
+                                   lam_quantum=lam_quantum,
+                                   replicas=replicas, router=router,
+                                   **policy_kw)
     common = dict(slo=meta["slo"], expected_rps=meta["expected_rps"],
                   adaptation_interval=tick)
     if engine == "fast":
@@ -393,6 +491,63 @@ def run_scenario(name: str, *, policy: str = "sponge",
                     "events": server.runner.events_processed,
                     "run_wall_s": time.perf_counter() - t0,
                     "meta": meta}
+
+
+def _run_fleet_scenario(batch: RequestBatch, meta: dict, *, policy: str,
+                        engine: str, perf: PerfModel, c_set, b_set,
+                        tick: float, horizon,
+                        budget_quantum: float, lam_quantum: float,
+                        replicas: Optional[int], router: Optional[str],
+                        **policy_kw):
+    """Fleet-scenario execution: the joint horizontal + vertical engines.
+
+    ``engine="fast"`` — :class:`repro.serving.fleet.FleetFastSimRunner`
+    (struct-of-arrays, the ≥500k-request path) with the quantized joint
+    memoized solver; ``engine="exact"`` — the pre-heaped
+    :class:`repro.serving.fleet.FleetExactRunner` gang loop at quanta 0
+    (the decision-identity oracle).  ``policy="sponge"`` runs the joint
+    :class:`~repro.serving.fleet.FleetSpongeScaler`;
+    ``policy="static-<cores>"`` pins a
+    :class:`~repro.serving.fleet.StaticFleetPolicy` at the deploy fleet
+    size (the ``benchmarks/fleet_bench.py`` baseline).
+    """
+    import time
+    from repro.serving.fleet import (FleetExactRunner, FleetFastSimRunner,
+                                     FleetSpongeScaler, StaticFleetPolicy)
+    n0 = int(replicas if replicas is not None else meta.get("n0", 1))
+    c0 = int(meta.get("c0", max(c_set)))
+    router = router if router is not None else meta.get("router",
+                                                        "least-loaded")
+    bq, lq = (budget_quantum, lam_quantum) if engine == "fast" else (0.0,
+                                                                     0.0)
+    if policy == "sponge":
+        pol = FleetSpongeScaler(perf, c_set=tuple(c_set),
+                                b_set=tuple(b_set),
+                                adaptation_interval=tick,
+                                budget_quantum=bq, lam_quantum=lq,
+                                **policy_kw)
+    elif policy == "static" or (policy.startswith("static-")
+                                and policy.split("-", 1)[1].isdigit()):
+        cores = int(policy.split("-", 1)[1]) if "-" in policy else c0
+        pol = StaticFleetPolicy(perf, replicas=n0, cores=cores,
+                                b_set=tuple(b_set), interval=tick,
+                                budget_quantum=bq, lam_quantum=lq,
+                                **policy_kw)
+        c0 = cores
+    else:
+        raise ValueError(
+            f"fleet scenarios run 'sponge' or 'static-<cores>' policies "
+            f"(got {policy!r})")
+    cls = FleetFastSimRunner if engine == "fast" else FleetExactRunner
+    runner = cls(pol, perf, c_set, b_set, n0=n0, c0=c0, tick=tick,
+                 prior_rps=meta["expected_rps"], router=router)
+    t0 = time.perf_counter()
+    report = runner.run(batch, horizon, events=meta.get("fleet_events", ()))
+    stats = {"engine": engine, "events": runner.events_processed,
+             "run_wall_s": time.perf_counter() - t0, "meta": meta,
+             "max_replicas": runner.max_replicas, "router": router,
+             "solver": pol.solver_stats()}
+    return report, stats
 
 
 def _run_token_scenario(batch: RequestBatch, meta: dict, *, policy: str,

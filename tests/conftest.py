@@ -8,6 +8,23 @@ import jax
 import numpy as np
 import pytest
 
+# Hypothesis profiles (optional dependency — see tests/_hyp.py):
+# "default" keeps CI's per-push runs cheap; "deep" is the scheduled
+# nightly sweep (.github/workflows/ci.yml sets HYPOTHESIS_PROFILE=deep).
+# Tests that pin max_examples via @settings(...) keep their own budget.
+try:
+    from hypothesis import HealthCheck, settings as _hyp_settings
+
+    _hyp_settings.register_profile("default", max_examples=50,
+                                   deadline=None)
+    _hyp_settings.register_profile(
+        "deep", max_examples=1000, deadline=None,
+        suppress_health_check=[HealthCheck.too_slow])
+    _hyp_settings.load_profile(os.environ.get("HYPOTHESIS_PROFILE",
+                                              "default"))
+except ImportError:
+    pass
+
 
 @pytest.fixture(scope="session")
 def rng():

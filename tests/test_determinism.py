@@ -1,0 +1,111 @@
+"""Determinism regression (ISSUE 4 satellite).
+
+Same seed + same scenario must give bit-identical decision streams and
+bucket logs (a) across the three fixed-work engines — the verbatim
+pre-refactor ``ReferenceRunner``, the streamed ``ScenarioRunner`` and
+the struct-of-arrays ``FastSimRunner`` — and (b) across two consecutive
+runs of every engine family (fixed-work, token, fleet).  This guards
+the fleet refactor (and anything after it) against nondeterministic
+dispatch sneaking into the control plane: any reliance on set/dict
+iteration order, unseeded randomness or wall-clock time shows up here
+as a diff between two identically configured runs.
+"""
+import numpy as np
+import pytest
+
+from repro.core.baselines import SpongePolicy
+from repro.core.perf_model import yolov5s_like
+from repro.core.scaler import SpongeScaler
+from repro.core.solver import DEFAULT_B, DEFAULT_C
+from repro.serving.api import ScenarioRunner, SimBackend
+from repro.serving.fastpath import FastSimRunner
+from repro.serving.reference import ReferenceRunner
+from repro.serving.scenarios import build_scenario, run_scenario
+
+PERF = yolov5s_like()
+SEED = 11
+
+
+def _decision_sig(report):
+    return [(t, d.c, d.b, d.n, d.feasible)
+            for t, d in (report.decisions or [])]
+
+
+def _sig(report):
+    return (_decision_sig(report), report.buckets, report.n_requests,
+            report.n_violations, report.core_seconds)
+
+
+def _fixed_engines(batch, meta):
+    """Run the same scenario workload through all three fixed-work
+    engines with identically configured sponge policies."""
+    tick = meta.get("tick", 1.0)
+    prior = meta["expected_rps"]
+
+    def policy():
+        return SpongePolicy(SpongeScaler(PERF, adaptation_interval=tick))
+
+    ref = ReferenceRunner(policy(), SimBackend(PERF, DEFAULT_C, DEFAULT_B,
+                                               c0=16), tick=tick)
+    ref.monitor.rate.prior_rps = prior
+    r_ref = ref.run(batch.to_requests())
+
+    new = ScenarioRunner(policy(), SimBackend(PERF, DEFAULT_C, DEFAULT_B,
+                                              c0=16), tick=tick)
+    new.monitor.rate.prior_rps = prior
+    r_new = new.run(batch.to_requests())
+
+    fast = FastSimRunner(policy(), PERF, DEFAULT_C, DEFAULT_B, c0=16,
+                         tick=tick, prior_rps=prior)
+    r_fast = fast.run(batch)
+    return r_ref, r_new, r_fast
+
+
+@pytest.mark.parametrize("name", ["steady", "mixed-slo"])
+def test_same_seed_identical_across_engines(name):
+    """reference == streamed == fastpath on the same scenario build."""
+    batch, meta = build_scenario(name, duration=60, seed=SEED)
+    r_ref, r_new, r_fast = _fixed_engines(batch, meta)
+    assert _sig(r_ref) == _sig(r_new) == _sig(r_fast)
+
+
+def test_same_seed_identical_scenario_builds():
+    """build_scenario is a pure function of (name, knobs, seed)."""
+    a, _ = build_scenario("flash-crowd", duration=90, seed=SEED)
+    b, _ = build_scenario("flash-crowd", duration=90, seed=SEED)
+    for col in ("send", "arrival", "comm_latency", "deadline", "slo",
+                "size_kb", "prompt_tokens", "decode_tokens", "tbt_slo"):
+        assert np.array_equal(getattr(a, col), getattr(b, col)), col
+    c, _ = build_scenario("flash-crowd", duration=90, seed=SEED + 1)
+    assert not np.array_equal(a.arrival, c.arrival), \
+        "different seeds must differ"
+
+
+@pytest.mark.parametrize("name,engine", [
+    ("steady", "fast"), ("steady", "exact"),
+    ("mixed-slo", "fast"),
+    ("llm-chat", "fast"), ("llm-chat", "exact"),
+    ("replica-failure", "fast"), ("replica-failure", "exact"),
+    ("fleet-flash-crowd", "fast"),
+])
+def test_two_consecutive_runs_identical(name, engine):
+    """Every engine family is run-to-run deterministic at equal seed:
+    fixed-work, token (continuous batching) and fleet (joint scaling)."""
+    kw = dict(engine=engine, duration=45, seed=SEED)
+    r1, _ = run_scenario(name, **kw)
+    r2, _ = run_scenario(name, **kw)
+    assert _sig(r1) == _sig(r2)
+    assert (r1.p50, r1.p99, r1.tokens_served) == \
+        (r2.p50, r2.p99, r2.tokens_served)
+
+
+def test_token_fast_engine_decision_determinism():
+    """The token engine's full report (TTFT percentiles, TBT violation
+    rate) is reproducible too — decode-stream bookkeeping included."""
+    kw = dict(engine="fast", duration=40, seed=3)
+    r1, s1 = run_scenario("llm-mixed-len", **kw)
+    r2, s2 = run_scenario("llm-mixed-len", **kw)
+    assert _sig(r1) == _sig(r2)
+    assert r1.ttft_p99 == r2.ttft_p99
+    assert r1.tbt_violation_rate == r2.tbt_violation_rate
+    assert s1["events"] == s2["events"]

@@ -131,7 +131,7 @@ waits = st.floats(0.0, 0.5)
 
 
 @given(budgets, lams, waits)
-@settings(max_examples=200, deadline=None)
+@settings(deadline=None)
 def test_table_solver_agrees_with_bruteforce(rem, lam, wait):
     """The precomputed-grid solver is Algorithm 1, vectorized."""
     tab = SolverTable(PERF)
@@ -141,7 +141,7 @@ def test_table_solver_agrees_with_bruteforce(rem, lam, wait):
 
 
 @given(budgets, lams, waits)
-@settings(max_examples=100, deadline=None)
+@settings(deadline=None)
 def test_quantized_memo_is_conservative(rem, lam, wait):
     """Quantization floors budgets and ceils λ/wait, so when the exact
     solver is feasible and the quantized one is too, the quantized
@@ -228,6 +228,9 @@ def test_cost_model_adapter_identical_across_all_loops(solver, seed):
 
 @given(st.integers(0, 2**16), st.floats(8.0, 30.0),
        st.integers(30, 70))
+# deliberately pinned (each example is two full engine runs); cheap
+# solver-level property tests leave max_examples to the hypothesis
+# profile so the nightly deep sweep can raise it (tests/conftest.py)
 @settings(max_examples=10, deadline=None)
 def test_cost_model_identity_property(seed, rps, duration):
     """Hypothesis sweep of the adapter identity on the fast path: any

@@ -189,6 +189,79 @@ def test_swa_prefill_sweep(b, s, h, kv, d, w, blk, dtype, rng):
                                np.asarray(ref, np.float32), **tol(dtype))
 
 
+# --------------------------------------------------------------------------
+# ragged / odd-shape parity (ISSUE 4 satellite): the sweeps above cover
+# round power-of-two shapes only; serving hands the kernels ragged ones.
+# swa_prefill requires s % block == 0 after clamping (block = min(block,
+# s)), so odd lengths run either as a single odd-sized block or with a
+# block that divides a non-power-of-two s.
+# --------------------------------------------------------------------------
+@pytest.mark.parametrize("b,s,h,kv,d,w,blk", [
+    (1, 77, 2, 2, 32, 32, 256),      # odd s, single odd block
+    (1, 77, 2, 1, 32, 1000, 256),    # odd s, window >= s (full causal)
+    (2, 96, 3, 3, 16, 40, 32),       # non-pow2 s, multi-block, ragged w
+    (1, 160, 4, 2, 32, 33, 32),      # batch=1, window straddles blocks
+    (1, 64, 2, 2, 32, 1, 32),        # window=1: pure self-attention
+    (2, 33, 1, 1, 16, 17, 64),       # prime-ish s, single head
+])
+def test_swa_prefill_ragged_and_window_edges(b, s, h, kv, d, w, blk, rng):
+    from repro.kernels.swa_prefill.ops import swa_prefill_attention
+    from repro.kernels.swa_prefill.ref import swa_prefill_ref
+    q = jnp.asarray(rng.standard_normal((b, s, h, d)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((b, s, kv, d)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((b, s, kv, d)), jnp.float32)
+    out = swa_prefill_attention(q, k, v, window=w, block=blk)
+    kr = jnp.repeat(k, h // kv, 2)
+    vr = jnp.repeat(v, h // kv, 2)
+    ref = swa_prefill_ref(q, kr, vr, window=w)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               atol=2e-5, rtol=2e-5)
+
+
+def test_swa_prefill_window_one_is_self_attention(rng):
+    """window=1 must reduce to attending the own position only (softmax
+    over one logit == V at that position)."""
+    from repro.kernels.swa_prefill.ops import swa_prefill_attention
+    b, s, h, d = 1, 96, 2, 32
+    q = jnp.asarray(rng.standard_normal((b, s, h, d)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((b, s, h, d)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((b, s, h, d)), jnp.float32)
+    out = swa_prefill_attention(q, k, v, window=1, block=32)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(v), atol=1e-5)
+
+
+@pytest.mark.parametrize("b,kv,g,d,s,block_s,lens", [
+    (1, 1, 1, 32, 77, 512, [1]),          # batch=1, odd s, minimal cache
+    (1, 2, 4, 32, 77, 512, [77]),         # odd s, full-length cache
+    (2, 2, 2, 32, 96, 32, [31, 33]),      # lens straddle block edges
+    (3, 1, 2, 16, 96, 32, [32, 64, 96]),  # lens exactly on block edges
+    (1, 3, 1, 64, 60, 20, [59]),          # non-pow2 everything, g=1
+])
+def test_decode_attention_ragged_lengths(b, kv, g, d, s, block_s, lens,
+                                         rng):
+    q = jnp.asarray(rng.standard_normal((b, kv, g, d)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((b, s, kv, d)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((b, s, kv, d)), jnp.float32)
+    ln = jnp.asarray(lens, jnp.int32)
+    out = decode_attention(q, k, v, ln, block_s=block_s)
+    ref = decode_attention_ref(q, k, v, ln)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               atol=2e-5, rtol=2e-5)
+
+
+def test_decode_attention_length_one_reads_first_token(rng):
+    """length=1 must return exactly V[:, 0] regardless of cache noise."""
+    b, kv, g, d, s = 1, 2, 2, 32, 64
+    q = jnp.asarray(rng.standard_normal((b, kv, g, d)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((b, s, kv, d)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((b, s, kv, d)), jnp.float32)
+    out = decode_attention(q, k, v, jnp.asarray([1], jnp.int32),
+                           block_s=32)
+    expect = np.broadcast_to(np.asarray(v)[:, 0][:, :, None, :],
+                             (b, kv, g, d))
+    np.testing.assert_allclose(np.asarray(out), expect, atol=1e-5)
+
+
 def test_swa_prefill_matches_model_blocked_attention(rng):
     """The kernel agrees with the model's blocked_attention SWA path."""
     from repro.kernels.swa_prefill.ops import swa_prefill_attention

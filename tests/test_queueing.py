@@ -11,7 +11,7 @@ reqs = st.lists(
 
 
 @given(reqs)
-@settings(max_examples=200, deadline=None)
+@settings(deadline=None)
 def test_edf_order(entries):
     q = EDFQueue()
     for arr, cl, slo in entries:
@@ -21,7 +21,7 @@ def test_edf_order(entries):
 
 
 @given(reqs, st.integers(1, 8))
-@settings(max_examples=100, deadline=None)
+@settings(deadline=None)
 def test_pop_batch_respects_edf_and_size(entries, b):
     q = EDFQueue()
     rs = [Request.make(arrival=a, comm_latency=c, slo=s)
@@ -38,7 +38,7 @@ def test_pop_batch_respects_edf_and_size(entries, b):
 
 
 @given(reqs, st.floats(0, 120))
-@settings(max_examples=100, deadline=None)
+@settings(deadline=None)
 def test_drop_expired(entries, now):
     q = EDFQueue()
     for a, c, s in entries:

@@ -28,7 +28,7 @@ def _feasible(rem, lam, c, b, perf, initial_wait=0.0):
 
 
 @given(budgets, lams, waits)
-@settings(max_examples=200, deadline=None)
+@settings(deadline=None)
 def test_bruteforce_returns_feasible_or_flags(rem, lam, wait):
     d = solve_bruteforce(rem, lam, PERF, initial_wait=wait)
     assert d.c in DEFAULT_C and d.b in DEFAULT_B
@@ -37,7 +37,7 @@ def test_bruteforce_returns_feasible_or_flags(rem, lam, wait):
 
 
 @given(budgets, lams, waits)
-@settings(max_examples=200, deadline=None)
+@settings(deadline=None)
 def test_bruteforce_minimality(rem, lam, wait):
     """Algorithm 1 returns the minimum feasible c (the IP optimum)."""
     d = solve_bruteforce(rem, lam, PERF, initial_wait=wait)
@@ -52,7 +52,7 @@ def test_bruteforce_minimality(rem, lam, wait):
 
 
 @given(budgets, lams, waits)
-@settings(max_examples=200, deadline=None)
+@settings(deadline=None)
 def test_pruned_agrees_with_bruteforce_on_c(rem, lam, wait):
     """The vectorized solver finds the same optimal c (it may pick a
     different b at equal cost only if delta_pen ties — same delta_pen here,
@@ -65,7 +65,7 @@ def test_pruned_agrees_with_bruteforce_on_c(rem, lam, wait):
 
 
 @given(budgets, lams)
-@settings(max_examples=100, deadline=None)
+@settings(deadline=None)
 def test_more_budget_never_needs_more_cores(rem, lam):
     d1 = solve_bruteforce(rem, lam, PERF)
     d2 = solve_bruteforce([r + 1.0 for r in rem], lam, PERF)

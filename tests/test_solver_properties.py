@@ -1,0 +1,158 @@
+"""Property-based solver invariants (ISSUE 4 satellites).
+
+Two families, both hypothesis-driven (with seeded fallbacks so the
+module stays useful when hypothesis is absent — see ``tests/_hyp.py``):
+
+1. **Conservative quantization** — ``TokenMemoizedSolver`` with positive
+   quanta solves a *tighter* problem than the exact token Algorithm 1
+   (budgets floored, tokens/λ/wait ceiled, TBT floored), so it may
+   over-provision but can never admit a decision the exact constraint
+   set rejects.  Checked three ways: exact-infeasible ⇒
+   quantized-infeasible; a quantized-feasible ``(c, b)`` re-verifies as
+   feasible against the *unquantized* inputs; and when both are feasible
+   the quantized choice is never earlier in Algorithm 1's (c, b) search
+   order (never an optimistic under-provision).
+2. **Cost-surface monotonicity** — the l(b, c) families the solvers
+   search are monotone: nondecreasing in work (batch size, prompt
+   tokens, decode slots) and nonincreasing in cores, for both
+   ``FixedWorkCostModel`` and ``TokenCostModel`` (any fitted instance
+   with nonnegative coefficients).  Algorithm 1's early-exit order is
+   only optimal because of these invariants.
+"""
+import numpy as np
+import pytest
+from _hyp import given, settings, st  # guarded hypothesis import
+
+from repro.core.cost_model import FixedWorkCostModel, TokenCostModel
+from repro.core.perf_model import yolov5s_like
+from repro.core.solver import TokenMemoizedSolver, solve_token_bruteforce
+
+PERF = yolov5s_like()
+FIXED = FixedWorkCostModel(PERF)
+COST = TokenCostModel.smollm_like()
+
+
+# --------------------------------------------------------------------------
+# 1) quantized token solver is never less conservative than Algorithm 1
+# --------------------------------------------------------------------------
+def _check_conservative(budgets, tokens, lam, wait, tbt):
+    toks = tokens[:len(budgets)]
+    budgets = budgets[:len(toks)]
+    q = TokenMemoizedSolver(COST, budget_quantum=0.02, lam_quantum=0.5,
+                            token_quantum=16)
+    exact = solve_token_bruteforce(budgets, toks, lam, COST,
+                                   initial_wait=wait, tbt_budget=tbt)
+    quant = q.solve(budgets, toks, lam, initial_wait=wait, tbt_budget=tbt)
+    if not exact.feasible:
+        # the quantized problem is tighter: it cannot be feasible where
+        # the exact one is not
+        assert not quant.feasible
+    if quant.feasible:
+        # no SLO-infeasible decision admitted: the quantized (c, b) must
+        # re-verify against the ORIGINAL (unquantized) inputs
+        recheck = solve_token_bruteforce(budgets, toks, lam, COST,
+                                         c_set=(quant.c,),
+                                         b_set=(quant.b,),
+                                         initial_wait=wait,
+                                         tbt_budget=tbt)
+        assert recheck.feasible, (quant.c, quant.b)
+    if exact.feasible and quant.feasible:
+        # never earlier in the (c, b) search order = never an optimistic
+        # under-provision
+        assert (quant.c, quant.b) >= (exact.c, exact.b)
+
+
+tok_budgets = st.lists(st.floats(0.05, 3.0), min_size=0, max_size=24)
+tok_counts = st.lists(st.integers(1, 512), min_size=24, max_size=24)
+tok_lams = st.floats(0.0, 40.0)
+tok_waits = st.floats(0.0, 0.5)
+tok_tbts = st.one_of(st.just(float("inf")), st.floats(0.02, 0.5))
+
+
+@given(tok_budgets, tok_counts, tok_lams, tok_waits, tok_tbts)
+@settings(deadline=None)
+def test_token_memo_quantization_is_conservative(budgets, tokens, lam,
+                                                 wait, tbt):
+    """TokenMemoizedSolver at quantum > 0 never admits a decision the
+    exact token Algorithm 1 rejects."""
+    _check_conservative(budgets, tokens, lam, wait, tbt)
+
+
+def test_token_memo_conservative_seeded_fuzz():
+    """The same invariant, seeded (runs without hypothesis)."""
+    rng = np.random.default_rng(7)
+    for _ in range(120):
+        n = int(rng.integers(0, 24))
+        budgets = list(rng.uniform(0.05, 3.0, n))
+        tokens = list(rng.integers(1, 512, max(n, 1)))
+        lam = float(rng.uniform(0, 40))
+        wait = float(rng.uniform(0, 0.5))
+        tbt = float("inf") if rng.uniform() < 0.4 else \
+            float(rng.uniform(0.02, 0.5))
+        _check_conservative(budgets, tokens, lam, wait, tbt)
+
+
+def test_token_memo_exact_at_quantum_zero():
+    """Quanta at 0 make the cache key the exact input: decisions are
+    identical to the bruteforce token Algorithm 1."""
+    memo = TokenMemoizedSolver(COST)
+    rng = np.random.default_rng(3)
+    for _ in range(60):
+        n = int(rng.integers(0, 16))
+        budgets = rng.uniform(0.05, 2.0, n)
+        tokens = rng.integers(1, 256, n)
+        lam = float(rng.uniform(0, 30))
+        d1 = solve_token_bruteforce(budgets, tokens, lam, COST)
+        d2 = memo.solve(budgets, tokens, lam)
+        assert (d1.c, d1.b, d1.feasible) == (d2.c, d2.b, d2.feasible)
+
+
+# --------------------------------------------------------------------------
+# 2) l(b, c) monotonicity invariants
+# --------------------------------------------------------------------------
+def _assert_monotone_grid(fn, rows_increase: bool = True):
+    """fn(work, cores) over the (1..16, 1..16) grid: nondecreasing along
+    work, nonincreasing along cores."""
+    work = np.arange(1, 17, dtype=np.float64)
+    cores = np.arange(1, 17, dtype=np.float64)
+    ww, cc = np.meshgrid(work, cores, indexing="ij")
+    lat = np.asarray(fn(ww, cc), np.float64)
+    assert np.all(np.diff(lat, axis=0) >= -1e-12), "not monotone in work"
+    assert np.all(np.diff(lat, axis=1) <= 1e-12), "not monotone in cores"
+
+
+@pytest.mark.parametrize("model,label", [
+    (PERF, "perf"), (FIXED, "fixed-work"), (COST, "token-full-service")])
+def test_latency_monotone_in_b_and_c(model, label):
+    _assert_monotone_grid(lambda b, c: model.latency(b, c))
+
+
+def test_token_surfaces_monotone():
+    _assert_monotone_grid(lambda t, c: COST.prefill_latency(c, t))
+    _assert_monotone_grid(lambda s, c: COST.decode_latency(c, s))
+    fw = FIXED
+    _assert_monotone_grid(lambda t, c: fw.prefill_latency(c, t))
+
+
+coeffs = st.floats(0.0, 0.1)
+
+
+@given(coeffs, coeffs, coeffs, coeffs, coeffs, coeffs)
+@settings(deadline=None)
+def test_any_nonneg_token_model_is_monotone(gp, dp, gd, dd, eps, eta):
+    """Every TokenCostModel with nonnegative coefficients (what ``fit``
+    clamps to) satisfies the monotonicity the solvers rely on."""
+    m = TokenCostModel(gamma_p=gp, delta_p=dp, gamma_d=gd, delta_d=dd,
+                       eps=eps, eta=eta, mean_prompt=32.0, mean_decode=8.0)
+    _assert_monotone_grid(lambda t, c: m.prefill_latency(c, t))
+    _assert_monotone_grid(lambda s, c: m.decode_latency(c, s))
+    _assert_monotone_grid(lambda b, c: m.latency(b, c))
+
+
+def test_throughput_monotone_in_c():
+    """h(b, c) = b / l(b, c): more cores never reduce throughput."""
+    for model in (PERF, FIXED, COST):
+        b = np.arange(1, 17, dtype=np.float64)[:, None]
+        c = np.arange(1, 17, dtype=np.float64)[None, :]
+        thr = np.asarray(model.throughput(b, c), np.float64)
+        assert np.all(np.diff(thr, axis=1) >= -1e-12)

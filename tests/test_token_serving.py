@@ -111,7 +111,7 @@ budgets = st.lists(st.floats(0.05, 3.0), min_size=0, max_size=24)
 
 @given(budgets, st.floats(0.0, 40.0), st.floats(0.0, 0.4),
        st.floats(0.0, 0.25), st.integers(0, 123))
-@settings(max_examples=150, deadline=None)
+@settings(deadline=None)
 def test_token_table_matches_bruteforce_property(rem, lam, wait, tbt,
                                                  tok_seed):
     rng = np.random.default_rng(tok_seed)
