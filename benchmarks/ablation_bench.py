@@ -7,7 +7,6 @@ removes one pillar at a time, plus the paper's own future-work extension
 """
 from __future__ import annotations
 
-import heapq
 import time
 from dataclasses import dataclass
 
@@ -21,19 +20,18 @@ from repro.core.scaler import SpongeScaler
 from repro.core.slo import Request
 from repro.core.solver import DEFAULT_B, DEFAULT_C
 from repro.network.traces import synth_4g_trace
-from repro.serving.simulator import ClusterSimulator
+from repro.serving.api import ScenarioRunner, SimBackend
 from repro.serving.workload import WorkloadGenerator
 
 
 class FIFOQueue(EDFQueue):
-    """No-reordering ablation: service order = arrival order (deadlines are
-    still tracked for the solver's budget snapshot)."""
+    """No-reordering ablation: service order = arrival order (deadlines
+    are still tracked for the solver's budget snapshot — only the heap
+    ordering key changes)."""
 
-    def push(self, req: Request) -> None:
-        heapq.heappush(self._heap, (req.arrival, req.id, req))
-
-    def snapshot_remaining(self, now: float):
-        return sorted(r.deadline - now for _, _, r in self._heap)
+    @staticmethod
+    def _key(req: Request) -> float:
+        return req.arrival
 
 
 @dataclass
@@ -48,7 +46,8 @@ class FixedBatchSponge(SpongePolicy):
 
 
 def _run(perf, policy, reqs, c0=16, fifo=False, rps=20.0):
-    sim = ClusterSimulator(perf, policy, DEFAULT_C, DEFAULT_B, c0=c0)
+    sim = ScenarioRunner(policy, SimBackend(perf, DEFAULT_C, DEFAULT_B,
+                                            c0=c0))
     if fifo:
         sim.queue = FIFOQueue()
     sim.monitor.rate.prior_rps = rps

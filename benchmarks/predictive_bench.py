@@ -11,13 +11,14 @@ from repro.core.predictive import (PredictivePolicy, PredictiveSpongeScaler,
 from repro.core.scaler import SpongeScaler
 from repro.core.solver import DEFAULT_B, DEFAULT_C
 from repro.network.traces import synth_4g_trace
-from repro.serving.simulator import ClusterSimulator
+from repro.serving.api import ScenarioRunner, SimBackend
 from repro.serving.workload import WorkloadGenerator
 
 
 def _run(perf, policy, trace, rps=20.0):
     wl = WorkloadGenerator(rps=rps, slo=1.0, size_kb=200)
-    sim = ClusterSimulator(perf, policy, DEFAULT_C, DEFAULT_B, c0=16)
+    sim = ScenarioRunner(policy, SimBackend(perf, DEFAULT_C, DEFAULT_B,
+                                            c0=16))
     sim.monitor.rate.prior_rps = rps
     return sim.run(wl.generate(trace))
 

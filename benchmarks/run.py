@@ -12,7 +12,7 @@ import traceback
 
 from benchmarks import (ablation_bench, fig1_dynamic_slo, fig3_perf_model,
                         fig4_e2e, fleet_bench, perf_iter, predictive_bench,
-                        roofline_report, smoke, solver_bench,
+                        roofline_report, session_bench, smoke, solver_bench,
                         table1_latency_grid, throughput_bench,
                         token_serving_bench)
 
@@ -36,6 +36,9 @@ BENCHES = [
     # fleet serving: 500k requests across >=8 replicas, joint (n, c, b)
     # scaling vs a static fleet (benchmarks/fleet_bench.py)
     ("fleet", fleet_bench),
+    # online sessions: 100k+ requests with mid-flight SLO renegotiation
+    # and cancel storms via the session API (benchmarks/session_bench.py)
+    ("session", session_bench),
 ]
 
 

@@ -1,7 +1,22 @@
 """Monitoring component (paper §3.1): arrival-rate estimation, SLO-violation
-accounting, perf-model residual tracking (the Prometheus stand-in)."""
+accounting, perf-model residual tracking (the Prometheus stand-in).
+
+Renegotiation-aware accounting (ISSUE 5): the online session API lets a
+client *cancel* a queued request mid-flight.  A cancelled request is no
+longer demand — a cancel storm must deflate the provisioning signal
+immediately, not after the window rolls over — so both λ estimators
+support retracting an observed arrival: ``RateEstimator.retract`` on
+the object path and the ``cancels``/``cw0`` two-pointer arguments of
+:func:`array_window_rate_cancel_aware` on the struct-of-arrays path.
+Both subtract retracted arrivals from the window *count* while keeping
+the window *span* anchored at the oldest observed arrival (cancelled or
+not), so the two estimators remain float-identical to each other — and
+bit-identical to the historical estimate whenever nothing is
+retracted.  Cancelled requests are likewise excluded from the
+violation/latency aggregates (``Monitor.observe_cancel``)."""
 from __future__ import annotations
 
+from bisect import insort
 from collections import deque
 from dataclasses import dataclass, field
 from typing import Deque, List, Optional
@@ -42,30 +57,87 @@ def array_window_rate(arr, ai: int, w0: int, now: float,
     return obs * w + prior_rps * (1.0 - w), w0
 
 
+def array_window_rate_cancel_aware(arr, ai: int, w0: int, now: float,
+                                   window_s: float, prior_rps: float,
+                                   cancels, cw0: int
+                                   ) -> tuple[float, int, int]:
+    """:func:`array_window_rate` with cancelled arrivals retracted.
+
+    ``cancels`` is a sorted (ascending) sequence of the *arrival times*
+    of requests cancelled while queued, ``cw0`` the caller-held left
+    pointer into it.  The in-window cancel count is subtracted from the
+    in-window arrival count before the rate formula; the span still
+    anchors at the oldest in-window arrival (cancelled or not), exactly
+    like :meth:`RateEstimator.retract` on the object path, so the two
+    estimators stay float-identical.  With no cancels in the window the
+    formula collapses to :func:`array_window_rate` bit-for-bit.
+    Returns ``(lambda, new_w0, new_cw0)``.
+    """
+    lo = now - window_s
+    while w0 < ai and arr[w0] < lo:
+        w0 += 1
+    nc = len(cancels)
+    while cw0 < nc and cancels[cw0] < lo:
+        cw0 += 1
+    count = (ai - w0) - (nc - cw0)
+    if count <= 0:
+        obs = 0.0
+    elif count == 1:
+        obs = 1.0 / window_s
+    else:
+        span = min(window_s, max(now - arr[w0], 1e-6))
+        obs = count / span
+    if prior_rps <= 0:
+        return obs, w0, cw0
+    seen = max(now - arr[0], 0.0) if ai > 0 else 0.0
+    w = min(seen / window_s, 1.0)
+    return obs * w + prior_rps * (1.0 - w), w0, cw0
+
+
 class RateEstimator:
     """Sliding-window arrival-rate (lambda) estimate in requests/second.
 
     ``prior_rps`` is the deployment-time expected rate; it is blended out as
     the observation window fills (prevents the t=0 scale-to-zero artifact —
-    the serving analogue of FA2's pre-stabilized start)."""
+    the serving analogue of FA2's pre-stabilized start).
+
+    ``retract(t)`` removes one previously observed arrival from the
+    window *count* (mid-flight cancellation); the window *span* stays
+    anchored at the oldest observed arrival, cancelled or not, so the
+    estimate matches :func:`array_window_rate_cancel_aware` float for
+    float."""
 
     def __init__(self, window_s: float = 5.0, prior_rps: float = 0.0):
         self.window_s = window_s
         self.prior_rps = prior_rps
         self._t0: float | None = None
         self._arrivals: Deque[float] = deque()
+        self._retracted: List[float] = []    # sorted arrival times
 
     def observe(self, t: float) -> None:
         if self._t0 is None:
             self._t0 = t
         self._arrivals.append(t)
 
+    def retract(self, t: float) -> None:
+        """Retract one observed arrival (the request was cancelled while
+        queued) so it stops counting toward the provisioning signal."""
+        insort(self._retracted, t)
+
     def rate(self, now: float) -> float:
         while self._arrivals and self._arrivals[0] < now - self.window_s:
             self._arrivals.popleft()
-        if not self._arrivals:
+        lo = now - self.window_s
+        if self._retracted:
+            k = 0
+            while k < len(self._retracted) and self._retracted[k] < lo:
+                k += 1
+            if k:
+                del self._retracted[:k]
+        count = len(self._arrivals) - len(self._retracted)
+        if count <= 0:
             obs = 0.0
-        elif len(self._arrivals) == 1:
+        elif count == 1:
             # single-arrival guard: the observed span collapses to ~0 at
             # the first tick after an idle gap (the lone arrival may sit
             # exactly at ``now``), so count/span would report a huge
@@ -73,7 +145,7 @@ class RateEstimator:
             obs = 1.0 / self.window_s
         else:
             span = min(self.window_s, max(now - self._arrivals[0], 1e-6))
-            obs = len(self._arrivals) / span
+            obs = count / span
         if self.prior_rps <= 0:
             return obs
         seen = 0.0 if self._t0 is None else max(now - self._t0, 0.0)
@@ -86,6 +158,7 @@ class Monitor:
     rate: RateEstimator = field(default_factory=RateEstimator)
     completed: List[Request] = field(default_factory=list)
     dropped: List[Request] = field(default_factory=list)
+    cancelled: List[Request] = field(default_factory=list)
     perf_residuals: List[float] = field(default_factory=list)
 
     def observe_arrival(self, req: Request) -> None:
@@ -97,6 +170,13 @@ class Monitor:
     def observe_drop(self, req: Request) -> None:
         self.dropped.append(req)
 
+    def observe_cancel(self, req: Request) -> None:
+        """A queued request was cancelled mid-flight: retract its
+        arrival from the λ window and exclude it from every served /
+        violation aggregate (it is reported separately)."""
+        self.cancelled.append(req)
+        self.rate.retract(req.arrival)
+
     def observe_perf_residual(self, predicted: float, measured: float) -> None:
         self.perf_residuals.append(measured - predicted)
 
@@ -104,6 +184,10 @@ class Monitor:
     @property
     def n_total(self) -> int:
         return len(self.completed) + len(self.dropped)
+
+    @property
+    def n_cancelled(self) -> int:
+        return len(self.cancelled)
 
     @property
     def n_violations(self) -> int:

@@ -10,83 +10,154 @@ Two queue substrates share the EDF discipline:
   struct-of-arrays request batch, used by the million-request fast path
   (``repro.serving.fastpath``).  No per-request Python objects exist;
   the solver snapshot is a single vectorized ``np.sort``.
+
+**Mid-flight renegotiation (ISSUE 5).**  Both substrates support
+re-keying a queued entry's deadline (``update_deadline``) and removing
+a queued entry outright (``cancel``) — the primitives the online
+session API (``repro.serving.session``) builds on.  The mechanism is
+*lazy invalidation with live-entry re-push*: a ``_live`` map (key →
+current deadline / request) is the source of truth, an update pushes a
+fresh heap entry under the new key and leaves the old tuple behind as
+garbage, and pops discard any tuple whose key no longer matches the
+live map.  After every mutation the **top-live invariant** is
+restored — the heap's root is always a live entry — so the O(1) head
+reads the hot dispatch loops rely on (``peek_deadline`` /
+``_heap[0][0]``) stay exact without scanning.  When no renegotiation
+ever happens, no stale entry ever exists and every operation performs
+the same heap work as before, which is what keeps the session replay
+paths decision-identical to the historical closed-world loops.
 """
 from __future__ import annotations
 
 import heapq
-from typing import Iterable, List, Optional
+from typing import Dict, Iterable, List, Optional, Tuple
 
 import numpy as np
 
 from repro.core.slo import Request
 
 
-def _remaining_array(heap: list, now: float) -> np.ndarray:
-    """Sorted remaining budgets from a deadline-first heap (item[0] is the
-    absolute deadline on both queue substrates) — one vectorized pass."""
-    dl = np.fromiter((item[0] for item in heap), np.float64, len(heap))
-    return np.sort(dl - now)
-
-
 class EDFQueue:
+    """EDF heap of ``Request`` objects with mid-flight re-keying.
+
+    ``_live`` maps ``req.id`` to the queued ``Request``; a heap tuple
+    ``(deadline, id, req)`` is live iff the id is still mapped to that
+    object *and* the tuple's deadline matches ``req.deadline`` (updates
+    mutate the request's deadline and re-push, so superseded tuples
+    fail the second check).
+    """
+
     def __init__(self):
         self._heap: list[tuple[float, int, Request]] = []
+        self._live: Dict[int, Request] = {}
+
+    @staticmethod
+    def _key(req: Request) -> float:
+        """Heap ordering key.  EDF orders by absolute deadline;
+        subclasses may reorder (e.g. the FIFO ablation keys by arrival)
+        — the live/stale machinery follows the hook."""
+        return req.deadline
 
     def __len__(self):
-        return len(self._heap)
+        return len(self._live)
 
     def push(self, req: Request) -> None:
-        heapq.heappush(self._heap, (req.deadline, req.id, req))
+        self._live[req.id] = req
+        heapq.heappush(self._heap, (self._key(req), req.id, req))
 
     def extend(self, reqs: Iterable[Request]) -> None:
         for r in reqs:
             self.push(r)
 
+    def _fix_top(self) -> None:
+        """Restore the top-live invariant (drop stale root tuples)."""
+        h, live = self._heap, self._live
+        while h:
+            key, rid, req = h[0]
+            if live.get(rid) is req and self._key(req) == key:
+                return
+            heapq.heappop(h)
+
+    def __contains__(self, rid: int) -> bool:
+        return rid in self._live
+
+    def update_deadline(self, rid: int, new_deadline: float) -> bool:
+        """Re-key a queued request to ``new_deadline`` (mid-flight SLO
+        renegotiation).  Lazy invalidation: the request object's
+        deadline is rewritten and — when the ordering key moved — a
+        fresh heap entry pushed; the stale tuple is discarded when it
+        surfaces.  Returns False when the id is not queued (already
+        dispatched / cancelled / unknown)."""
+        req = self._live.get(rid)
+        if req is None:
+            return False
+        if req.deadline == new_deadline:
+            return True
+        old_key = self._key(req)
+        req.deadline = new_deadline
+        if self._key(req) != old_key:
+            heapq.heappush(self._heap, (self._key(req), rid, req))
+            self._fix_top()
+        return True
+
+    def cancel(self, rid: int) -> Optional[Request]:
+        """Remove a queued request (client abandoned it).  Returns the
+        request, or None when it is not queued (double-cancel safe)."""
+        req = self._live.pop(rid, None)
+        if req is not None:
+            self._fix_top()
+        return req
+
     def pop(self) -> Request:
-        return heapq.heappop(self._heap)[2]
+        h, live = self._heap, self._live
+        while True:
+            key, rid, req = heapq.heappop(h)
+            if live.get(rid) is req and self._key(req) == key:
+                del live[rid]
+                self._fix_top()
+                return req
 
     def peek(self) -> Optional[Request]:
         return self._heap[0][2] if self._heap else None
 
     def pop_batch(self, b: int) -> List[Request]:
-        return [self.pop() for _ in range(min(b, len(self._heap)))]
+        return [self.pop() for _ in range(min(b, len(self._live)))]
 
     def snapshot_remaining(self, now: float) -> List[float]:
         """Remaining budgets (sorted ascending) — the solver's input."""
-        return sorted(r.deadline - now for _, _, r in self._heap)
+        return sorted(r.deadline - now for r in self._live.values())
 
     def remaining_array(self, now: float) -> np.ndarray:
         """Vectorized ``snapshot_remaining``: sorted np.float64 budgets."""
-        return _remaining_array(self._heap, now)
+        dl = np.fromiter((r.deadline for r in self._live.values()),
+                         np.float64, len(self._live))
+        return np.sort(dl - now)
 
     def token_snapshot(self, now: float):
         """Token-aware solver input: ``(ttft_budgets, prompt_tokens,
         tbt_min)`` with budgets EDF-sorted ascending, token counts
         aligned to that order, and the tightest per-token SLO queued
         (``inf`` when empty or all-fixed-work)."""
-        if not self._heap:
+        if not self._live:
             return (np.empty(0, np.float64), np.empty(0, np.float64),
                     float("inf"))
-        dl = np.fromiter((item[0] for item in self._heap), np.float64,
-                         len(self._heap))
-        toks = np.fromiter((item[2].prompt_tokens for item in self._heap),
-                           np.float64, len(self._heap))
-        tbt = min(item[2].tbt_slo for item in self._heap)
+        reqs = list(self._live.values())
+        dl = np.fromiter((r.deadline for r in reqs), np.float64, len(reqs))
+        toks = np.fromiter((r.prompt_tokens for r in reqs), np.float64,
+                           len(reqs))
+        tbt = min(r.tbt_slo for r in reqs)
         order = np.argsort(dl, kind="stable")
         return dl[order] - now, toks[order], float(tbt)
 
     def drop_expired(self, now: float) -> List[Request]:
         """Remove requests whose deadline already passed (counted as
         violations by the caller)."""
-        dropped = []
-        keep = []
-        for item in self._heap:
-            if item[0] < now:
-                dropped.append(item[2])
-            else:
-                keep.append(item)
+        dropped = [r for r in self._live.values() if r.deadline < now]
         if dropped:
-            self._heap = keep
+            for r in dropped:
+                del self._live[r.id]
+            self._heap = [(self._key(r), r.id, r)
+                          for r in self._live.values()]
             heapq.heapify(self._heap)
         return dropped
 
@@ -101,29 +172,92 @@ class FastEDFQueue:
     policies use (``__len__`` / ``snapshot_remaining`` /
     ``remaining_array`` / ``peek_deadline``), which lets any
     decide-protocol ``SchedulingPolicy`` run unmodified on the fast path.
+
+    ``_live`` (index → current deadline) carries the renegotiation
+    state: ``update_deadline`` re-pushes under the new key,  ``cancel``
+    drops the mapping, and pops skip tuples whose deadline no longer
+    matches.  The top-live invariant holds after every mutation, so the
+    inlined dispatch loops may keep reading ``_heap[0][0]`` (head
+    deadline) and ``bool(_heap)`` (emptiness) directly; live *counts*
+    must come from ``len(queue)`` / ``_live``.
     """
 
     def __init__(self):
         self._heap: list[tuple[float, int]] = []
+        self._live: Dict[int, float] = {}
 
     def __len__(self):
-        return len(self._heap)
+        return len(self._live)
+
+    def __contains__(self, idx: int) -> bool:
+        return idx in self._live
 
     def push(self, deadline: float, idx: int) -> None:
+        self._live[idx] = deadline
         heapq.heappush(self._heap, (deadline, idx))
+
+    def _fix_top(self) -> None:
+        """Restore the top-live invariant (drop stale root tuples)."""
+        h, live = self._heap, self._live
+        while h and live.get(h[0][1]) != h[0][0]:
+            heapq.heappop(h)
+
+    def update_deadline(self, idx: int, new_deadline: float) -> bool:
+        """Re-key a queued index to ``new_deadline``; False when the
+        index is not queued (dispatched / cancelled / unknown)."""
+        old = self._live.get(idx)
+        if old is None:
+            return False
+        if old == new_deadline:
+            return True
+        self._live[idx] = new_deadline
+        heapq.heappush(self._heap, (new_deadline, idx))
+        self._fix_top()
+        return True
+
+    def cancel(self, idx: int) -> bool:
+        """Remove a queued index; False when it is not queued
+        (double-cancel safe)."""
+        if self._live.pop(idx, None) is None:
+            return False
+        self._fix_top()
+        return True
 
     def peek_deadline(self) -> float:
         return self._heap[0][0]
 
     def pop_batch(self, b: int) -> List[int]:
-        """Pop the ≤b earliest-deadline request indices (EDF order)."""
+        """Pop the ≤b earliest-deadline live request indices (EDF
+        order), discarding stale tuples as they surface."""
         pop = heapq.heappop
-        h = self._heap
-        return [pop(h)[1] for _ in range(min(b, len(h)))]
+        h, live = self._heap, self._live
+        out: List[int] = []
+        while h and len(out) < b:
+            dl, idx = pop(h)
+            if live.get(idx) == dl:
+                del live[idx]
+                out.append(idx)
+        self._fix_top()
+        return out
+
+    def drain(self) -> List[Tuple[float, int]]:
+        """Pop every live entry in EDF order as ``(deadline, index)``
+        pairs (fleet re-routing / retirement)."""
+        pop = heapq.heappop
+        h, live = self._heap, self._live
+        out: List[Tuple[float, int]] = []
+        while h:
+            dl, idx = pop(h)
+            if live.get(idx) == dl:
+                del live[idx]
+                out.append((dl, idx))
+        return out
 
     def remaining_array(self, now: float) -> np.ndarray:
-        """Sorted remaining budgets — one vectorized pass over the heap."""
-        return _remaining_array(self._heap, now)
+        """Sorted remaining budgets — one vectorized pass over the
+        live-entry map."""
+        dl = np.fromiter(self._live.values(), np.float64, len(self._live))
+        return np.sort(dl - now)
 
     def snapshot_remaining(self, now: float) -> List[float]:
         return self.remaining_array(now).tolist()
@@ -135,9 +269,8 @@ class TokenFastEDFQueue(FastEDFQueue):
     ``bind`` attaches the workload's per-request ``prompt_tokens`` and
     ``tbt_slo`` columns once; ``token_snapshot`` then assembles the
     token-aware solver input (EDF-sorted budgets, aligned token counts,
-    tightest queued TBT) from the bare ``(deadline, index)`` heap with
-    three vectorized passes — the same no-objects discipline as
-    :class:`FastEDFQueue`.
+    tightest queued TBT) from the live-entry map with three vectorized
+    passes — the same no-objects discipline as :class:`FastEDFQueue`.
     """
 
     def __init__(self):
@@ -152,14 +285,13 @@ class TokenFastEDFQueue(FastEDFQueue):
 
     def token_snapshot(self, now: float):
         """Same contract as ``EDFQueue.token_snapshot``."""
-        if not self._heap:
+        if not self._live:
             return (np.empty(0, np.float64), np.empty(0, np.float64),
                     float("inf"))
         assert self._prompt_tokens is not None, "bind() the workload first"
-        dl = np.fromiter((item[0] for item in self._heap), np.float64,
-                         len(self._heap))
-        idx = np.fromiter((item[1] for item in self._heap), np.int64,
-                          len(self._heap))
+        n = len(self._live)
+        dl = np.fromiter(self._live.values(), np.float64, n)
+        idx = np.fromiter(self._live.keys(), np.int64, n)
         order = np.argsort(dl, kind="stable")
         toks = self._prompt_tokens[idx[order]]
         tbt = float(self._tbt[idx].min())

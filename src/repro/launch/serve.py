@@ -129,7 +129,8 @@ def run_scenario_mode(args) -> dict:
             args.scenario, policy=args.policy, engine=args.engine,
             duration=args.duration, rps=args.rps,
             seed=args.seed, requests=args.requests,
-            replicas=args.replicas, router=args.router)
+            replicas=args.replicas, router=args.router,
+            mid_flight=not args.no_mid_flight)
     ev = stats["events"]
     dt = stats["run_wall_s"]            # engine time only (no generation)
     out = {"scenario": args.scenario, "engine": stats["engine"],
@@ -147,6 +148,9 @@ def run_scenario_mode(args) -> dict:
     if "max_replicas" in stats:         # fleet scenarios: the ISSUE-4 bar
         out.update(max_replicas=stats["max_replicas"],
                    router=stats["router"])
+    if "session" in stats:              # session scenarios: the ISSUE-5 bar
+        out.update(n_cancelled=report.n_cancelled, **{
+            f"mid_flight_{k}": v for k, v in stats["session"].items()})
     if "solver" in stats:
         out["solver_hit_rate"] = stats["solver"].get("hit_rate")
     print(json.dumps(out, indent=1, default=float))
@@ -180,6 +184,10 @@ def main(argv=None):
     ap.add_argument("--router", default=None,
                     choices=("least-loaded", "jsq", "edf-deadline"),
                     help="fleet scenarios: arrival router across replicas")
+    ap.add_argument("--no-mid-flight", action="store_true",
+                    help="session scenarios: suppress the mid-flight "
+                         "update_slo/cancel stream (the closed-world "
+                         "replay of the same workload)")
     ap.add_argument("--arch", default="smollm-135m-reduced")
     ap.add_argument("--policy", default="sponge")
     # None = "use the mode's default" (scenarios carry their own rps /

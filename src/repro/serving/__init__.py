@@ -1,5 +1,36 @@
-from repro.serving.workload import WorkloadGenerator
+"""The Sponge serving package: one control plane, pluggable everything.
+
+Public surface (snapshotted by ``tests/test_public_api.py``):
+
+* construction — ``make_sim_server`` / ``make_live_server`` /
+  ``make_policy`` and the ``SpongeServer`` facade;
+* engines — the object-based ``ScenarioRunner`` (+ ``SimBackend`` /
+  ``JaxBackend``) and the struct-of-arrays ``FastSimRunner`` /
+  ``TokenFastSimRunner`` (import from ``repro.serving.fastpath``) and
+  fleet runners (``repro.serving.fleet``);
+* the online session API — ``SpongeSession`` protocol, the per-engine
+  sessions, transcripts (``repro.serving.session``);
+* workloads — ``WorkloadGenerator`` / ``RequestBatch`` and the scenario
+  registry (``repro.serving.scenarios``).
+
+The PR 1 shims (``ClusterSimulator`` / ``simulate`` in
+``repro.serving.simulator``, ``ServingEngine`` in
+``repro.serving.engine``) are no longer re-exported here and warn on
+import — see the migration note in ``docs/api.md``.
+"""
+from repro.serving.workload import RequestBatch, WorkloadGenerator
 from repro.serving.api import (JaxBackend, RunReport, ScenarioRunner,
                                SimBackend, SpongeServer, make_live_server,
                                make_policy, make_sim_server, round_up_c)
-from repro.serving.simulator import ClusterSimulator, Server, simulate
+from repro.serving.session import (ExactSession, FastSession, FleetSession,
+                                   SessionTranscript, SpongeSession,
+                                   TokenFastSession, drive_session_events,
+                                   replay_transcript)
+
+__all__ = [
+    "ExactSession", "FastSession", "FleetSession", "JaxBackend",
+    "RequestBatch", "RunReport", "ScenarioRunner", "SessionTranscript",
+    "SimBackend", "SpongeServer", "SpongeSession", "TokenFastSession",
+    "WorkloadGenerator", "drive_session_events", "make_live_server",
+    "make_policy", "make_sim_server", "replay_transcript", "round_up_c",
+]

@@ -371,6 +371,12 @@ class RunReport:
       measured from client send time, seconds.
     * ``tbt_violation_rate`` — fraction of decode tokens whose gap from
       the previous token exceeded the request's per-token SLO.
+
+    Online-session extra (``repro.serving.session``):
+
+    * ``n_cancelled`` — requests withdrawn mid-flight via
+      ``SpongeSession.cancel``; excluded from every served/violation
+      aggregate (0 on closed-world replays).
     """
     policy: str
     backend: str
@@ -390,6 +396,7 @@ class RunReport:
     ttft_p50: float = float("nan")
     ttft_p99: float = float("nan")
     tbt_violation_rate: float = 0.0
+    n_cancelled: int = 0
 
     def __getitem__(self, key: str):
         return getattr(self, key)
@@ -407,7 +414,7 @@ class RunReport:
 
 def build_array_report(policy, backend: str, batch, finish: np.ndarray,
                        horizon: float, slots, core_samples,
-                       bucket_log) -> RunReport:
+                       bucket_log, n_cancelled: int = 0) -> RunReport:
     """The ONE report aggregation shared by the struct-of-arrays engines
     (``fastpath.FastSimRunner`` and both ``fleet`` runners): served mask
     over the ``finish`` column, violations strictly past ``deadline +
@@ -452,6 +459,7 @@ def build_array_report(policy, backend: str, batch, finish: np.ndarray,
         core_timeline=core_samples,
         decisions=decisions,
         buckets=bucket_log,
+        n_cancelled=n_cancelled,
     )
 
 
@@ -460,15 +468,18 @@ class ScenarioRunner:
     slack-aware EDF dispatch, server-free events — over any
     (policy, backend) pair.
 
-    The event engine is *streamed*: arrivals are consumed from the
-    (arrival-sorted) input sequence and adaptation ticks are generated
-    incrementally, so only dynamic events (batch completions and precise
-    wake-ups, deduplicated per slot) ever live on the heap — a
-    million-request trace keeps the heap at O(pool) instead of
-    pre-allocating O(n) event tuples the way the pre-refactor loop did
-    (kept verbatim in ``repro.serving.reference`` as the equivalence
-    oracle; ``repro.serving.fastpath`` is the struct-of-arrays engine for
-    simulation at full scale).
+    The event engine lives on the runner's **online session**
+    (``repro.serving.session.ExactSession``): arrivals sit on a pending
+    heap keyed ``(arrival, submission order)`` — the price of accepting
+    live submits in any order — while adaptation ticks are generated
+    incrementally and only dynamic events (batch completions and
+    precise wake-ups, deduplicated per slot) join the dynamic heap.
+    The pre-refactor loop is kept verbatim in
+    ``repro.serving.reference`` as the equivalence oracle;
+    ``repro.serving.fastpath`` is the struct-of-arrays engine for
+    simulation at full scale (this object-based runner materializes a
+    ``Request`` plus one heap tuple per submit, so it is the
+    small-scale / live-backend path).
 
     Dispatch waits to fill the scaler's batch size b and releases a
     partial batch only when the head request's deadline would otherwise
@@ -540,17 +551,27 @@ class ScenarioRunner:
         self.backend.on_submit(req, payload)
 
     # -- main loop ---------------------------------------------------------
+    def session(self) -> "repro.serving.session.ExactSession":
+        """Open an online session on this runner (``submit`` /
+        ``update_slo`` / ``cancel`` / ``step_until`` — see
+        ``repro.serving.session``).  One session per runner."""
+        from repro.serving.session import ExactSession
+        return ExactSession(self)
+
     def run(self, arrivals, horizon: Optional[float] = None) -> RunReport:
         """``arrivals``: Requests, (Request, payload) pairs for live
         backends, or a ``RequestBatch`` (materialized on entry).  Runs the
         event loop to ``horizon`` (default: last arrival + 60 s) in
         virtual time and returns a RunReport.
 
-        Event sources are merged lazily — sorted arrivals and the tick
-        train are streamed, only completions/wake-ups are heaped — with
-        the same total order the reference loop produces: time ascending;
-        at equal times arrivals, then ticks, then dynamic events in push
-        order.  Every event is followed by one dispatch pass.
+        This is a thin replay driver over :meth:`session`: every arrival
+        is submitted up front (onto the session's pending heap) and the
+        session drains to the horizon.  The event cursor merges the
+        pending arrivals, the incremental tick train and the dynamic
+        completion/wake-up heap with the same total order the reference
+        loop produces: time ascending; at equal times arrivals, then
+        ticks, then dynamic events in push order.  Every event is
+        followed by one dispatch pass.
         """
         from repro.serving.workload import RequestBatch
         if isinstance(arrivals, RequestBatch):
@@ -560,46 +581,10 @@ class ScenarioRunner:
         norm.sort(key=lambda p: p[0].arrival)   # stable: ties keep order
         if horizon is None:
             horizon = norm[-1][0].arrival + 60.0 if norm else 60.0
-        events: list[tuple[float, int, str, object]] = []
-        seq = itertools.count()
-        self._wake: Dict[int, float] = {}   # srv.id -> scheduled wake-up
-        self._slack_wake: Dict[int, float] = {}
-        self.events_processed = 0
-        ai, n_arr = 0, len(norm)
-        next_tick = 0.0
-        INF = float("inf")
-
-        while True:
-            ta = norm[ai][0].arrival if ai < n_arr else INF
-            tt = next_tick if next_tick <= horizon else INF
-            td = events[0][0] if events else INF
-            if ta <= tt and ta <= td:       # arrivals win ties (reference
-                t, kind = ta, "arrival"     # loop pushed them first)
-            elif tt <= td:
-                t, kind = tt, "tick"
-            else:
-                t, kind = td, "dyn"
-            if t == INF or t > horizon:
-                break
-            self.events_processed += 1
-            self.now = t
-            if kind == "arrival":
-                req, payload = norm[ai]
-                ai += 1
-                self.submit(req, payload)
-            elif kind == "tick":
-                next_tick += self.tick
-                if hasattr(self.policy, "on_tick"):
-                    self.policy.on_tick(t, self)
-                else:                       # bare SchedulingPolicy
-                    self.drive(self.policy, t)
-                self.core_samples.append((t, self.allocated_cores))
-            else:
-                # "free" / "check": fall through to the dispatch pass
-                heapq.heappop(events)
-            self._dispatch(t, events, seq)
-
-        return self.results(horizon)
+        sess = self.session()
+        for req, payload in norm:
+            sess.submit(req, payload=payload)
+        return sess.finish(horizon)
 
     def _dispatch(self, t: float, events, seq) -> None:
         queue = self.queue
@@ -682,6 +667,7 @@ class ScenarioRunner:
             core_timeline=self.core_samples,
             decisions=decisions,
             buckets=self.bucket_log,
+            n_cancelled=mon.n_cancelled,
             **token_kw,
         )
 
@@ -714,6 +700,12 @@ class SpongeServer:
 
     def warmup(self, example_payload: Any) -> None:
         self.backend.warmup(example_payload)
+
+    def session(self):
+        """Open an online session on the composed runner (``submit`` /
+        ``update_slo`` / ``cancel`` / ``step_until`` — the live-client
+        surface; see ``repro.serving.session``)."""
+        return self.runner.session()
 
     def run(self, arrivals: Sequence, horizon: Optional[float] = None
             ) -> RunReport:
@@ -802,9 +794,14 @@ def make_live_server(arch: str = "smollm-135m-reduced", *,
     calibrate the jitted (c, b) executable table, wire the control plane.
     Returns ``(server, model_config)``."""
     import jax
+    import warnings
     from repro.configs import get_config
     from repro.models import build_model
-    from repro.serving.engine import build_llm_step_fns, pad_tokens
+    with warnings.catch_warnings():
+        # the shim module warns on import; its step-fn helpers are not
+        # deprecated — only the ServingEngine facade is
+        warnings.simplefilter("ignore", DeprecationWarning)
+        from repro.serving.engine import build_llm_step_fns, pad_tokens
     cfg = get_config(arch)
     model = build_model(cfg)
     params = model.init(jax.random.key(0))

@@ -25,6 +25,7 @@ Prefer constructing through ``repro.serving.api.make_live_server`` —
 """
 from __future__ import annotations
 
+import warnings
 from typing import Callable, Dict, List, Sequence
 
 import numpy as np
@@ -32,6 +33,12 @@ import numpy as np
 from repro.core.scaler import SpongeScaler
 from repro.core.slo import Decision, Request
 from repro.serving.api import JaxBackend, ScenarioRunner, ServedRequest
+
+warnings.warn(
+    "repro.serving.engine is deprecated: construct through "
+    "repro.serving.api.make_live_server (or compose SpongeServer with a "
+    "JaxBackend) — see the migration note in docs/api.md",
+    DeprecationWarning, stacklevel=2)
 
 __all__ = ["ServingEngine", "ServedRequest", "build_llm_step_fns",
            "pad_tokens"]

@@ -31,22 +31,26 @@ the bare ``decide(now, queue, lam, initial_wait)`` protocol (Sponge,
 static, FA2 all do); legacy policies that mutate the pool or inspect
 ``Request`` objects (``MultiDimPolicy``, ``PredictivePolicy``) need the
 object-based ``ScenarioRunner``.
+
+Since ISSUE 5 the event loops themselves live on the **online
+sessions** (``repro.serving.session.FastSession`` /
+``TokenFastSession``): this module keeps the engine configuration,
+slot pool, decision application and reporting, while ``run()`` is a
+thin replay driver — submit the whole workload, drain, report — which
+is exactly the no-renegotiation special case of the session.
 """
 from __future__ import annotations
 
-import heapq
 import itertools
 from typing import Dict, List, Optional
 
 import numpy as np
 
-from repro.core.cost_model import Composition, TokenCostModel
-from repro.core.monitor import array_window_rate
+from repro.core.cost_model import TokenCostModel
 from repro.core.perf_model import PerfModel
 from repro.core.queueing import FastEDFQueue, TokenFastEDFQueue
 from repro.core.solver import DEFAULT_B, DEFAULT_C
-from repro.serving.api import (RunReport, build_array_report,
-                               resolve_decision, round_up_c)
+from repro.serving.api import RunReport, resolve_decision
 from repro.serving.workload import RequestBatch
 
 
@@ -131,25 +135,6 @@ class FastSimRunner:
     def allocated_cores(self) -> int:
         return sum(s.c for s in self.slots)
 
-    def _rate(self, now: float) -> float:
-        """Sliding-window λ with deploy-prior blend — the shared
-        ``core.monitor.array_window_rate`` two-pointer estimate (same
-        floats as ``RateEstimator``, single-arrival guard included)."""
-        lam, self._w0 = array_window_rate(self._arr, self._ai, self._w0,
-                                          now, self.rate_window,
-                                          self.prior_rps)
-        return lam
-
-    def drive(self, policy, now: float) -> None:
-        """One adaptation step (same drive path as ``ScenarioRunner``)."""
-        due = policy.due(now) if hasattr(policy, "due") else True
-        if not due:
-            return
-        lam = self._rate(now)
-        wait0 = max(self.slots[0].busy_until - now, 0.0)
-        d = policy.decide(now, self.queue, lam, initial_wait=wait0)
-        self._apply(d, now)
-
     def _apply(self, d, now: float) -> None:
         c, self.b = resolve_decision(self.c_set, d)
         pen = self.resize_penalty
@@ -172,107 +157,25 @@ class FastSimRunner:
                 s.dead_at = max(now, s.busy_until)
                 self.dead.append(s)
 
-    # -- the loop ----------------------------------------------------------
+    # -- entry points ------------------------------------------------------
+    def session(self) -> "repro.serving.session.FastSession":
+        """Open the online session on this runner (``submit`` /
+        ``update_slo`` / ``cancel`` / ``step_until`` — see
+        ``repro.serving.session``).  The session owns the event cursor
+        and the dispatch pass; one session per runner."""
+        from repro.serving.session import FastSession
+        return FastSession(self)
+
     def run(self, batch: RequestBatch,
             horizon: Optional[float] = None) -> RunReport:
-        arr = np.ascontiguousarray(batch.arrival, np.float64)
-        dl = np.ascontiguousarray(batch.deadline, np.float64)
-        n = arr.size
-        if n and np.any(np.diff(arr) < 0):
-            raise ValueError("RequestBatch must be sorted by arrival")
-        if horizon is None:
-            horizon = float(arr[-1]) + 60.0 if n else 60.0
-        finish = np.full(n, np.nan)
-        self._arr = arr
-        self._ai = 0
-        self._w0 = 0
-        policy = self.policy
-        queue = self.queue
-        lat = self._lat
-        bucket_arr = self._bucket_arr
-        margin = self.dispatch_margin
-        tick = self.tick
-        slack_wake: Dict[int, float] = {}
-        busy_wake: Dict[int, float] = {}
-        events: list[tuple[float, int, int]] = []
-        seq = itertools.count()
-        has_on_tick = hasattr(policy, "on_tick")
-        push, pop = heapq.heappush, heapq.heappop
-        next_tick = 0.0
-        ai = 0
-        INF = float("inf")
-        n_events = 0
-
-        while True:
-            ta = arr[ai] if ai < n else INF
-            tt = next_tick if next_tick <= horizon else INF
-            td = events[0][0] if events else INF
-            if ta <= tt and ta <= td:
-                t = ta
-                kind = 0
-            elif tt <= td:
-                t = tt
-                kind = 1
-            else:
-                t = td
-                kind = 2
-            if t == INF or t > horizon:
-                break
-            n_events += 1
-            if kind == 0:
-                queue.push(dl[ai], ai)
-                ai += 1
-                self._ai = ai
-            elif kind == 1:
-                next_tick += tick
-                if has_on_tick:
-                    policy.on_tick(t, self)
-                else:
-                    self.drive(policy, t)
-                self.core_samples.append((t, self.allocated_cores))
-            else:
-                pop(events)
-            # -- dispatch pass (inlined hot path) --------------------------
-            if len(queue._heap):
-                b_now = self.b
-                for s in self.slots:
-                    if s.ready_at > t or s.busy_until > t:
-                        wake_t = (s.ready_at if s.ready_at > s.busy_until
-                                  else s.busy_until)
-                        if busy_wake.get(s.id) != wake_t:
-                            busy_wake[s.id] = wake_t
-                            push(events, (wake_t, next(seq), s.id))
-                        continue
-                    while queue._heap and s.busy_until <= t:
-                        q = len(queue._heap)
-                        if q < b_now:
-                            head_dl = queue._heap[0][0]
-                            l_full = lat[(s.c, self._bucket(b_now))]
-                            t_force = head_dl - l_full - margin
-                            if t < t_force:
-                                tw = min(t_force, t + tick)
-                                if slack_wake.get(s.id) != tw:
-                                    slack_wake[s.id] = tw
-                                    push(events, (tw, next(seq), s.id))
-                                break
-                        idxs = queue.pop_batch(b_now)
-                        m = len(idxs)
-                        bucket = int(bucket_arr[m])
-                        fin = t + lat[(s.c, bucket)]
-                        s.busy_until = fin
-                        self.bucket_log.append((t, s.c, bucket, m))
-                        finish[idxs] = fin
-                        push(events, (fin, next(seq), s.id))
-
-        self.events_processed = n_events
-        return self._report(batch, finish, horizon)
-
-    # -- reporting ---------------------------------------------------------
-    def _report(self, batch: RequestBatch, finish: np.ndarray,
-                horizon: float) -> RunReport:
-        return build_array_report(self.policy, "sim-fast", batch, finish,
-                                  horizon, self.slots + self.dead,
-                                  self.core_samples, self.bucket_log)
+        """Thin replay driver over :meth:`session`: submit the whole
+        (arrival-sorted) workload, drain to ``horizon`` (default: last
+        arrival + 60 s) and report.  With no mid-flight events the
+        session processes the identical event stream the closed-world
+        loop did (the ``tests/test_fastpath.py`` contract)."""
+        sess = self.session()
+        sess.submit_batch(batch)
+        return sess.finish(horizon)
 
 
 class TokenFastSimRunner(FastSimRunner):
@@ -329,169 +232,29 @@ class TokenFastSimRunner(FastSimRunner):
             s.c = c
             self._pending_penalty += self.resize_penalty
 
-    def drive(self, policy, now: float, active_slots: int = 0,
-              tbt_budget: float = float("inf"),
-              initial_wait: float = 0.0) -> None:
-        """One adaptation step over the token-aware decide protocol."""
-        due = policy.due(now) if hasattr(policy, "due") else True
-        if not due:
-            return
-        lam = self._rate(now)
-        d = policy.decide(now, self.queue, lam, initial_wait=initial_wait,
-                          active_slots=active_slots, tbt_budget=tbt_budget)
-        self._apply(d, now)
+    # -- entry points ------------------------------------------------------
+    def session(self) -> "repro.serving.session.TokenFastSession":
+        """Open the online session on this runner (TTFT renegotiation /
+        cancellation for requests still waiting for admission — see
+        ``repro.serving.session``)."""
+        from repro.serving.session import TokenFastSession
+        return TokenFastSession(self)
 
-    # -- the loop ----------------------------------------------------------
     def run(self, batch: RequestBatch,
             horizon: Optional[float] = None) -> RunReport:
-        arr = np.ascontiguousarray(batch.arrival, np.float64)
-        dl = np.ascontiguousarray(batch.deadline, np.float64)
-        ptoks = np.ascontiguousarray(batch.prompt_tokens, np.int64)
-        dtoks = np.ascontiguousarray(batch.decode_tokens, np.int64)
-        tbts = np.ascontiguousarray(batch.tbt_slo, np.float64)
-        n = arr.size
-        if n and np.any(np.diff(arr) < 0):
-            raise ValueError("RequestBatch must be sorted by arrival")
-        if horizon is None:
-            horizon = float(arr[-1]) + 60.0 if n else 60.0
-        self.queue.bind(ptoks, tbts)
-        first_tok = np.full(n, np.nan)
-        finish = np.full(n, np.nan)
-        tbt_bad = np.zeros(n, bool)
-        self._arr = arr
-        self._ai = 0
-        self._w0 = 0
-        policy = self.policy
-        queue = self.queue
-        cost = self.cost
-        slot = self.slots[0]
-        tick = self.tick
-        next_tick = 0.0
-        ai = 0
-        INF = float("inf")
-        n_events = 0
-        # running decode streams (slot cap <= max(b_set): plain lists)
-        run_idx: list[int] = []
-        run_rem: list[int] = []
-        run_tbt: list[float] = []
-        # the step in flight
-        step_end = INF
-        step_start = 0.0
-        step_admit: list[int] = []
-        step_decoders = 0
-        tokens_served = 0
-        decode_tokens_served = 0
-        tbt_viol_tokens = 0
-
-        def start_step(t0: float) -> float:
-            """Admit waiting requests, compose the step, return its end
-            (INF when there is no work to run).
-
-            Admission is EDF-ordered and **chunk-bounded**: the total
-            prefill tokens joining one step are capped by the cost
-            model's ``prefill_token_allowance`` for the tightest
-            per-token SLO among running streams, so a large joining
-            prompt cannot stall running decoders past their TBT budget
-            (the deferred prompt re-queues at the head and joins once
-            slots free up or the scaler raises c)."""
-            nonlocal step_admit, step_decoders, step_start
-            free = self.b - len(run_idx)
-            admit: list[int] = []
-            if free > 0 and queue._heap:
-                allowance = (cost.prefill_token_allowance(
-                    slot.c, len(run_idx), min(run_tbt))
-                    if run_tbt else INF)
-                total = 0
-                heap = queue._heap
-                while heap and len(admit) < free:
-                    i = heap[0][1]
-                    if total + ptoks[i] > allowance:
-                        break
-                    heapq.heappop(heap)
-                    admit.append(i)
-                    total += int(ptoks[i])
-            if not admit and not run_idx:
-                return INF
-            step_admit = admit
-            step_decoders = len(run_idx)
-            ptok = int(ptoks[admit].sum()) if admit else 0
-            l = cost.step_latency(slot.c,
-                                  Composition(ptok, step_decoders))
-            l += self._pending_penalty
-            self._pending_penalty = 0.0
-            step_start = t0
-            return t0 + l
-
-        while True:
-            ta = arr[ai] if ai < n else INF
-            tt = next_tick if next_tick <= horizon else INF
-            if ta <= tt and ta <= step_end:
-                t, kind = ta, 0
-            elif tt <= step_end:
-                t, kind = tt, 1
-            else:
-                t, kind = step_end, 2
-            if t == INF or t > horizon:
-                break
-            n_events += 1
-            if kind == 0:                        # arrival
-                queue.push(dl[ai], ai)
-                ai += 1
-                self._ai = ai
-            elif kind == 1:                      # adaptation tick
-                next_tick += tick
-                run_tbt_min = min(run_tbt) if run_tbt else INF
-                iw = max(step_end - t, 0.0) if step_end < INF else 0.0
-                self.drive(policy, t, active_slots=len(run_idx),
-                           tbt_budget=run_tbt_min, initial_wait=iw)
-                self.core_samples.append((t, slot.c))
-            else:                                # step boundary
-                gap = t - step_start
-                # one decode token per stream that ran this step (the
-                # first ``step_decoders`` entries; joins append later)
-                nxt_idx: list[int] = []
-                nxt_rem: list[int] = []
-                nxt_tbt: list[float] = []
-                for k in range(step_decoders):
-                    i = run_idx[k]
-                    tokens_served += 1
-                    decode_tokens_served += 1
-                    if gap > run_tbt[k] + 1e-12:
-                        tbt_viol_tokens += 1
-                        tbt_bad[i] = True
-                    if run_rem[k] > 1:
-                        nxt_idx.append(i)
-                        nxt_rem.append(run_rem[k] - 1)
-                        nxt_tbt.append(run_tbt[k])
-                    else:
-                        finish[i] = t
-                # first tokens (TTFT) for the requests admitted this step
-                for i in step_admit:
-                    first_tok[i] = t
-                    tokens_served += 1
-                    if dtoks[i] > 0:
-                        nxt_idx.append(i)
-                        nxt_rem.append(int(dtoks[i]))
-                        nxt_tbt.append(float(tbts[i]))
-                    else:
-                        finish[i] = t
-                run_idx, run_rem, run_tbt = nxt_idx, nxt_rem, nxt_tbt
-                step_admit = []
-                step_decoders = 0
-                step_end = start_step(t)
-            if step_end == INF and (queue._heap or run_idx):
-                step_end = start_step(t)
-
-        self.events_processed = n_events
-        return self._token_report(batch, first_tok, finish, tbt_bad,
-                                  tokens_served, decode_tokens_served,
-                                  tbt_viol_tokens, horizon)
+        """Thin replay driver over :meth:`session` (submit the workload,
+        drain, report) — the continuous-batching loop itself lives on
+        :class:`~repro.serving.session.TokenFastSession`."""
+        sess = self.session()
+        sess.submit_batch(batch)
+        return sess.finish(horizon)
 
     # -- reporting ---------------------------------------------------------
     def _token_report(self, batch: RequestBatch, first_tok: np.ndarray,
                       finish: np.ndarray, tbt_bad: np.ndarray,
                       tokens_served: int, decode_tokens_served: int,
-                      tbt_viol_tokens: int, horizon: float) -> RunReport:
+                      tbt_viol_tokens: int, horizon: float,
+                      n_cancelled: int = 0) -> RunReport:
         """Vectorized aggregates over the token run."""
         served = ~np.isnan(finish)
         send = batch.arrival - batch.comm_latency
@@ -534,4 +297,5 @@ class TokenFastSimRunner(FastSimRunner):
             ttft_p50=p(ttft, 0.50), ttft_p99=p(ttft, 0.99),
             tbt_violation_rate=(tbt_viol_tokens
                                 / max(decode_tokens_served, 1)),
+            n_cancelled=n_cancelled,
         )

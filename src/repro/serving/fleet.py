@@ -46,6 +46,13 @@ release — fail-stop after the current batch), ``(t, "restart", i,
 delay)`` does the same but immediately spawns a replacement that cold
 starts for ``delay`` seconds.  Recovery is the scaler's job: the next
 adaptation tick sees the shrunken fleet and re-targets ``n``.
+
+Since ISSUE 5 the fast engine's event loop lives on the online session
+(``repro.serving.session.FleetSession`` — mid-flight ``update_slo``
+re-routes tightened budgets through the arrival router, ``cancel``
+excises queued work) and ``FleetFastSimRunner.run`` is its
+no-renegotiation replay; ``FleetExactRunner`` keeps the pre-heaped
+closed-world gang loop as the decision-identity oracle.
 """
 from __future__ import annotations
 
@@ -140,16 +147,16 @@ def route_request(router: str, replicas: Sequence[FleetReplica],
     best = 0
     best_key: Optional[tuple] = None
     for i, r in enumerate(replicas):
-        h = r.queue._heap
-        cold = cold_load(r) if cold_load is not None else 0.0
+        qn = len(r.queue)               # live entries only (renegotiation
+        cold = cold_load(r) if cold_load is not None else 0.0   # safe)
         if router == "least-loaded":
             busy = 1 if (r.busy_until > now or r.ready_at > now) else 0
-            key = (len(h) + busy + cold, i)
+            key = (qn + busy + cold, i)
         elif router == "jsq":
-            key = (len(h), i)
+            key = (qn, i)
         elif router == "edf-deadline":
             ahead = bisect_left(r.dls, deadline)
-            key = (ahead + cold, len(h), i)
+            key = (ahead + cold, qn, i)
         else:
             raise KeyError(f"unknown router {router!r}; known: {ROUTERS}")
         if best_key is None or key < best_key:
@@ -448,12 +455,18 @@ class _FleetRunnerBase:
                                           self.prior_rps)
         return lam
 
-    def _drive(self, now: float) -> None:
-        """One adaptation step: global snapshot -> joint decide -> apply."""
+    def _drive(self, now: float, lam: Optional[float] = None) -> None:
+        """One adaptation step: global snapshot -> joint decide -> apply.
+
+        ``lam`` overrides the λ source (the online session passes its
+        cancel-aware estimate; the closed-world oracle loop uses the
+        runner's own two-pointer window) — one copy of the drive rule,
+        so the session and oracle paths cannot drift."""
         pol = self.policy
         if hasattr(pol, "due") and not pol.due(now):
             return
-        lam = self._rate(now)
+        if lam is None:
+            lam = self._rate(now)
         reps = self.replicas
         iw = min(max(r.busy_until - now, 0.0) for r in reps)
         rem = np.sort(np.concatenate(
@@ -528,8 +541,7 @@ class FleetFastSimRunner(_FleetRunnerBase):
         return FastEDFQueue()
 
     def _requeue(self, src: FleetReplica, now: float) -> None:
-        h = src.queue._heap
-        items = [heapq.heappop(h) for _ in range(len(h))]   # EDF order
+        items = src.queue.drain()                           # EDF order
         src.dls.clear()
         cold = self._cold_load(now)
         for dl, idx in items:
@@ -540,110 +552,28 @@ class FleetFastSimRunner(_FleetRunnerBase):
             if self._track_dls:
                 insort(tgt.dls, dl)
 
+    def session(self, fleet_events=()
+                ) -> "repro.serving.session.FleetSession":
+        """Open the online session on this fleet (``submit`` /
+        ``update_slo`` / ``cancel`` / ``step_until``; a tightened budget
+        re-routes through the arrival router — see
+        ``repro.serving.session``).  ``fleet_events`` are the optional
+        kill/restart disruptions."""
+        from repro.serving.session import FleetSession
+        return FleetSession(self, fleet_events=fleet_events)
+
     def run(self, batch: RequestBatch, horizon: Optional[float] = None,
             events=()) -> RunReport:
-        """Run the fleet over a struct-of-arrays workload (plus optional
-        fleet events) and return a :class:`RunReport`."""
-        arr = np.ascontiguousarray(batch.arrival, np.float64)
-        dl = np.ascontiguousarray(batch.deadline, np.float64)
-        n = arr.size
-        if n and np.any(np.diff(arr) < 0):
-            raise ValueError("RequestBatch must be sorted by arrival")
-        if horizon is None:
-            horizon = float(arr[-1]) + 60.0 if n else 60.0
-        fev = normalize_fleet_events(events)
-        finish = np.full(n, np.nan)
-        self._arr = arr
-        self._ai = 0
-        self._w0 = 0
-        lat = self._lat
-        bucket_arr = self._bucket_arr
-        margin = self.dispatch_margin
-        tick = self.tick
-        track_dls = self._track_dls
-        slack_wake: Dict[int, float] = {}
-        busy_wake: Dict[int, float] = {}
-        dyn: list[tuple[float, int, int]] = []
-        seq = itertools.count()
-        push, pop = heapq.heappush, heapq.heappop
-        next_tick = 0.0
-        ai = 0
-        fi = 0
-        INF = float("inf")
-        n_events = 0
-
-        while True:
-            ta = arr[ai] if ai < n else INF
-            tt = next_tick if next_tick <= horizon else INF
-            tf = fev[fi][0] if fi < len(fev) else INF
-            td = dyn[0][0] if dyn else INF
-            if ta <= tt and ta <= tf and ta <= td:
-                t, kind = ta, 0
-            elif tt <= tf and tt <= td:
-                t, kind = tt, 1
-            elif tf <= td:
-                t, kind = tf, 2
-            else:
-                t, kind = td, 3
-            if t == INF or t > horizon:
-                break
-            n_events += 1
-            if kind == 0:                        # arrival: route + enqueue
-                j = route_request(self.router, self.replicas, dl[ai], t,
-                                  cold_load=self._cold_load(t))
-                tgt = self.replicas[j]
-                tgt.queue.push(dl[ai], ai)
-                if track_dls:
-                    insort(tgt.dls, dl[ai])
-                ai += 1
-                self._ai = ai
-            elif kind == 1:                      # adaptation tick
-                next_tick += tick
-                self._drive(t)
-                self.core_samples.append((t, self.allocated_cores))
-            elif kind == 2:                      # fleet event
-                _, ev_kind, ev_args = fev[fi]
-                fi += 1
-                self._fleet_event(ev_kind, ev_args, t)
-            else:                                # completion / wake-up
-                pop(dyn)
-            # -- dispatch pass (every replica, same rules as FastSimRunner)
-            b_now = self.b
-            for r in self.replicas:
-                q = r.queue._heap
-                if not q:
-                    continue
-                if r.ready_at > t or r.busy_until > t:
-                    wake_t = (r.ready_at if r.ready_at > r.busy_until
-                              else r.busy_until)
-                    if busy_wake.get(r.id) != wake_t:
-                        busy_wake[r.id] = wake_t
-                        push(dyn, (wake_t, next(seq), r.id))
-                    continue
-                while q and r.busy_until <= t:
-                    if len(q) < b_now:
-                        head_dl = q[0][0]
-                        l_full = lat[(r.c, self._bucket(b_now))]
-                        t_force = head_dl - l_full - margin
-                        if t < t_force:
-                            tw = min(t_force, t + tick)
-                            if slack_wake.get(r.id) != tw:
-                                slack_wake[r.id] = tw
-                                push(dyn, (tw, next(seq), r.id))
-                            break
-                    idxs = r.queue.pop_batch(b_now)
-                    m = len(idxs)
-                    if track_dls:
-                        del r.dls[:m]   # pop_batch took the m earliest
-                    bucket = int(bucket_arr[m])
-                    fin = t + lat[(r.c, bucket)]
-                    r.busy_until = fin
-                    self.bucket_log.append((t, r.c, bucket, m))
-                    finish[idxs] = fin
-                    push(dyn, (fin, next(seq), r.id))
-
-        self.events_processed = n_events
-        return self._report(batch, finish, horizon)
+        """Thin replay driver over :meth:`session`: submit the whole
+        struct-of-arrays workload (plus optional fleet events), drain
+        to the horizon, report.  With no mid-flight renegotiation the
+        session replays the identical event stream the closed-world
+        fleet loop did — the decision-identity contract
+        ``tests/test_fleet.py`` holds against the pre-heaped
+        :class:`FleetExactRunner` oracle."""
+        sess = self.session(fleet_events=events)
+        sess.submit_batch(batch)
+        return sess.finish(horizon)
 
 
 class FleetExactRunner(_FleetRunnerBase):

@@ -37,6 +37,11 @@ Registered scenarios (see ``docs/scenarios.md`` for the full briefs):
   joint horizontal + vertical engines in ``repro.serving.fleet``):
   mid-run replica loss, a rolling deploy under live traffic, and
   arrival spikes against a peak-provisioned static-fleet baseline.
+* ``slo-renegotiation`` / ``cancel-storm`` — online-session scenarios
+  (``meta["session_events"]`` routes the run through the session API,
+  ``repro.serving.session``): network telemetry re-keys queued
+  requests' deadlines mid-flight (fades tighten, recoveries relax);
+  overload spikes in which half the queued spike traffic cancels.
 
 Adding a scenario: write a ``build(duration, rps, rng) ->
 (RequestBatch, meta)`` function, wrap it in :class:`Scenario`, decorate
@@ -394,6 +399,99 @@ register(Scenario(
 
 
 # --------------------------------------------------------------------------
+# online-session scenarios (mid-flight renegotiation — ISSUE 5)
+# --------------------------------------------------------------------------
+def _build_slo_renegotiation(duration, rps, rng):
+    """Live telemetry renegotiates queued budgets as the network moves.
+
+    Each request's deadline is provisioned at send time for the
+    response-path latency the link then sustains; shortly after arrival
+    a fraction of clients report fresh telemetry (``session_events``)
+    and the deadline is re-keyed to ``send + slo - response_latency(t)``
+    — a fade *tightens* a queued request's budget, a recovery *relaxes*
+    it.  This is the paper's dynamic-SLO mechanism continued past
+    submission, driven by the same 4G bandwidth replay."""
+    import dataclasses
+    seed = int(rng.integers(2**31))
+    trace = synth_4g_trace(_trace_seconds(duration), seed=seed)
+    send = poisson_times(rps, duration, rng)
+    sizes = np.full(send.shape, 200.0)
+    cl = comm_latency_many(sizes, trace, send)
+    batch = RequestBatch.from_send(send, cl, slo=1.0, size_kb=sizes)
+    # provision the response leg (replies are ~4x smaller than request
+    # payloads) at send-time bandwidth: the server must finish early
+    # enough for the reply to make the end-to-end SLO
+    resp_kb = batch.size_kb * 0.25
+    resp0 = comm_latency_many(resp_kb, trace,
+                              batch.arrival - batch.comm_latency)
+    batch = dataclasses.replace(batch, deadline=batch.deadline - resp0)
+    n = len(batch)
+    pick = rng.uniform(0.0, 1.0, n) < 0.35
+    t_ev = batch.arrival + rng.uniform(0.05, 0.45, n)
+    resp1 = comm_latency_many(resp_kb, trace, t_ev)
+    new_dl = (batch.arrival - batch.comm_latency) + batch.slo - resp1
+    events = sorted(
+        (float(t_ev[i]), "update", int(i), float(new_dl[i]))
+        for i in np.flatnonzero(pick))
+    return batch, {"slo": 1.0, "expected_rps": rps, "trace": trace,
+                   "session_events": tuple(events), "tick": 0.5}
+
+
+register(Scenario(
+    name="slo-renegotiation",
+    summary="network telemetry re-keys queued requests' budgets "
+            "mid-flight (35% of clients; fades tighten, recoveries "
+            "relax) — the online session API's headline scenario",
+    build=_build_slo_renegotiation, default_rps=20.0,
+    default_duration=600.0))
+
+
+def _build_cancel_storm(duration, rps, rng):
+    """Overload spikes where clients abandon queued requests en masse.
+
+    Two arrival spikes push the queue past capacity; half the requests
+    sent inside a spike cancel shortly after arriving (users giving up
+    during the overload).  The cancel-aware λ window must deflate the
+    provisioning signal immediately and the EDF queues must excise the
+    cancelled entries without stalling dispatch."""
+    seed = int(rng.integers(2**31))
+    trace = synth_4g_trace(_trace_seconds(duration), seed=seed)
+    spikes = ((0.35, 0.04, 4.0), (0.65, 0.03, 4.0))   # (start, len, x-rate)
+
+    def rate(t):
+        r = np.full(t.shape, float(rps))
+        for frac, width, mult in spikes:
+            s = frac * duration
+            r = np.where((t >= s) & (t < s + width * duration),
+                         rps * mult, r)
+        return r
+
+    send = inhomogeneous_poisson_times(rate, rps * 4.0, duration, rng)
+    cl = comm_latency_many(np.full(send.shape, 200.0), trace, send)
+    batch = RequestBatch.from_send(send, cl, slo=1.0, size_kb=200.0)
+    n = len(batch)
+    src_send = batch.arrival - batch.comm_latency
+    in_spike = np.zeros(n, bool)
+    for frac, width, _ in spikes:
+        s = frac * duration
+        in_spike |= (src_send >= s) & (src_send < s + width * duration)
+    pick = in_spike & (rng.uniform(0.0, 1.0, n) < 0.5)
+    t_ev = batch.arrival + rng.uniform(0.1, 0.6, n)
+    events = sorted((float(t_ev[i]), "cancel", int(i))
+                    for i in np.flatnonzero(pick))
+    return batch, {"slo": 1.0, "expected_rps": rps, "trace": trace,
+                   "session_events": tuple(events), "tick": 0.5}
+
+
+register(Scenario(
+    name="cancel-storm",
+    summary="4x overload spikes where half the spike traffic cancels "
+            "while queued — exercises EDF excision + cancel-aware λ",
+    build=_build_cancel_storm, default_rps=15.0, default_duration=600.0,
+    mean_rate_factor=1.21))   # 1 + 0.04*(4-1) + 0.03*(4-1)
+
+
+# --------------------------------------------------------------------------
 # building + running
 # --------------------------------------------------------------------------
 def build_scenario(name: str, *, duration: Optional[float] = None,
@@ -425,6 +523,7 @@ def run_scenario(name: str, *, policy: str = "sponge",
                  budget_quantum: float = 0.01, lam_quantum: float = 0.5,
                  replicas: Optional[int] = None,
                  router: Optional[str] = None,
+                 mid_flight: bool = True,
                  **policy_kw):
     """Run a registered scenario end to end; returns ``(RunReport,
     stats)`` where ``stats`` carries engine/meta/solver-cache info.
@@ -434,7 +533,12 @@ def run_scenario(name: str, *, policy: str = "sponge",
     ``make_sim_server`` with the paper's bruteforce solver.  Fleet
     scenarios (``meta["fleet"]``) run the joint engines instead
     (``replicas`` overrides the deploy-time fleet size, ``router`` the
-    arrival router — see ``repro.serving.fleet``).
+    arrival router — see ``repro.serving.fleet``).  Session scenarios
+    (``meta["session_events"]``: ``slo-renegotiation``,
+    ``cancel-storm``) run through the online session API
+    (``repro.serving.session``); ``mid_flight=False`` suppresses the
+    event stream — the no-renegotiation replay of the same workload,
+    the baseline the decision-stream delta is measured against.
     """
     import time
     from repro.serving.api import make_policy, make_sim_server
@@ -459,6 +563,14 @@ def run_scenario(name: str, *, policy: str = "sponge",
                                    lam_quantum=lam_quantum,
                                    replicas=replicas, router=router,
                                    **policy_kw)
+    if meta.get("session_events") is not None:
+        return _run_session_scenario(batch, meta, policy=policy,
+                                     engine=engine, perf=perf,
+                                     c_set=c_set, b_set=b_set, c0=c0,
+                                     tick=tick, horizon=horizon,
+                                     budget_quantum=budget_quantum,
+                                     lam_quantum=lam_quantum,
+                                     mid_flight=mid_flight, **policy_kw)
     common = dict(slo=meta["slo"], expected_rps=meta["expected_rps"],
                   adaptation_interval=tick)
     if engine == "fast":
@@ -491,6 +603,65 @@ def run_scenario(name: str, *, policy: str = "sponge",
                     "events": server.runner.events_processed,
                     "run_wall_s": time.perf_counter() - t0,
                     "meta": meta}
+
+
+def _run_session_scenario(batch: RequestBatch, meta: dict, *, policy: str,
+                          engine: str, perf: PerfModel, c_set, b_set,
+                          c0: int, tick: float, horizon,
+                          budget_quantum: float, lam_quantum: float,
+                          mid_flight: bool = True, **policy_kw):
+    """Session-scenario execution: the online serving API end to end.
+
+    The workload is submitted through a live session and the scenario's
+    ``session_events`` stream (mid-flight ``update_slo`` / ``cancel``
+    ops, time-sorted) is applied between ``step_until`` advances —
+    exactly how a network-telemetry feed would drive a real deployment.
+    ``engine="fast"`` opens the session on a ``FastSimRunner`` (the
+    ≥100k-request path, ``benchmarks/session_bench.py``);
+    ``engine="exact"`` on the object-based ``ScenarioRunner``.
+    ``mid_flight=False`` replays submits only (the closed-world
+    baseline).  ``stats["session"]`` reports applied/no-op counts.
+    """
+    import time
+    from repro.serving.api import make_policy, make_sim_server
+    from repro.serving.fastpath import FastSimRunner
+    from repro.serving.session import drive_session_events
+    if engine not in ("fast", "exact"):
+        raise ValueError(f"session scenarios run on the 'fast' or "
+                         f"'exact' engine (got {engine!r})")
+    events = meta.get("session_events", ()) if mid_flight else ()
+    common = dict(slo=meta["slo"], expected_rps=meta["expected_rps"],
+                  adaptation_interval=tick)
+    scaler = None
+    if engine == "fast":
+        if policy.startswith("sponge-pred"):
+            raise ValueError("sponge-pred inspects Request objects; "
+                             "run it with engine='exact'")
+        kw = dict(common, **policy_kw)
+        if policy == "sponge":
+            kw.update(solver="memo", budget_quantum=budget_quantum,
+                      lam_quantum=lam_quantum)
+        pol = make_policy(policy, perf, c_set=c_set, b_set=b_set, **kw)
+        runner = FastSimRunner(pol, perf, c_set, b_set, c0=c0, tick=tick,
+                               prior_rps=meta["expected_rps"])
+        sess = runner.session()
+        scaler = getattr(pol, "scaler", None)
+    else:
+        server = make_sim_server(perf, policy, c_set=c_set, b_set=b_set,
+                                 c0=c0, tick=tick,
+                                 prior_rps=meta["expected_rps"],
+                                 **dict(common, **policy_kw))
+        sess = server.session()
+    t0 = time.perf_counter()
+    handles = sess.submit_batch(batch)
+    applied = drive_session_events(sess, handles, events)
+    report = sess.finish(horizon)
+    stats = {"engine": engine, "events": sess.events_processed,
+             "run_wall_s": time.perf_counter() - t0, "meta": meta,
+             "session": applied}
+    if scaler is not None and hasattr(scaler, "solver_stats"):
+        stats["solver"] = scaler.solver_stats()
+    return report, stats
 
 
 def _run_fleet_scenario(batch: RequestBatch, meta: dict, *, policy: str,

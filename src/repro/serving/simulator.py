@@ -16,11 +16,19 @@ historical constructor signature.  The same runner drives the live engine
 """
 from __future__ import annotations
 
+import warnings
 from typing import List, Optional, Sequence
 
 from repro.core.perf_model import PerfModel
 from repro.core.slo import Request
 from repro.serving.api import (RunReport, ScenarioRunner, Server, SimBackend)
+
+warnings.warn(
+    "repro.serving.simulator is deprecated: construct through "
+    "repro.serving.api (make_sim_server / ScenarioRunner + SimBackend) "
+    "or repro.serving.fastpath.FastSimRunner for million-request traces "
+    "— see the migration note in docs/api.md",
+    DeprecationWarning, stacklevel=2)
 
 __all__ = ["ClusterSimulator", "Server", "simulate"]
 

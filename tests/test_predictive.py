@@ -42,11 +42,9 @@ def test_telemetry_policy_injects_inflight_budgets():
     sc = SpongeScaler(perf)
     pol = TelemetryPolicy(sc, tr, size_kb=200, slo=1.0)
 
-    class _Sim:
-        pass
-    from repro.core.monitor import Monitor
-    from repro.serving.simulator import ClusterSimulator
-    sim = ClusterSimulator(perf, pol, range(1, 17), range(1, 17), c0=4)
+    from repro.serving.api import ScenarioRunner, SimBackend
+    sim = ScenarioRunner(pol, SimBackend(perf, range(1, 17),
+                                         range(1, 17), c0=4))
     sim.monitor.rate.prior_rps = 20
     pol.on_tick(0.0, sim)
     # 0.5 MB/s -> cl ~ 0.41 s -> ~8 in-flight requests injected; the solver

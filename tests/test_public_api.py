@@ -1,0 +1,79 @@
+"""Public-API snapshot (ISSUE 5 satellite): surface changes must be
+deliberate.
+
+The exported-name sets below are the contract other code programs
+against.  If a PR changes one of these sets, this test fails and the
+snapshot must be updated *in the same PR* — which is the point: the
+diff makes the surface change visible and reviewable, instead of a
+re-export silently appearing or vanishing.
+"""
+import warnings
+
+import pytest
+
+SERVING_EXPORTS = {
+    "ExactSession", "FastSession", "FleetSession", "JaxBackend",
+    "RequestBatch", "RunReport", "ScenarioRunner", "SessionTranscript",
+    "SimBackend", "SpongeServer", "SpongeSession", "TokenFastSession",
+    "WorkloadGenerator", "drive_session_events", "make_live_server",
+    "make_policy", "make_sim_server", "replay_transcript", "round_up_c",
+}
+
+SOLVER_EXPORTS = {
+    "DEFAULT_B", "DEFAULT_C", "DEFAULT_N", "JointMemoizedSolver",
+    "JointSolverTable", "MemoizedSolver", "SolverTable",
+    "TokenMemoizedSolver", "TokenSolverTable", "solve_bruteforce",
+    "solve_joint_bruteforce", "solve_pruned", "solve_token_bruteforce",
+}
+
+
+def _public_names(mod) -> set:
+    if hasattr(mod, "__all__"):
+        return set(mod.__all__)
+    return {n for n in vars(mod)
+            if not n.startswith("_") and not _is_module(vars(mod)[n])}
+
+
+def _is_module(obj) -> bool:
+    import types
+    return isinstance(obj, types.ModuleType)
+
+
+def test_serving_public_surface():
+    import repro.serving as serving
+    assert _public_names(serving) == SERVING_EXPORTS
+
+
+def test_solver_public_surface():
+    import repro.core.solver as solver
+    names = {n for n in _public_names(solver)
+             if n == n.upper() or n[:1].isupper() or n.startswith("solve")}
+    assert names >= SOLVER_EXPORTS, (
+        f"missing from repro.core.solver: {SOLVER_EXPORTS - names}")
+
+
+def test_serving_no_longer_reexports_shims():
+    """The PR 1 deprecation, finished: the shim names are gone from the
+    package surface and only reachable through their warning modules."""
+    import repro.serving as serving
+    for name in ("ClusterSimulator", "Server", "simulate",
+                 "ServingEngine"):
+        assert not hasattr(serving, name), name
+
+
+def test_shim_modules_warn_on_import():
+    import importlib
+    import repro.serving.simulator as sim_shim
+    import repro.serving.engine as eng_shim
+    for shim in (sim_shim, eng_shim):
+        with pytest.warns(DeprecationWarning):
+            importlib.reload(shim)
+
+
+def test_shims_still_functional_behind_the_warning():
+    """Deprecated != broken: the historical constructor signatures keep
+    working for one more cycle."""
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        from repro.serving.simulator import ClusterSimulator, simulate  # noqa
+    assert callable(simulate) and callable(ClusterSimulator)

@@ -1,7 +1,11 @@
-"""EDF queue + dynamic batcher property tests."""
+"""EDF queue + dynamic batcher property tests, plus the mid-flight
+renegotiation edge cases (ISSUE 5) across all three queue substrates."""
+import numpy as np
+import pytest
 from _hyp import given, settings, st  # guarded hypothesis import
 
-from repro.core.queueing import DynamicBatcher, EDFQueue
+from repro.core.queueing import (DynamicBatcher, EDFQueue, FastEDFQueue,
+                                 TokenFastEDFQueue)
 from repro.core.slo import Request
 
 
@@ -59,3 +63,186 @@ def test_snapshot_remaining_sorted():
     snap = q.snapshot_remaining(now=0.5)
     assert snap == sorted(snap)
     assert len(snap) == 3
+
+
+# --------------------------------------------------------------------------
+# mid-flight renegotiation edge cases (ISSUE 5), all three substrates.
+# Each substrate is driven through a tiny adapter so every edge case runs
+# verbatim against the object heap, the index heap and the token heap.
+# --------------------------------------------------------------------------
+class _ObjQ:
+    """EDFQueue adapter: keys are request ids."""
+
+    def __init__(self):
+        self.q = EDFQueue()
+        self._reqs = {}
+
+    def push(self, key, deadline):
+        r = Request(deadline=deadline, arrival=0.0)
+        self._reqs[key] = r
+        self.q.push(r)
+
+    def key_of(self, req):
+        return next(k for k, r in self._reqs.items() if r is req)
+
+    def update(self, key, dl):
+        return self.q.update_deadline(self._reqs[key].id, dl)
+
+    def cancel(self, key):
+        return self.q.cancel(self._reqs[key].id) is not None
+
+    def pop_batch(self, b):
+        return [self.key_of(r) for r in self.q.pop_batch(b)]
+
+    def __len__(self):
+        return len(self.q)
+
+    def head_deadline(self):
+        return self.q.peek().deadline
+
+    def remaining(self, now):
+        return self.q.remaining_array(now)
+
+
+class _IdxQ:
+    """FastEDFQueue adapter: keys are the indices themselves."""
+
+    make = FastEDFQueue
+
+    def __init__(self):
+        self.q = self.make()
+
+    def push(self, key, deadline):
+        self.q.push(deadline, key)
+
+    def update(self, key, dl):
+        return self.q.update_deadline(key, dl)
+
+    def cancel(self, key):
+        return self.q.cancel(key)
+
+    def pop_batch(self, b):
+        return self.q.pop_batch(b)
+
+    def __len__(self):
+        return len(self.q)
+
+    def head_deadline(self):
+        return self.q.peek_deadline()
+
+    def remaining(self, now):
+        return self.q.remaining_array(now)
+
+
+class _TokQ(_IdxQ):
+    make = TokenFastEDFQueue
+
+    def __init__(self):
+        super().__init__()
+        self.q.bind(np.arange(1, 64, dtype=np.int64),
+                    np.full(63, 0.1))
+
+
+SUBSTRATES = [_ObjQ, _IdxQ, _TokQ]
+
+
+@pytest.fixture(params=SUBSTRATES, ids=["object", "index", "token"])
+def q(request):
+    return request.param()
+
+
+def _fill(q, deadlines):
+    for k, dl in enumerate(deadlines):
+        q.push(k, float(dl))
+
+
+def test_update_reorders_head_vs_tail(q):
+    _fill(q, [2.0, 4.0, 6.0, 8.0])
+    assert q.head_deadline() == 2.0
+    assert q.update(3, 1.0)            # tail becomes the head
+    assert q.head_deadline() == 1.0
+    assert q.update(0, 9.0)            # old head sinks to the back
+    assert q.pop_batch(10) == [3, 1, 2, 0]
+    assert len(q) == 0
+
+
+def test_update_to_past_deadline_front_runs(q):
+    """A budget tightened below `now` is overdue, not lost: EDF must
+    front-run it on the next dispatch."""
+    _fill(q, [5.0, 7.0])
+    assert q.update(1, -1.0)
+    rem = q.remaining(now=0.0)
+    assert rem[0] == -1.0 and len(rem) == 2
+    assert q.pop_batch(1) == [1]
+
+
+def test_cancel_then_dispatch_race(q):
+    """A cancel racing the dispatcher: the popped batch must skip the
+    cancelled entry and take the next live one instead."""
+    _fill(q, [1.0, 2.0, 3.0])
+    assert q.cancel(0)                 # cancel the head just before pop
+    assert q.pop_batch(2) == [1, 2]
+    assert len(q) == 0
+
+
+def test_double_cancel_and_cancel_after_dispatch(q):
+    _fill(q, [1.0, 2.0])
+    assert q.cancel(1)
+    assert not q.cancel(1)             # double-cancel is a no-op
+    assert q.pop_batch(1) == [0]
+    assert not q.cancel(0)             # already dispatched
+    assert not q.update(0, 5.0)        # ...and not renegotiable either
+
+
+def test_update_after_cancel_refused(q):
+    _fill(q, [1.0])
+    assert q.cancel(0)
+    assert not q.update(0, 0.5)
+    assert len(q) == 0 and q.pop_batch(4) == []
+
+
+def test_update_noop_same_deadline_keeps_single_entry(q):
+    _fill(q, [3.0, 4.0])
+    assert q.update(0, 3.0)            # no-op re-key
+    assert q.pop_batch(10) == [0, 1]   # no duplicate surfaces
+
+
+def test_snapshots_see_only_live_entries(q):
+    _fill(q, [2.0, 3.0, 4.0, 5.0])
+    q.cancel(1)
+    q.update(2, 1.0)
+    rem = q.remaining(now=0.0)
+    assert list(rem) == [1.0, 2.0, 5.0]
+    assert len(q) == 3
+
+
+def test_update_churn_preserves_edf_order(q):
+    """Repeated re-keying of the same entries (fade, recovery, fade)
+    leaves exactly one live entry per key and a clean EDF order."""
+    _fill(q, [5.0, 6.0, 7.0])
+    for dl in (2.0, 9.0, 4.0):
+        assert q.update(1, dl)
+    assert q.pop_batch(10) == [1, 0, 2]
+    assert len(q) == 0
+
+
+def test_token_snapshot_after_renegotiation():
+    tq = _TokQ()
+    _fill(tq, [4.0, 2.0, 6.0])
+    tq.update(2, 1.0)
+    tq.cancel(0)
+    rem, toks, tbt = tq.q.token_snapshot(now=0.0)
+    # EDF order: idx 2 (dl 1.0) then idx 1 (dl 2.0); prompt column is
+    # arange(1, ...) so tokens align as idx+1
+    assert list(rem) == [1.0, 2.0]
+    assert list(toks) == [3.0, 2.0]
+    assert tbt == pytest.approx(0.1)
+
+
+def test_object_queue_drop_expired_with_stale_entries():
+    oq = _ObjQ()
+    _fill(oq, [1.0, 5.0, 9.0])
+    oq.update(1, 0.5)                  # stale tuple for dl=5.0 remains
+    dropped = oq.q.drop_expired(now=2.0)
+    assert sorted(r.deadline for r in dropped) == [0.5, 1.0]
+    assert len(oq) == 1 and oq.head_deadline() == 9.0

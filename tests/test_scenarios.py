@@ -8,7 +8,7 @@ from repro.serving.scenarios import (SCENARIOS, build_scenario,
                                      run_scenario)
 
 REQUIRED = {"steady", "diurnal", "flash-crowd", "network-replay",
-            "mixed-slo"}
+            "mixed-slo", "slo-renegotiation", "cancel-storm"}
 
 
 def test_registry_contents():

@@ -1,0 +1,335 @@
+"""Online session API tests (ISSUE 5).
+
+Three contracts:
+
+1. **Replay equivalence** — a recorded transcript (submits only, no
+   renegotiation) driven op by op through a session produces
+   bit-identical decision/bucket streams to the batch ``run()`` path,
+   on the exact, fast and fleet engines.
+2. **Cross-engine renegotiation equivalence** — with mid-flight
+   update/cancel streams applied, the exact object-based session and
+   the struct-of-arrays fast session still produce identical decision
+   streams and aggregates (solver quanta 0).
+3. **The acceptance bar** — ``slo-renegotiation`` runs ≥100k requests
+   through ``FastSimRunner`` via the session API, and tightening queued
+   budgets measurably changes the solver's (c, b) decision stream vs
+   the no-renegotiation replay of the same workload.
+"""
+import numpy as np
+import pytest
+
+from repro.core.baselines import FA2Policy, SpongePolicy, StaticPolicy
+from repro.core.perf_model import yolov5s_like
+from repro.core.scaler import SpongeScaler
+from repro.core.solver import DEFAULT_B, DEFAULT_C
+from repro.network.traces import synth_4g_trace
+from repro.serving.api import ScenarioRunner, SimBackend
+from repro.serving.fastpath import FastSimRunner, TokenFastSimRunner
+from repro.serving.fleet import FleetFastSimRunner, FleetSpongeScaler
+from repro.serving.scenarios import build_scenario, run_scenario
+from repro.serving.session import (SessionTranscript, drive_session_events,
+                                   replay_transcript)
+from repro.serving.workload import WorkloadGenerator
+
+PERF = yolov5s_like()
+
+
+def _batch(seed=3, rps=20, duration=60, poisson=True):
+    trace = synth_4g_trace(duration, seed=seed)
+    wl = WorkloadGenerator(rps=rps, slo=1.0, size_kb=200,
+                           poisson=poisson, seed=seed)
+    return wl.generate_batch(trace)
+
+
+def _policy(name="sponge", solver="bruteforce"):
+    if name == "sponge":
+        return SpongePolicy(SpongeScaler(PERF, solver=solver))
+    if name == "fa2":
+        return FA2Policy(PERF, slo=1.0, expected_rps=20)
+    return StaticPolicy(PERF, cores=8)
+
+
+def _sig(report):
+    decisions = [(t, d.c, d.b, d.n, d.scale_up_delay, d.feasible)
+                 for t, d in (report.decisions or [])]
+    return (decisions, report.buckets, report.n_requests,
+            report.n_violations, report.core_seconds, report.p50,
+            report.p99, report.core_timeline)
+
+
+# --------------------------------------------------------------------------
+# 1. replay-equivalence fixture: transcript == legacy run(), per engine
+# --------------------------------------------------------------------------
+@pytest.mark.parametrize("name", ["sponge", "fa2", "static"])
+def test_transcript_replay_matches_batch_run_fast(name):
+    batch = _batch(seed=11)
+    ref = FastSimRunner(_policy(name), PERF, DEFAULT_C, DEFAULT_B,
+                        c0=16, prior_rps=20).run(batch)
+    sess = FastSimRunner(_policy(name), PERF, DEFAULT_C, DEFAULT_B,
+                         c0=16, prior_rps=20).session()
+    got = replay_transcript(sess, SessionTranscript.from_batch(batch),
+                            batch)
+    assert _sig(got) == _sig(ref)
+    assert got.n_cancelled == 0
+
+
+def test_transcript_replay_matches_batch_run_exact():
+    batch = _batch(seed=7, duration=45)
+
+    def runner():
+        r = ScenarioRunner(_policy("sponge"),
+                           SimBackend(PERF, DEFAULT_C, DEFAULT_B, c0=16))
+        r.monitor.rate.prior_rps = 20
+        return r
+
+    ref = runner().run(batch.to_requests())
+    got = replay_transcript(runner().session(),
+                            SessionTranscript.from_batch(batch), batch)
+    assert _sig(got) == _sig(ref)
+
+
+def test_transcript_replay_matches_batch_run_fleet():
+    batch, meta = build_scenario("replica-failure", duration=90, seed=5)
+    events = meta["fleet_events"]
+
+    def runner():
+        pol = FleetSpongeScaler(PERF, c_set=DEFAULT_C, b_set=DEFAULT_B,
+                                adaptation_interval=meta["tick"])
+        return FleetFastSimRunner(pol, PERF, DEFAULT_C, DEFAULT_B,
+                                  n0=meta["n0"], c0=meta["c0"],
+                                  tick=meta["tick"],
+                                  prior_rps=meta["expected_rps"])
+
+    ref = runner().run(batch, events=events)
+    sess = runner().session(fleet_events=events)
+    got = replay_transcript(sess, SessionTranscript.from_batch(batch),
+                            batch)
+    assert _sig(got) == _sig(ref)
+
+
+def test_transcript_replay_matches_batch_run_token():
+    batch, meta = build_scenario("llm-chat", duration=40, seed=9)
+    from repro.core.scaler import TokenSpongeScaler
+
+    def runner():
+        scaler = TokenSpongeScaler(meta["cost"], c_set=DEFAULT_C,
+                                   b_set=DEFAULT_B,
+                                   adaptation_interval=meta["tick"])
+        return TokenFastSimRunner(scaler, meta["cost"], DEFAULT_C,
+                                  DEFAULT_B, c0=16, tick=meta["tick"],
+                                  prior_rps=meta["expected_rps"])
+
+    ref = runner().run(batch)
+    got = replay_transcript(runner().session(),
+                            SessionTranscript.from_batch(batch), batch)
+    assert _sig(got) == _sig(ref)
+    assert got.tokens_served == ref.tokens_served
+    assert got.ttft_p99 == ref.ttft_p99
+
+
+# --------------------------------------------------------------------------
+# 2. renegotiation equivalence + semantics across engines
+# --------------------------------------------------------------------------
+def test_exact_and_fast_sessions_agree_under_renegotiation():
+    """With a live update/cancel stream applied, the object-based and
+    struct-of-arrays sessions stay decision-identical (quanta 0)."""
+    for name in ("slo-renegotiation", "cancel-storm"):
+        fast, fstats = run_scenario(name, engine="fast", duration=50,
+                                    seed=13, budget_quantum=0.0,
+                                    lam_quantum=0.0)
+        exact, estats = run_scenario(name, engine="exact", duration=50,
+                                     seed=13)
+        assert fstats["session"] == estats["session"], name
+        d_f = [(t, d.c, d.b) for t, d in fast.decisions]
+        d_e = [(t, d.c, d.b) for t, d in exact.decisions]
+        assert d_f == d_e, name
+        assert (fast.n_requests, fast.n_violations, fast.n_cancelled) \
+            == (exact.n_requests, exact.n_violations, exact.n_cancelled)
+        assert fast.buckets == exact.buckets, name
+
+
+def _backlogged_session():
+    """A static 8-core slot with a 6-deep arrival burst: the head
+    dispatches immediately (b=1), the tail queues behind ~0.088 s
+    service times — a deterministic window to renegotiate in."""
+    runner = FastSimRunner(_policy("static"), PERF, (8,), (1, 2, 4, 8),
+                           c0=8, tick=1.0)
+    sess = runner.session()
+    hs = [sess.submit(send=0.5, comm_latency=0.1, slo=5.0)
+          for _ in range(6)]
+    return sess, hs
+
+
+def test_update_slo_changes_outcome_microcase():
+    """One backlog, one fade: without renegotiation the run is clean;
+    tightening a queued request's deadline below its feasible finish
+    turns the same completion into a violation — proof the renegotiated
+    deadline (not the submit-time one) is what accounting judges."""
+    sess, hs = _backlogged_session()
+    sess.step_until(0.7)
+    tail = hs[-1]
+    assert sess.record(tail)["status"] == "queued"
+    assert sess.update_slo(tail, deadline=0.71)   # fade: near-past budget
+    rep = sess.finish(30.0)
+    assert rep.n_requests == 6 and rep.n_violations == 1
+    rec = sess.record(tail)
+    assert rec["status"] == "done" and rec["violated"] is True
+
+    sess2, _ = _backlogged_session()
+    rep2 = sess2.finish(30.0)
+    assert rep2.n_requests == 6 and rep2.n_violations == 0
+
+
+def test_relaxed_budget_avoids_violation():
+    """The mirror case: a hopeless submit-time deadline relaxed while
+    queued (network recovered) completes clean."""
+    def run(relax):
+        runner = FastSimRunner(_policy("static"), PERF, (8,),
+                               (1, 2, 4, 8), c0=8, tick=1.0)
+        sess = runner.session()
+        hs = [sess.submit(send=0.5, comm_latency=0.1,
+                          slo=5.0 if i < 5 else 0.25)
+              for i in range(6)]
+        sess.step_until(0.65)          # head in service until ~0.688
+        if relax:
+            assert sess.record(hs[-1])["status"] == "queued"
+            assert sess.update_slo(hs[-1], slo=5.0)
+        return sess.finish(30.0)
+
+    assert run(relax=False).n_violations >= 1
+    assert run(relax=True).n_violations == 0
+
+
+def test_cancelled_requests_leave_every_aggregate():
+    runner = FastSimRunner(_policy("sponge"), PERF, c0=16, tick=1.0)
+    sess = runner.session()
+    handles = [sess.submit(send=3.0 + 0.01 * i, comm_latency=0.2,
+                           slo=8.0) for i in range(20)]
+    pending_cancel = sess.cancel(handles[-1])  # cancel before arrival
+    assert pending_cancel
+    sess.step_until(3.3)
+    cancelled = [h for h in handles[:10] if sess.cancel(h)]
+    assert cancelled, "some requests must still be queued at t=3.3"
+    assert not sess.cancel(cancelled[0])       # double-cancel
+    assert not sess.update_slo(cancelled[0], slo=9.0)
+    rep = sess.finish(40.0)
+    assert rep.n_cancelled == len(cancelled) + 1
+    assert rep.n_requests == 20 - rep.n_cancelled
+    assert rep.n_violations == 0
+
+
+def test_pending_cancel_counted_uniformly_across_engines():
+    """Cancelling a submitted-but-not-yet-arrived request must land in
+    n_cancelled on the object-based and column sessions alike."""
+    fast = FastSimRunner(_policy("sponge"), PERF, c0=16).session()
+    exact_runner = ScenarioRunner(_policy("sponge"),
+                                  SimBackend(PERF, DEFAULT_C, DEFAULT_B,
+                                             c0=16))
+    exact = exact_runner.session()
+    reports = []
+    for sess in (fast, exact):
+        hs = [sess.submit(send=2.0 + 0.1 * i, comm_latency=0.1, slo=8.0)
+              for i in range(5)]
+        assert sess.cancel(hs[3])          # before its arrival
+        reports.append(sess.finish(30.0))
+    for rep in reports:
+        assert rep.n_cancelled == 1
+        assert rep.n_requests == 4
+
+
+def test_cancel_deflates_lambda_window():
+    """A cancel storm must retract arrivals from the λ estimate."""
+    runner = FastSimRunner(_policy("sponge"), PERF, c0=16, tick=1.0)
+    sess = runner.session()
+    hs = [sess.submit(send=1.0 + 0.001 * i, comm_latency=0.5, slo=30.0)
+          for i in range(50)]
+    sess.step_until(1.6)
+    lam_before = sess._rate(1.6)
+    n_ok = sum(sess.cancel(h) for h in hs[:40])
+    assert n_ok > 0
+    lam_after = sess._rate(1.6)
+    assert lam_after < lam_before
+
+
+def test_token_session_renegotiation_scope():
+    """Token sessions renegotiate TTFT only while a request waits for
+    admission; once the prompt joins a decode step it is committed."""
+    batch, meta = build_scenario("llm-chat", duration=30, seed=21)
+    from repro.core.scaler import TokenSpongeScaler
+    scaler = TokenSpongeScaler(meta["cost"], c_set=DEFAULT_C,
+                               b_set=DEFAULT_B,
+                               adaptation_interval=meta["tick"])
+    runner = TokenFastSimRunner(scaler, meta["cost"], DEFAULT_C,
+                                DEFAULT_B, c0=16, tick=meta["tick"],
+                                prior_rps=meta["expected_rps"])
+    sess = runner.session()
+    handles = sess.submit_batch(batch)
+    t_mid = float(batch.arrival[len(batch) // 2])
+    sess.step_until(t_mid)
+    outcomes = {"applied": 0, "refused": 0}
+    for h in handles:
+        ok = sess.update_slo(h, deadline=float(batch.deadline[h]) + 0.2)
+        outcomes["applied" if ok else "refused"] += 1
+    assert outcomes["applied"] > 0 and outcomes["refused"] > 0
+    rep = sess.finish()
+    assert rep.tokens_served > 0 and rep.n_requests > 0
+
+
+def test_fleet_session_tighten_reroutes_and_runs():
+    """Tightening queued budgets on a fleet re-offers them to the router
+    and the run still completes consistently (every request served or
+    cancelled, none lost)."""
+    batch, meta = build_scenario("fleet-flash-crowd", duration=60, seed=3)
+    pol = FleetSpongeScaler(PERF, c_set=DEFAULT_C, b_set=DEFAULT_B,
+                            adaptation_interval=meta["tick"])
+    runner = FleetFastSimRunner(pol, PERF, DEFAULT_C, DEFAULT_B,
+                                n0=meta["n0"], c0=meta["c0"],
+                                tick=meta["tick"],
+                                prior_rps=meta["expected_rps"],
+                                router="edf-deadline")
+    sess = runner.session()
+    handles = sess.submit_batch(batch)
+    rng = np.random.default_rng(0)
+    pick = rng.choice(len(batch), size=len(batch) // 5, replace=False)
+    events = sorted((float(batch.arrival[i]) + 0.05, "update", int(i),
+                     float(batch.deadline[i]) - 0.3) for i in pick)
+    applied = drive_session_events(sess, handles, events)
+    assert applied["update"] > 0
+    rep = sess.finish()
+    assert rep.n_requests + rep.n_cancelled <= len(batch)
+    assert rep.n_requests > 0
+    # consistency: replica deadline mirrors drained along with queues
+    for rep_ in runner.replicas:
+        assert len(rep_.dls) == len(rep_.queue)
+
+
+# --------------------------------------------------------------------------
+# 3. the acceptance bar: >=100k requests, decision stream must move
+# --------------------------------------------------------------------------
+def test_slo_renegotiation_changes_decisions_at_scale():
+    rep_ev, st_ev = run_scenario("slo-renegotiation", engine="fast",
+                                 requests=110_000, seed=11)
+    rep_plain, _ = run_scenario("slo-renegotiation", engine="fast",
+                                requests=110_000, seed=11,
+                                mid_flight=False)
+    assert rep_ev.n_requests >= 100_000
+    assert st_ev["session"]["update"] > 10_000
+    d_ev = [(t, d.c, d.b) for t, d in rep_ev.decisions]
+    d_pl = [(t, d.c, d.b) for t, d in rep_plain.decisions]
+    assert len(d_ev) == len(d_pl)
+    n_diff = sum(1 for a, b in zip(d_ev, d_pl) if a != b)
+    assert n_diff > 0, ("tightening queued budgets must change the "
+                        "(c, b) decision stream")
+
+
+def test_cancel_storm_scenario_end_to_end():
+    rep, stats = run_scenario("cancel-storm", engine="fast", duration=80,
+                              seed=5)
+    assert rep.n_cancelled > 0
+    assert stats["session"]["cancel"] == rep.n_cancelled
+    rep_plain, _ = run_scenario("cancel-storm", engine="fast",
+                                duration=80, seed=5, mid_flight=False)
+    assert rep_plain.n_cancelled == 0
+    # withdrawn demand must not inflate provisioning: the storm run
+    # never allocates more core-seconds than the closed-world replay
+    assert rep.core_seconds <= rep_plain.core_seconds + 1e-9

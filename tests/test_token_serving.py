@@ -359,19 +359,19 @@ def test_rate_estimator_single_arrival_guard():
 
 
 def test_fastpath_rate_matches_estimator_on_idle_gap_edge():
-    """The two-pointer fast-path λ and RateEstimator must agree on the
-    degenerate single-arrival-after-idle case (equivalence contract)."""
+    """The two-pointer fast-path λ (now owned by the online session) and
+    RateEstimator must agree on the degenerate single-arrival-after-idle
+    case (equivalence contract)."""
     from repro.core.baselines import SpongePolicy
     from repro.core.scaler import SpongeScaler
     runner = FastSimRunner(SpongePolicy(SpongeScaler(PERF)), PERF,
                            c0=16)
-    runner._arr = np.array([100.0])
-    runner._ai = 1
-    runner._w0 = 0
+    sess = runner.session()
+    sess._arr = [100.0]                 # one processed arrival
     est = RateEstimator(window_s=runner.rate_window)
     est.observe(100.0)
-    assert runner._rate(100.0) == pytest.approx(est.rate(100.0))
-    assert runner._rate(100.0) < 1.0    # not a million-rps spike
+    assert sess._rate(100.0) == pytest.approx(est.rate(100.0))
+    assert sess._rate(100.0) < 1.0      # not a million-rps spike
 
 
 def test_resolve_decision_shared_rule():

@@ -28,7 +28,8 @@ _LINK = re.compile(r"(?<!\!)\[[^\]]+\]\(([^)\s]+)(?:\s+\"[^\"]*\")?\)")
 
 DOCSTRING_MODULES = ["repro.serving.api", "repro.serving.scenarios",
                      "repro.serving.fastpath", "repro.core.cost_model",
-                     "repro.serving.token_backend", "repro.serving.fleet"]
+                     "repro.serving.token_backend", "repro.serving.fleet",
+                     "repro.serving.session"]
 
 
 def check_links() -> list[str]:
