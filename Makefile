@@ -2,7 +2,7 @@ PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
 .PHONY: verify test-fast smoke fig4 bench throughput token-bench \
-	fleet-bench session-bench docs-check help
+	fleet-bench session-bench tenant-bench docs-check help
 
 # tier-1 verification (the ROADMAP contract)
 # companions: `make docs-check` (doc gates) and `make throughput`
@@ -16,7 +16,8 @@ test-fast:
 	$(PY) -m pytest -x -q tests/test_solver.py tests/test_solver_properties.py \
 		tests/test_queueing.py tests/test_network.py tests/test_perf_model.py \
 		tests/test_fastpath.py tests/test_scenarios.py tests/test_fleet.py \
-		tests/test_determinism.py tests/test_session.py tests/test_public_api.py
+		tests/test_determinism.py tests/test_session.py tests/test_tenancy.py \
+		tests/test_public_api.py
 
 # fast end-to-end smoke of the unified serving API on both backends (<30 s)
 smoke:
@@ -47,6 +48,13 @@ fleet-bench:
 session-bench:
 	$(PY) -m benchmarks.session_bench
 
+# >=200k-request multi-tenant benchmark: the 128-core shared pool with
+# marginal-value core swapping vs per-tenant static partitions (asserts
+# the >=20% core-seconds bar at equal-or-lower per-tenant violations;
+# appends the run to BENCH_tenant.json)
+tenant-bench:
+	$(PY) -m benchmarks.tenant_bench
+
 # doc link integrity + serving-API docstring coverage
 docs-check:
 	$(PY) tools/docs_check.py
@@ -64,5 +72,6 @@ help:
 	@echo "make token-bench - 100k-request autoregressive serving benchmark"
 	@echo "make fleet-bench - 500k-request fleet benchmark (>=20% savings bar)"
 	@echo "make session-bench - 100k+-request online-session benchmark"
+	@echo "make tenant-bench - 200k+-request multi-tenant pool benchmark"
 	@echo "make docs-check  - doc links + serving-API docstring coverage"
 	@echo "make bench       - full benchmark harness"

@@ -460,7 +460,11 @@ class JointSolverTable:
     ``only_n`` pins the replica count — the hysteresis re-solve path
     (``repro.serving.fleet.FleetSpongeScaler`` blocks a scale-down until
     the target persists, re-solving ``(c, b)`` at the current fleet
-    size in the meantime).
+    size in the meantime).  ``max_cores`` caps the total allocation
+    ``n*c`` — the multi-tenant pool (``repro.serving.tenancy``) solves
+    each tenant under its current core cap, and
+    :meth:`min_violations` reads the same feasibility frontier to price
+    a core transfer between tenants.
     """
 
     def __init__(self, perf: Union[PerfModel, CostModel],
@@ -484,12 +488,16 @@ class JointSolverTable:
             [(n_pos[int(n)] * self.base.lat.size
               + c_pos[int(c)] * len(self.base.bs) + b_pos[int(b)])
              for _, n, b, c in cands], np.int64)
+        self._total = self.order_n * self.order_c   # cores per candidate
         self.size = len(cands)
+        self._max_rate_cache: dict = {}
 
     def solve(self, remaining_slos, lam: float, initial_wait: float = 0.0,
-              only_n: Optional[int] = None) -> Decision:
+              only_n: Optional[int] = None,
+              max_cores: Optional[int] = None) -> Decision:
         """Joint solve; same inputs/semantics as
-        :func:`solve_joint_bruteforce` (plus the ``only_n`` pin)."""
+        :func:`solve_joint_bruteforce` (plus the ``only_n`` pin and the
+        ``max_cores`` total-allocation cap)."""
         t0 = time.perf_counter()
         rem = np.sort(np.asarray(remaining_slos, np.float64).ravel())
         n_req = rem.size
@@ -512,6 +520,8 @@ class JointSolverTable:
         ok = feas.reshape(-1)[self._flat]
         if only_n is not None:
             ok = ok & (self.order_n == only_n)
+        if max_cores is not None:
+            ok = ok & (self._total <= max_cores)
         hit = np.flatnonzero(ok)
         if hit.size:
             i = int(hit[0])
@@ -524,6 +534,8 @@ class JointSolverTable:
         sus = sustain.reshape(-1)[self._flat]
         if only_n is not None:
             sus = sus & (self.order_n == only_n)
+        if max_cores is not None:
+            sus = sus & (self._total <= max_cores)
         if sus.any():
             viol = np.zeros((N, C, B), np.int64)
             if n_req:
@@ -541,14 +553,103 @@ class JointSolverTable:
             i = int(cand[np.flatnonzero(thr_flat == thr_flat.max())[0]])
             n, c, b = (int(self.order_n[i]), int(self.order_c[i]),
                        int(self.order_b[i]))
-        else:   # nothing sustains lam: max capacity config
+        elif max_cores is None:   # nothing sustains lam: max capacity
             n = int(only_n if only_n is not None else self.ns[-1])
             c = int(self.base.cs[-1])
             j = int(np.argmax(self.base.thr[-1]))
             b = int(self.base.bs[j])
+        else:
+            # capped overload: the largest fleet throughput that still
+            # fits the core cap (honouring the pin when possible), so a
+            # starved tenant saturates its slice rather than claiming
+            # cores the pool never granted
+            fit = self._total <= max_cores
+            if only_n is not None and (fit & (self.order_n == only_n)).any():
+                fit = fit & (self.order_n == only_n)
+            if fit.any():
+                key = np.where(fit, thr_n.reshape(-1)[self._flat]
+                               .astype(np.float64), -np.inf)
+                cand = np.flatnonzero(key == key.max())
+                tot = self._total[cand]
+                i = int(cand[np.flatnonzero(tot == tot.min())[0]])
+            else:        # cap below every candidate: cheapest config
+                i = 0
+            n, c, b = (int(self.order_n[i]), int(self.order_c[i]),
+                       int(self.order_b[i]))
         return Decision(c=c, b=b, n=n, feasible=False,
                         solver_iters=self.size,
                         solver_time=time.perf_counter() - t0)
+
+    def min_violations(self, remaining_slos, lam: float,
+                       initial_wait: float = 0.0,
+                       max_cores: Optional[int] = None) -> int:
+        """Fewest predicted EDF violations achievable under ``max_cores``.
+
+        Reads the same frontier as :meth:`solve`: ``0`` when any
+        candidate under the cap drains the queue in time, otherwise the
+        minimum of the predicted-violation grid among λ-sustaining
+        candidates under the cap (falling back to every candidate under
+        the cap, then to the whole queue length when the cap excludes
+        every candidate).  This is the value function ``V(cap)`` that
+        the multi-tenant reallocator (``repro.serving.tenancy``)
+        differentiates to price a core transfer between tenants.
+        """
+        rem = np.sort(np.asarray(remaining_slos, np.float64).ravel())
+        n_req = rem.size
+        if n_req == 0:
+            return 0
+        lat, thr = self.base.lat, self.base.thr          # (C, B)
+        C, B = lat.shape
+        N = len(self.ns)
+        feas = np.ones((N, C, B), bool)
+        thr_n = self.ns[:, None, None] * thr[None]       # (N, C, B)
+        if lam > 0:
+            feas &= thr_n >= lam
+        sustain = feas.copy()
+        for i, n in enumerate(self.ns):
+            for j in range(B):
+                g = int(n) * int(self.base.bs[j])
+                heads = rem[::g]
+                k = np.arange(1, heads.size + 1, dtype=np.float64)
+                finish = initial_wait + lat[:, j, None] * k
+                feas[i, :, j] &= (finish <= heads).all(axis=1)
+        fit = (np.ones(self.size, bool) if max_cores is None
+               else self._total <= max_cores)
+        if (feas.reshape(-1)[self._flat] & fit).any():
+            return 0
+        viol = np.zeros((N, C, B), np.int64)
+        idx = np.arange(n_req, dtype=np.int64)
+        for i, n in enumerate(self.ns):
+            for j in range(B):
+                g = int(n) * int(self.base.bs[j])
+                mult = (idx // g + 1).astype(np.float64)
+                finish = initial_wait + lat[:, j, None] * mult
+                viol[i, :, j] = (finish > rem).sum(axis=1)
+        sus = sustain.reshape(-1)[self._flat] & fit
+        pool = sus if sus.any() else fit
+        if not pool.any():
+            return n_req
+        return int(viol.reshape(-1)[self._flat][pool].min())
+
+    def max_rate(self, max_cores: Optional[int] = None) -> float:
+        """Highest arrival rate any candidate under ``max_cores``
+        sustains — the fleet throughput ceiling of the capped frontier
+        (the same ``n·thr`` surface :meth:`solve` tests ``λ`` against).
+        Arrivals beyond this rate are un-servable at the cap no matter
+        the backlog, which is what lets the multi-tenant reallocator
+        price a core transfer *before* the queue melts down.  Cached per
+        cap (the grid never changes)."""
+        key = -1 if max_cores is None else int(max_cores)
+        hit = self._max_rate_cache.get(key)
+        if hit is not None:
+            return hit
+        thr_n = (self.ns[:, None, None] *
+                 self.base.thr[None]).reshape(-1)[self._flat]
+        fit = (np.ones(self.size, bool) if max_cores is None
+               else self._total <= max_cores)
+        val = float(thr_n[fit].max()) if fit.any() else 0.0
+        self._max_rate_cache[key] = val
+        return val
 
 
 class JointMemoizedSolver(_QuantizedDecisionCache):
@@ -567,14 +668,15 @@ class JointMemoizedSolver(_QuantizedDecisionCache):
                                       replica_pen)
 
     def solve(self, remaining_slos, lam: float, initial_wait: float = 0.0,
-              only_n: Optional[int] = None) -> Decision:
+              only_n: Optional[int] = None,
+              max_cores: Optional[int] = None) -> Decision:
         """Quantize conservatively, then cache per bucket signature."""
         rem = np.sort(np.asarray(remaining_slos, np.float64).ravel())
         rem, lam_q, iw = self._quantize(rem, lam, initial_wait)
         return self._cached(
-            (rem.tobytes(), lam_q, iw, only_n),
+            (rem.tobytes(), lam_q, iw, only_n, max_cores),
             lambda: self.table.solve(rem, lam_q, initial_wait=iw,
-                                     only_n=only_n))
+                                     only_n=only_n, max_cores=max_cores))
 
 
 # ---------------------------------------------------------------------------

@@ -23,6 +23,9 @@ Three modes, one control plane (``repro.serving.api.SpongeServer``):
   the joint horizontal + vertical engines (``repro.serving.fleet``);
   ``--replicas`` sizes the deploy-time fleet and ``--router`` picks the
   arrival router (``least-loaded`` / ``jsq`` / ``edf-deadline``).
+  Multi-tenant scenarios (``mixed-zoo``, ``mixed-zoo-rush``) run the
+  shared-pool engines (``repro.serving.tenancy``); ``--tenants`` picks
+  the pool reallocation policy and ``--pool-cores`` the core budget.
 
     PYTHONPATH=src python -m repro.launch.serve --mode live \
         --arch smollm-135m-reduced --rps 10 --duration 10
@@ -130,6 +133,7 @@ def run_scenario_mode(args) -> dict:
             duration=args.duration, rps=args.rps,
             seed=args.seed, requests=args.requests,
             replicas=args.replicas, router=args.router,
+            tenant_policy=args.tenants, pool_cores=args.pool_cores,
             mid_flight=not args.no_mid_flight)
     ev = stats["events"]
     dt = stats["run_wall_s"]            # engine time only (no generation)
@@ -151,6 +155,14 @@ def run_scenario_mode(args) -> dict:
     if "session" in stats:              # session scenarios: the ISSUE-5 bar
         out.update(n_cancelled=report.n_cancelled, **{
             f"mid_flight_{k}": v for k, v in stats["session"].items()})
+    if "pool" in stats:                 # multi-tenant scenarios: ISSUE-6
+        p = stats["pool"]
+        out.update(pool_policy=p["policy"], pool_cores=p["budget"],
+                   pool_caps=list(p["caps"]), pool_swaps=p["swaps"],
+                   tenants={name: {"n": t["n_requests"],
+                                   "violation_rate": t["violation_rate"],
+                                   "core_seconds": t["core_seconds"]}
+                            for name, t in stats["tenants"].items()})
     if "solver" in stats:
         out["solver_hit_rate"] = stats["solver"].get("hit_rate")
     print(json.dumps(out, indent=1, default=float))
@@ -184,6 +196,13 @@ def main(argv=None):
     ap.add_argument("--router", default=None,
                     choices=("least-loaded", "jsq", "edf-deadline"),
                     help="fleet scenarios: arrival router across replicas")
+    ap.add_argument("--tenants", default=None,
+                    choices=("priority", "fair-share", "greedy-marginal"),
+                    help="multi-tenant scenarios (mixed-zoo*): the pool "
+                         "reallocation policy (default greedy-marginal)")
+    ap.add_argument("--pool-cores", type=int, default=None,
+                    help="multi-tenant scenarios: total core budget of "
+                         "the shared pool (default: the scenario's, 128)")
     ap.add_argument("--no-mid-flight", action="store_true",
                     help="session scenarios: suppress the mid-flight "
                          "update_slo/cancel stream (the closed-world "

@@ -11,7 +11,9 @@ Public surface (snapshotted by ``tests/test_public_api.py``):
 * the online session API — ``SpongeSession`` protocol, the per-engine
   sessions, transcripts (``repro.serving.session``);
 * workloads — ``WorkloadGenerator`` / ``RequestBatch`` and the scenario
-  registry (``repro.serving.scenarios``).
+  registry (``repro.serving.scenarios``);
+* multi-tenancy — ``TenantPool`` / ``TenantSpec`` and the shared-pool
+  engines (``repro.serving.tenancy``).
 
 The PR 1 shims (``ClusterSimulator`` / ``simulate`` in
 ``repro.serving.simulator``, ``ServingEngine`` in
@@ -26,11 +28,13 @@ from repro.serving.session import (ExactSession, FastSession, FleetSession,
                                    SessionTranscript, SpongeSession,
                                    TokenFastSession, drive_session_events,
                                    replay_transcript)
+from repro.serving.tenancy import TenantPool, TenantSpec
 
 __all__ = [
     "ExactSession", "FastSession", "FleetSession", "JaxBackend",
     "RequestBatch", "RunReport", "ScenarioRunner", "SessionTranscript",
-    "SimBackend", "SpongeServer", "SpongeSession", "TokenFastSession",
-    "WorkloadGenerator", "drive_session_events", "make_live_server",
-    "make_policy", "make_sim_server", "replay_transcript", "round_up_c",
+    "SimBackend", "SpongeServer", "SpongeSession", "TenantPool",
+    "TenantSpec", "TokenFastSession", "WorkloadGenerator",
+    "drive_session_events", "make_live_server", "make_policy",
+    "make_sim_server", "replay_transcript", "round_up_c",
 ]

@@ -233,6 +233,9 @@ class FleetSpongeScaler(_JointPolicyBase):
     replica_pen: float = 1.0
     scale_up_delay: float = 2.0         # cold start of a new replica (s)
     down_patience: int = 5              # consecutive lower-n decisions
+    # total-core ceiling imposed from above (multi-tenant pool slice);
+    # None = unconstrained, the single-tenant fleet behaviour
+    core_cap: Optional[int] = None
     decisions: List[tuple] = field(default_factory=list)
     _next_t: float = 0.0
     _down_streak: int = 0
@@ -253,7 +256,8 @@ class FleetSpongeScaler(_JointPolicyBase):
         rem = np.maximum(np.asarray(remaining, np.float64) - self.headroom,
                          0.0)
         lam_eff = lam * self.lam_headroom
-        d = self.memo.solve(rem, lam_eff, initial_wait=initial_wait)
+        d = self.memo.solve(rem, lam_eff, initial_wait=initial_wait,
+                            max_cores=self.core_cap)
         if d.n < active_n:
             self._down_streak += 1
             if self._down_streak < self.down_patience:
@@ -265,7 +269,8 @@ class FleetSpongeScaler(_JointPolicyBase):
                 fits = [n for n in self.n_set if n <= active_n]
                 pin = max(fits) if fits else min(self.n_set)
                 d = self.memo.solve(rem, lam_eff,
-                                    initial_wait=initial_wait, only_n=pin)
+                                    initial_wait=initial_wait, only_n=pin,
+                                    max_cores=self.core_cap)
                 d = replace(d, n=active_n)
             else:
                 self._down_streak = 0

@@ -399,6 +399,177 @@ register(Scenario(
 
 
 # --------------------------------------------------------------------------
+# multi-tenant scenarios (shared core pool — ISSUE 6)
+# --------------------------------------------------------------------------
+def _whisper_like() -> PerfModel:
+    """A heavier fixed-work profile (speech encoder shape): ~2.4x the
+    yolov5s per-item work, served under a looser 2 s SLO."""
+    return PerfModel(gamma=0.36, eps=0.10, delta=0.055, eta=0.05)
+
+
+def _rwkv_like() -> PerfModel:
+    """A light recurrent profile: cheap per-item work under a tight
+    0.8 s SLO — the tenant most sensitive to pool starvation."""
+    return PerfModel(gamma=0.08, eps=0.03, delta=0.018, eta=0.02)
+
+
+def _tenant_batch(send: np.ndarray, trace, slo: float,
+                  size_kb: float) -> RequestBatch:
+    cl = comm_latency_many(np.full(send.shape, size_kb), trace, send)
+    return RequestBatch.from_send(send, cl, slo=slo, size_kb=size_kb)
+
+
+def _merge_batches(batches) -> RequestBatch:
+    """Arrival-sorted concatenation of per-tenant batches (the sanity
+    view ``build_scenario`` returns; the engines run the per-tenant
+    columns carried in ``meta['tenants']``)."""
+    import dataclasses
+    cols = {}
+    order = np.argsort(np.concatenate([b.arrival for b in batches]),
+                       kind="stable")
+    for f in dataclasses.fields(RequestBatch):
+        cols[f.name] = np.concatenate(
+            [getattr(b, f.name) for b in batches])[order]
+    return RequestBatch(**cols)
+
+
+def _zoo_specs(duration, rps, rng, trace, *, spikes=(),
+               spike_tenant="rwkv6-1.6b"):
+    """The three heterogeneous tenants sharing the 128-core pool:
+    ``whisper-large-v3`` (heavy fixed-work, diurnal), ``smollm-135m``
+    (a chat LLM priced through the token cost model's fixed-work
+    surface, diurnal in antiphase) and ``rwkv6-1.6b`` (light
+    fixed-work, tight SLO, steady base).  ``spikes`` overlays flash
+    crowds on ``spike_tenant``'s base rate (replacing its diurnal
+    shape); tenant names are registry arch ids
+    (``repro.configs.registry``)."""
+    from repro.core.cost_model import TokenCostModel
+    from repro.serving.tenancy import TenantSpec
+
+    def diurnal(peak, phase):
+        def rate(t):
+            return peak * (0.25 + 0.75 * 0.5 *
+                           (1 - np.cos(2 * np.pi * t / duration + phase)))
+        return rate
+
+    def steady(base):
+        def rate(t):
+            return np.full(t.shape, float(base))
+        return rate
+
+    def spiked(base):
+        def rate(t):
+            r = np.full(t.shape, float(base))
+            for frac, width, mult in spikes:
+                s = frac * duration
+                r = np.where((t >= s) & (t < s + width * duration),
+                             base * mult, r)
+            return r
+        return rate
+
+    shares = {"whisper-large-v3": 0.25, "smollm-135m": 0.55,
+              "rwkv6-1.6b": 0.20}
+    peak_mult = max((m for _, _, m in spikes), default=1.0)
+    rates = {}
+    for name, share in shares.items():
+        base = rps * share
+        if name == spike_tenant:
+            rates[name] = (spiked(base), base * peak_mult)
+        elif name == "whisper-large-v3":
+            rates[name] = (diurnal(base, 0.0), base)
+        elif name == "smollm-135m":
+            rates[name] = (diurnal(base, np.pi), base)
+        else:
+            rates[name] = (steady(base), base)
+    chat_cost = TokenCostModel.smollm_like(mean_prompt=64.0,
+                                           mean_decode=24.0)
+    shape = {
+        "whisper-large-v3": dict(cost=_whisper_like(), slo=2.0,
+                                 size_kb=600.0, weight=1.0, priority=1,
+                                 n0=2),
+        # antiphase diurnal => smollm *starts* at peak rate: deploy-time
+        # provisioning (n0) matches, like any operator would
+        "smollm-135m": dict(cost=chat_cost, slo=1.2, size_kb=2.0,
+                            weight=2.0, priority=0, n0=8),
+        "rwkv6-1.6b": dict(cost=_rwkv_like(), slo=0.8, size_kb=50.0,
+                           weight=1.0, priority=2, n0=2),
+    }
+    specs = []
+    for name in ("whisper-large-v3", "smollm-135m", "rwkv6-1.6b"):
+        rate_fn, rate_max = rates[name]
+        send = inhomogeneous_poisson_times(rate_fn, rate_max, duration,
+                                           rng)
+        sh = shape[name]
+        batch = _tenant_batch(send, trace, sh["slo"], sh["size_kb"])
+        mean_rate = len(batch) / duration if duration else 0.0
+        specs.append(TenantSpec(
+            name=name, cost=sh["cost"], batch=batch,
+            expected_rps=mean_rate, weight=sh["weight"],
+            priority=sh["priority"], n0=sh["n0"]))
+    return specs
+
+
+def _tenant_meta(specs, rps, trace, *, pool_cores: int = 128,
+                 tick: float = 0.5) -> dict:
+    """Shared meta for multi-tenant scenarios: ``tenants`` routes the
+    run through the pool engines (``repro.serving.tenancy``)."""
+    return {"slo": min(float(s.batch.slo.min()) for s in specs),
+            "expected_rps": sum(s.expected_rps for s in specs),
+            "trace": trace, "tenants": tuple(specs),
+            "pool_cores": pool_cores, "tick": tick}
+
+
+def _build_mixed_zoo(duration, rps, rng):
+    seed = int(rng.integers(2**31))
+    trace = synth_4g_trace(_trace_seconds(duration), seed=seed)
+    # sustained flash crowds on the tight-SLO tenant: the 6x crowd
+    # (288 rps at the default 240 rps zoo load) exceeds rwkv6's ~262 rps
+    # sustainable rate under its 32-core slice, so its capped solver
+    # stays λ-infeasible round after round — the frontier prices the
+    # extra cores, hysteresis clears, swaps fire.  The 4x crowd fits
+    # in-slice: only reaction violations, no swap (the contrast case).
+    spikes = ((0.40, 0.07, 6.0), (0.70, 0.05, 4.0))   # on rwkv6
+    specs = _zoo_specs(duration, rps, rng, trace, spikes=spikes)
+    return _merge_batches([s.batch for s in specs]), \
+        _tenant_meta(specs, rps, trace)
+
+
+register(Scenario(
+    name="mixed-zoo",
+    summary="whisper + chat LLM + rwkv6 sharing a 128-core pool: "
+            "antiphase diurnal cross-traffic with 6x/4x flash crowds "
+            "on the tight-SLO tenant — marginal-value core swapping",
+    build=_build_mixed_zoo, default_rps=240.0, default_duration=600.0,
+    mean_rate_factor=0.80))   # 0.8*0.625 (diurnal) + 0.2*1.50 (spiked)
+
+
+def _build_mixed_zoo_rush(duration, rps, rng):
+    seed = int(rng.integers(2**31))
+    trace = synth_4g_trace(_trace_seconds(duration), seed=seed)
+    # staggered flash crowds on the chat tenant: the 5x crowds (660 rps
+    # at the default 240 rps zoo load) exceed smollm's ~602 rps
+    # sustainable rate under its 64-core slice — the pool must lend the
+    # same cores out and claw them back through swap hysteresis three
+    # times in one run
+    specs = _zoo_specs(duration, rps, rng, trace,
+                       spike_tenant="smollm-135m",
+                       spikes=((0.30, 0.05, 5.0), (0.55, 0.05, 5.0),
+                               (0.80, 0.04, 4.0)))
+    return _merge_batches([s.batch for s in specs]), \
+        _tenant_meta(specs, rps, trace)
+
+
+register(Scenario(
+    name="mixed-zoo-rush",
+    summary="the zoo under staggered flash crowds on the chat tenant — "
+            "cores must cycle donor -> receiver -> donor through "
+            "swap hysteresis",
+    build=_build_mixed_zoo_rush, default_rps=240.0,
+    default_duration=600.0,
+    mean_rate_factor=1.19))   # 0.25*0.625 + 0.55*1.52 + 0.20*1.0
+
+
+# --------------------------------------------------------------------------
 # online-session scenarios (mid-flight renegotiation — ISSUE 5)
 # --------------------------------------------------------------------------
 def _build_slo_renegotiation(duration, rps, rng):
@@ -524,6 +695,8 @@ def run_scenario(name: str, *, policy: str = "sponge",
                  replicas: Optional[int] = None,
                  router: Optional[str] = None,
                  mid_flight: bool = True,
+                 tenant_policy: Optional[str] = None,
+                 pool_cores: Optional[int] = None,
                  **policy_kw):
     """Run a registered scenario end to end; returns ``(RunReport,
     stats)`` where ``stats`` carries engine/meta/solver-cache info.
@@ -539,6 +712,10 @@ def run_scenario(name: str, *, policy: str = "sponge",
     (``repro.serving.session``); ``mid_flight=False`` suppresses the
     event stream — the no-renegotiation replay of the same workload,
     the baseline the decision-stream delta is measured against.
+    Multi-tenant scenarios (``meta["tenants"]``: ``mixed-zoo`` /
+    ``mixed-zoo-rush``) run through the shared-pool engines
+    (``repro.serving.tenancy``); ``tenant_policy`` picks the pool's
+    reallocation policy, ``pool_cores`` overrides the core budget.
     """
     import time
     from repro.serving.api import make_policy, make_sim_server
@@ -555,6 +732,14 @@ def run_scenario(name: str, *, policy: str = "sponge",
                                    c0=c0, tick=tick, horizon=horizon,
                                    budget_quantum=budget_quantum,
                                    lam_quantum=lam_quantum, **policy_kw)
+    if meta.get("tenants"):
+        return _run_tenant_scenario(meta, policy=policy, engine=engine,
+                                    tick=tick, horizon=horizon,
+                                    budget_quantum=budget_quantum,
+                                    lam_quantum=lam_quantum,
+                                    tenant_policy=tenant_policy,
+                                    pool_cores=pool_cores, router=router,
+                                    **policy_kw)
     if meta.get("fleet"):
         return _run_fleet_scenario(batch, meta, policy=policy,
                                    engine=engine, perf=perf, c_set=c_set,
@@ -718,6 +903,63 @@ def _run_fleet_scenario(batch: RequestBatch, meta: dict, *, policy: str,
              "run_wall_s": time.perf_counter() - t0, "meta": meta,
              "max_replicas": runner.max_replicas, "router": router,
              "solver": pol.solver_stats()}
+    return report, stats
+
+
+def _run_tenant_scenario(meta: dict, *, policy: str, engine: str,
+                         tick: float, horizon,
+                         budget_quantum: float, lam_quantum: float,
+                         tenant_policy: Optional[str],
+                         pool_cores: Optional[int],
+                         router: Optional[str], **policy_kw):
+    """Multi-tenant-scenario execution: the shared-pool engines.
+
+    ``engine="fast"`` — :class:`repro.serving.tenancy.TenantFastRunner`
+    (every tenant's struct-of-arrays stream interleaved in one event
+    loop, the ≥200k-request path) with quantized per-tenant joint
+    solvers; ``engine="exact"`` — the pre-heaped
+    :class:`repro.serving.tenancy.TenantExactRunner` oracle at quanta 0
+    (the decision-identity configuration).  ``stats["pool"]`` carries
+    the final caps and swap count, ``stats["tenants"]`` the per-tenant
+    violation/core-second split (the full per-tenant
+    :class:`~repro.serving.api.RunReport` list is on
+    ``stats["tenant_reports"]``).
+    """
+    import time
+    from repro.serving.tenancy import TenantExactRunner, TenantFastRunner
+    if policy != "sponge":
+        raise ValueError(f"multi-tenant scenarios run the sponge policy "
+                         f"per tenant (got {policy!r}); the *pool* "
+                         f"policy is tenant_policy=...")
+    pool_policy = (tenant_policy if tenant_policy is not None
+                   else meta.get("pool_policy", "greedy-marginal"))
+    budget = int(pool_cores if pool_cores is not None
+                 else meta.get("pool_cores", 128))
+    router = router if router is not None else meta.get("router",
+                                                        "least-loaded")
+    bq, lq = (budget_quantum, lam_quantum) if engine == "fast" else (0.0,
+                                                                     0.0)
+    cls = TenantFastRunner if engine == "fast" else TenantExactRunner
+    runner = cls(meta["tenants"], budget=budget, policy=pool_policy,
+                 tick=tick, router=router, budget_quantum=bq,
+                 lam_quantum=lq, **policy_kw)
+    t0 = time.perf_counter()
+    report = runner.run(horizon)
+    stats = {"engine": engine, "events": runner.events_processed,
+             "run_wall_s": time.perf_counter() - t0, "meta": meta,
+             "router": router,
+             "pool": {"policy": pool_policy, "budget": budget,
+                      "caps": tuple(runner.pool.caps),
+                      "swaps": len(runner.pool.swaps),
+                      "realloc_rounds": len(runner.pool.cap_log)},
+             "tenants": {
+                 spec.name: {"n_requests": rep.n_requests,
+                             "n_violations": rep.n_violations,
+                             "violation_rate": rep.violation_rate,
+                             "core_seconds": rep.core_seconds}
+                 for spec, rep in zip(runner.specs,
+                                      runner.tenant_reports)},
+             "tenant_reports": runner.tenant_reports}
     return report, stats
 
 

@@ -87,10 +87,13 @@ def test_same_seed_identical_scenario_builds():
     ("llm-chat", "fast"), ("llm-chat", "exact"),
     ("replica-failure", "fast"), ("replica-failure", "exact"),
     ("fleet-flash-crowd", "fast"),
+    ("mixed-zoo", "fast"), ("mixed-zoo", "exact"),
+    ("mixed-zoo-rush", "fast"),
 ])
 def test_two_consecutive_runs_identical(name, engine):
     """Every engine family is run-to-run deterministic at equal seed:
-    fixed-work, token (continuous batching) and fleet (joint scaling)."""
+    fixed-work, token (continuous batching), fleet (joint scaling) and
+    the multi-tenant pool (marginal-value core swapping)."""
     kw = dict(engine=engine, duration=45, seed=SEED)
     r1, _ = run_scenario(name, **kw)
     r2, _ = run_scenario(name, **kw)

@@ -14,9 +14,10 @@ import pytest
 SERVING_EXPORTS = {
     "ExactSession", "FastSession", "FleetSession", "JaxBackend",
     "RequestBatch", "RunReport", "ScenarioRunner", "SessionTranscript",
-    "SimBackend", "SpongeServer", "SpongeSession", "TokenFastSession",
-    "WorkloadGenerator", "drive_session_events", "make_live_server",
-    "make_policy", "make_sim_server", "replay_transcript", "round_up_c",
+    "SimBackend", "SpongeServer", "SpongeSession", "TenantPool",
+    "TenantSpec", "TokenFastSession", "WorkloadGenerator",
+    "drive_session_events", "make_live_server", "make_policy",
+    "make_sim_server", "replay_transcript", "round_up_c",
 }
 
 SOLVER_EXPORTS = {

@@ -1,0 +1,196 @@
+"""Multi-tenant pool tests (ISSUE 6).
+
+Three layers:
+
+* **Decision identity** — the interleaved struct-of-arrays
+  :class:`~repro.serving.tenancy.TenantFastRunner` must be
+  decision-identical to the pre-heaped
+  :class:`~repro.serving.tenancy.TenantExactRunner` oracle on every
+  ``mixed-zoo`` scenario × every pool policy.  The fast engine runs at
+  solver quanta **zero** here: the production defaults
+  (``budget_quantum=0.01, lam_quantum=0.5``) trade exactness for cache
+  hits, and the exact engine always pins quanta to 0.
+* **Reallocator properties** — driven directly through
+  :meth:`TenantPool.reallocate` with synthetic snapshots: swaps never
+  breach the pool budget or the per-tenant floor, ``fair-share``
+  converges to the weight-proportional split from any skewed start,
+  and ``priority`` starves the unimportant tenants down to a floor and
+  then *stops proposing* (livelock-free by construction).
+* **Starvation is reported, not deadlocked** — an engine-level run
+  under ``priority`` completes, serves every request, and the starved
+  tenant's violations land in its report.
+"""
+import numpy as np
+import pytest
+
+from repro.core.solver import JointSolverTable
+from repro.serving.scenarios import build_scenario, run_scenario
+from repro.serving.tenancy import POOL_POLICIES, TenantPool
+
+SEED = 7
+
+
+def _decision_sig(report):
+    return [(t, d.c, d.b, d.n, d.feasible)
+            for t, d in (report.decisions or [])]
+
+
+def _sig(report):
+    return (_decision_sig(report), report.buckets, report.n_requests,
+            report.n_violations, round(report.core_seconds, 6))
+
+
+# --------------------------------------------------------------------------
+# decision identity: fast == exact oracle, every zoo x every policy
+# --------------------------------------------------------------------------
+@pytest.mark.parametrize("policy", POOL_POLICIES)
+@pytest.mark.parametrize("name", ["mixed-zoo", "mixed-zoo-rush"])
+def test_fast_matches_exact_oracle(name, policy):
+    kw = dict(duration=60, seed=SEED, tenant_policy=policy)
+    r_fast, s_fast = run_scenario(name, engine="fast", budget_quantum=0.0,
+                                  lam_quantum=0.0, **kw)
+    r_ex, s_ex = run_scenario(name, engine="exact", **kw)
+    assert _sig(r_fast) == _sig(r_ex)
+    assert s_fast["pool"]["caps"] == s_ex["pool"]["caps"]
+    assert s_fast["pool"]["swaps"] == s_ex["pool"]["swaps"]
+    for tf, te in zip(s_fast["tenant_reports"], s_ex["tenant_reports"]):
+        assert _sig(tf) == _sig(te)
+
+
+# --------------------------------------------------------------------------
+# reallocator properties (the pool driven directly)
+# --------------------------------------------------------------------------
+def _zoo_pool(policy, **kw):
+    """A TenantPool over the real mixed-zoo specs with solver tables
+    bound — the same frontier the engines price against."""
+    _, meta = build_scenario("mixed-zoo", duration=5, seed=0)
+    specs = list(meta["tenants"])
+    pool = TenantPool(specs, budget=128, policy=policy, **kw)
+    for k, s in enumerate(specs):
+        pool.bind_table(k, JointSolverTable(s.cost, s.c_set, s.b_set,
+                                            s.n_set))
+    return pool
+
+
+def _idle(k):
+    return [(np.empty(0), 0.0, 0.0)] * k
+
+
+@pytest.mark.parametrize("policy", POOL_POLICIES)
+def test_swaps_never_violate_pool_budget(policy):
+    """Property: under adversarial random snapshots, every round keeps
+    ``sum(caps) <= budget`` and every cap at or above ``min_cores``."""
+    pool = _zoo_pool(policy, swap_step=8, swap_patience=1, min_cores=4)
+    rng = np.random.default_rng(0)
+    for round_i in range(60):
+        snaps = []
+        for _ in pool.specs:
+            rem = np.sort(rng.exponential(0.3, rng.integers(0, 25)))
+            snaps.append((rem, float(rng.uniform(0.0, 400.0)),
+                          float(rng.uniform(0.0, 0.2))))
+        pool.reallocate(float(round_i), snaps)
+        assert sum(pool.caps) <= pool.budget, (round_i, pool.caps)
+        assert all(c >= pool.min_cores for c in pool.caps), pool.caps
+    assert len(pool.cap_log) == 60
+    for _, caps in pool.cap_log:
+        assert sum(caps) <= pool.budget
+
+
+def test_fair_share_converges_to_proportional():
+    """From any skewed start, fair-share steers caps to the
+    largest-remainder weight-proportional targets and then stops."""
+    pool = _zoo_pool("fair-share", initial_caps=(88, 20, 20))
+    assert pool.caps != pool._targets
+    for i in range(20):
+        pool.reallocate(float(i), _idle(len(pool.specs)))
+    assert pool.caps == pool._targets
+    assert sum(pool.caps) == pool.budget
+    # converged means converged: further rounds propose nothing
+    tail = pool.cap_log[-1][1]
+    for i in range(20, 25):
+        pool.reallocate(float(i), _idle(len(pool.specs)))
+    assert all(caps == tail for _, caps in pool.cap_log[-5:])
+    assert not any(t >= 20 for t, *_ in pool.swaps)
+
+
+def test_priority_starves_to_floor_without_livelock():
+    """A perpetually overloaded priority-0 tenant drains the others to
+    the donation floor; once no donor remains the policy proposes
+    nothing — starvation ends in a stable split, not a livelock."""
+    pool = _zoo_pool("priority", swap_patience=1)
+    prios = [s.priority for s in pool.specs]
+    top = prios.index(min(prios))
+    table = pool._tables[top]
+    # λ far beyond anything the grid sustains: overflow pricing keeps
+    # the starved-tenant gain alive with an empty queue
+    lam = table.max_rate(pool.budget) + 200.0
+    init = list(pool.caps)
+    for i in range(40):
+        snaps = [(np.empty(0), lam if k == top else 0.0, 0.0)
+                 for k in range(len(pool.specs))]
+        pool.reallocate(float(i), snaps)
+        assert sum(pool.caps) <= pool.budget
+    assert pool.caps[top] > init[top]
+    for k in range(len(pool.specs)):
+        if k != top:
+            assert pool.caps[k] < init[k], (k, pool.caps)
+            # drained until one more step would breach the floor
+            assert pool.caps[k] - pool.swap_step < pool.min_cores
+    # stable: the last rounds propose nothing further
+    tail = pool.cap_log[-1][1]
+    assert all(caps == tail for _, caps in pool.cap_log[-5:])
+
+
+def test_overflow_pricing_signals_before_backlog_exists():
+    """The λ-overflow term: a tenant whose arrival rate exceeds its
+    capped ceiling prices a positive transfer gain *before* any request
+    is queued — the early-warning property that lets cores move ahead
+    of the queue melting down."""
+    pool = _zoo_pool("greedy-marginal")
+    table = pool._tables[0]
+    cap = pool.caps[0]
+    assert table.max_rate(cap + pool.swap_step) > table.max_rate(cap)
+    lam = table.max_rate(cap) + 50.0
+    prof = pool.marginal_profile(0, (np.empty(0), lam, 0.0))
+    assert prof["v"] > 0.0
+    assert prof["gain"] > 0.0
+    # and an idle tenant prices zero everywhere
+    idle = pool.marginal_profile(0, (np.empty(0), 0.0, 0.0))
+    assert idle["v"] == idle["gain"] == 0.0
+
+
+def test_pool_constructor_validation():
+    _, meta = build_scenario("mixed-zoo", duration=5, seed=0)
+    specs = list(meta["tenants"])
+    with pytest.raises(KeyError):
+        TenantPool(specs, policy="round-robin")
+    with pytest.raises(ValueError):
+        TenantPool(specs, budget=8, min_cores=4)      # cannot floor 3
+    with pytest.raises(ValueError):
+        TenantPool(specs, budget=128, initial_caps=(100, 100, 100))
+    with pytest.raises(ValueError):
+        TenantPool(specs, budget=128, initial_caps=(2, 2, 124))
+    pool = TenantPool(specs, budget=128)
+    assert sum(pool._targets) == 128
+    assert pool.caps == pool._targets
+
+
+# --------------------------------------------------------------------------
+# starvation is reported, not deadlocked (engine level)
+# --------------------------------------------------------------------------
+def test_priority_starved_tenant_reports_violations():
+    """Under ``priority`` the low-priority tenant is starved through a
+    flash crowd it could otherwise absorb — the run still completes,
+    every request of every tenant is accounted for, and the starved
+    tenant's violations show up in its report instead of hanging the
+    loop."""
+    batch, _ = build_scenario("mixed-zoo", duration=60, seed=SEED)
+    report, stats = run_scenario("mixed-zoo", engine="fast", duration=60,
+                                 seed=SEED, tenant_policy="priority")
+    assert report.n_requests == len(batch)
+    assert sum(t["n_requests"] for t in stats["tenants"].values()) == \
+        len(batch)
+    specs = stats["meta"]["tenants"]
+    starved = max(specs, key=lambda s: s.priority).name
+    assert stats["tenants"][starved]["violation_rate"] > 0.0
+    assert np.isfinite(report.core_seconds)
