@@ -2,13 +2,16 @@ PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
 .PHONY: verify test-fast smoke fig4 bench throughput token-bench \
-	fleet-bench session-bench tenant-bench docs-check help
+	fleet-bench session-bench tenant-bench uncertainty-bench \
+	docs-check bench-gate help
 
-# tier-1 verification (the ROADMAP contract)
+# tier-1 verification (the ROADMAP contract) + the benchmark
+# regression gate over recorded BENCH_*.json trajectories
 # companions: `make docs-check` (doc gates) and `make throughput`
 # (the million-request control-plane benchmark) — see `make help`
 verify:
 	$(PY) -m pytest -x -q
+	$(PY) tools/bench_gate.py
 
 # the fast tier-1 subset: control plane, solvers, scenarios, fleet —
 # no model builds, no kernel interpret-mode sweeps (a couple of minutes)
@@ -17,6 +20,7 @@ test-fast:
 		tests/test_queueing.py tests/test_network.py tests/test_perf_model.py \
 		tests/test_fastpath.py tests/test_scenarios.py tests/test_fleet.py \
 		tests/test_determinism.py tests/test_session.py tests/test_tenancy.py \
+		tests/test_uncertainty.py tests/test_bench_gate.py \
 		tests/test_public_api.py
 
 # fast end-to-end smoke of the unified serving API on both backends (<30 s)
@@ -55,9 +59,20 @@ session-bench:
 tenant-bench:
 	$(PY) -m benchmarks.tenant_bench
 
+# 100k+-request distribution-aware admission benchmark: quantile
+# planning + cancel-on-overrun vs the deterministic-cost scaler on
+# heavy-tailed decode lengths (asserts strictly fewer violations at
+# equal-or-lower core-seconds; appends to BENCH_uncertainty.json)
+uncertainty-bench:
+	$(PY) -m benchmarks.uncertainty_bench
+
 # doc link integrity + serving-API docstring coverage
 docs-check:
 	$(PY) tools/docs_check.py
+
+# benchmark regression gate over recorded BENCH_*.json trajectories
+bench-gate:
+	$(PY) tools/bench_gate.py
 
 # full benchmark harness
 bench:
@@ -73,5 +88,7 @@ help:
 	@echo "make fleet-bench - 500k-request fleet benchmark (>=20% savings bar)"
 	@echo "make session-bench - 100k+-request online-session benchmark"
 	@echo "make tenant-bench - 200k+-request multi-tenant pool benchmark"
+	@echo "make uncertainty-bench - 100k+-request distribution-aware admission benchmark"
 	@echo "make docs-check  - doc links + serving-API docstring coverage"
+	@echo "make bench-gate  - regression gate over BENCH_*.json trajectories"
 	@echo "make bench       - full benchmark harness"

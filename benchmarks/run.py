@@ -57,6 +57,10 @@ BENCHES = [
     # multi-tenant pool: >=200k requests over 3 heterogeneous tenants on
     # a 128-core pool vs static partitions (benchmarks/tenant_bench.py)
     ("tenant", "benchmarks.tenant_bench"),
+    # distribution-aware admission: quantile planning + cancel-on-overrun
+    # vs the deterministic-cost scaler on heavy-tailed decode lengths
+    # (benchmarks/uncertainty_bench.py)
+    ("uncertainty", "benchmarks.uncertainty_bench"),
 ]
 
 

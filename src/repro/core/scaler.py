@@ -26,6 +26,7 @@ from repro.core.cost_model import CostModel, TokenCostModel
 from repro.core.perf_model import PerfModel
 from repro.core.queueing import EDFQueue
 from repro.core.slo import Decision
+from repro.core.uncertainty import UncertaintyConfig
 from repro.core.solver import (DEFAULT_B, DEFAULT_C, MemoizedSolver,
                                TokenMemoizedSolver, solve_bruteforce,
                                solve_pruned, solve_token_bruteforce)
@@ -137,6 +138,12 @@ class TokenSpongeScaler:
     # the cost model's mean decode length (a slot frees when its stream
     # finishes) — see ``repro.core.solver.solve_token_bruteforce``
     drag_steps: Optional[float] = None
+    # distribution-aware admission (ISSUE 7): when the config carries a
+    # non-point distribution, the solve plans drag at the admission
+    # quantile and widens the TTFT headroom by the shared predictor's
+    # slack factor; None or a point mass leaves the deterministic solve
+    # untouched (bit-identical decisions)
+    uncertainty: Optional[UncertaintyConfig] = None
     decisions: List[tuple[float, Decision]] = field(default_factory=list)
     _next_t: float = 0.0
     _memo: Optional[TokenMemoizedSolver] = field(default=None, repr=False)
@@ -166,10 +173,24 @@ class TokenSpongeScaler:
     def decide(self, now: float, queue, lam: float,
                initial_wait: float = 0.0, active_slots: int = 0,
                tbt_budget: Optional[float] = None) -> Decision:
-        """One adaptation step: snapshot, solve, log, return."""
+        """One adaptation step: snapshot, solve, log, return.
+
+        With a non-point :class:`~repro.core.uncertainty.
+        UncertaintyConfig`, the p-quantile completion estimate gates
+        admission: slot-turnover drag is planned at
+        ``dist.quantile(admission_quantile)`` (not the cost model's
+        mean) and the TTFT headroom is multiplied by the predictor's
+        running slack factor, so worsening calibration widens the
+        safety margin and sustained good calibration narrows it back.
+        """
         self._next_t = now + self.adaptation_interval
+        headroom, drag = self.headroom, self.drag_steps
+        unc = self.uncertainty
+        if unc is not None and not unc.is_point():
+            headroom = self.headroom * unc.predictor.slack_factor()
+            drag = unc.drag_estimate()
         rem, toks, queue_tbt = queue.token_snapshot(now)
-        remaining = np.maximum(rem - self.headroom, 0.0)
+        remaining = np.maximum(rem - headroom, 0.0)
         tbt = queue_tbt if tbt_budget is None else min(tbt_budget, queue_tbt)
         if np.isfinite(tbt):
             tbt = max(tbt - self.tbt_headroom, 0.0)
@@ -178,11 +199,11 @@ class TokenSpongeScaler:
             d = solve_token_bruteforce(
                 remaining, toks, lam_eff, self.cost, self.c_set, self.b_set,
                 initial_wait=initial_wait, tbt_budget=tbt,
-                active_slots=active_slots, drag_steps=self.drag_steps)
+                active_slots=active_slots, drag_steps=drag)
         else:
             d = self.memo.solve(remaining, toks, lam_eff,
                                 initial_wait=initial_wait, tbt_budget=tbt,
                                 active_slots=active_slots,
-                                drag_steps=self.drag_steps)
+                                drag_steps=drag)
         self.decisions.append((now, d))
         return d

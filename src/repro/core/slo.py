@@ -39,11 +39,21 @@ class Request:
     prompt_tokens: int = field(compare=False, default=1)
     decode_tokens: int = field(compare=False, default=0)
     tbt_slo: float = field(compare=False, default=float("inf"))
+    # decode-length uncertainty (ISSUE 7): the declared distribution of
+    # ``decode_tokens`` (``repro.core.uncertainty.LengthDistribution``);
+    # None or a point mass means the length is known exactly and every
+    # pre-uncertainty code path runs verbatim
+    decode_dist: Optional[object] = field(compare=False, default=None,
+                                          repr=False)
     # lifecycle (filled by the system)
     start_proc: Optional[float] = field(compare=False, default=None)
     first_token: Optional[float] = field(compare=False, default=None)
     finish: Optional[float] = field(compare=False, default=None)
     tbt_violations: int = field(compare=False, default=0)
+    # cancel-on-overrun: set by a speculative engine when the stream
+    # exhausted its token budget and was cancelled mid-decode (counted
+    # in n_cancelled, excluded from latency/violation aggregates)
+    cancelled: bool = field(compare=False, default=False)
 
     @classmethod
     def make(cls, arrival: float, comm_latency: float, slo: float,

@@ -114,7 +114,15 @@ def run_live(args) -> dict:
 
 
 def run_scenario_mode(args) -> dict:
+    q = args.admission_quantile
+    if q is not None and not (q == 0.0 or 0.0 < q < 1.0):
+        raise SystemExit(f"--admission-quantile must be in [0, 1) "
+                         f"(0 disables the uncertainty path), got {q}")
     if args.engine == "jax":
+        if q is not None or args.no_speculative:
+            raise SystemExit("--admission-quantile/--no-speculative run "
+                             "on the fast/exact token engines, not "
+                             "--engine jax")
         from repro.serving.token_backend import run_token_jax_scenario
         if args.policy != "sponge":
             raise SystemExit("--engine jax runs the sponge policy only "
@@ -134,7 +142,9 @@ def run_scenario_mode(args) -> dict:
             seed=args.seed, requests=args.requests,
             replicas=args.replicas, router=args.router,
             tenant_policy=args.tenants, pool_cores=args.pool_cores,
-            mid_flight=not args.no_mid_flight)
+            mid_flight=not args.no_mid_flight,
+            admission_quantile=args.admission_quantile,
+            speculative=not args.no_speculative)
     ev = stats["events"]
     dt = stats["run_wall_s"]            # engine time only (no generation)
     out = {"scenario": args.scenario, "engine": stats["engine"],
@@ -163,6 +173,13 @@ def run_scenario_mode(args) -> dict:
                                    "violation_rate": t["violation_rate"],
                                    "core_seconds": t["core_seconds"]}
                             for name, t in stats["tenants"].items()})
+    if "uncertainty" in stats:          # distribution-aware runs: ISSUE-7
+        u = stats["uncertainty"]
+        out.update(n_cancelled=report.n_cancelled,
+                   admission_quantile=u["quantile"],
+                   slack_factor=u["slack_factor"],
+                   calibration_error=u["calibration_error"],
+                   overrun_cancels=u["overrun_cancels"])
     if "solver" in stats:
         out["solver_hit_rate"] = stats["solver"].get("hit_rate")
     print(json.dumps(out, indent=1, default=float))
@@ -207,6 +224,17 @@ def main(argv=None):
                     help="session scenarios: suppress the mid-flight "
                          "update_slo/cancel stream (the closed-world "
                          "replay of the same workload)")
+    ap.add_argument("--admission-quantile", type=float, default=None,
+                    help="token scenarios with a declared decode-length "
+                         "distribution: plan admission at this quantile "
+                         "(0 disables the uncertainty path — the "
+                         "deterministic-cost baseline; default: the "
+                         "scenario's own quantile)")
+    ap.add_argument("--no-speculative", action="store_true",
+                    help="distribution-aware runs: disable speculative "
+                         "over-admission with cancel-on-overrun (streams "
+                         "run to completion; the solver still plans at "
+                         "the admission quantile)")
     ap.add_argument("--arch", default="smollm-135m-reduced")
     ap.add_argument("--policy", default="sponge")
     # None = "use the mode's default" (scenarios carry their own rps /

@@ -215,41 +215,74 @@ class TokenSimBackend(_PooledBackend):
     running gang) lives in the struct-of-arrays
     ``repro.serving.fastpath.TokenFastSimRunner``; this backend keeps
     the object-based exact loop intact for token workloads.
+
+    Decode-length uncertainty (ISSUE 7): a non-point
+    ``repro.core.uncertainty.UncertaintyConfig`` arms speculative
+    execution — every decode stream carries a token budget
+    (``config.budget_tokens(slo)``) and a stream that exhausts it
+    before finishing is cancelled mid-gang: its request is flagged
+    ``cancelled`` (the runner routes it through
+    ``Monitor.observe_cancel`` — PR 5's machinery, retracting its λ
+    contribution and excluding it from every aggregate) and it stops
+    consuming decode steps, so the gang shrinks exactly as the fast
+    engine's slot frees.  Finished and overrun streams feed the shared
+    length predictor.  With no config (or a point mass) the loop below
+    runs verbatim — decision-identical to the pre-uncertainty backend.
     """
 
     name = "token-sim"
 
     def __init__(self, cost, c_set: Sequence[int], b_set: Sequence[int],
-                 c0: int = 1, resize_penalty: float = 0.005):
+                 c0: int = 1, resize_penalty: float = 0.005,
+                 uncertainty=None):
         super().__init__(cost, c_set, b_set, c0=c0,
                          resize_penalty=resize_penalty)
         self.cost = cost
         self.tokens_served = 0
+        self.uncertainty = uncertainty
+        self.overrun_cancels = 0
 
     def execute(self, batch: List[Request], c: int, b: int,
                 now: float) -> float:
+        unc = self.uncertainty
+        track = unc is not None and not unc.is_point()
+        spec = track and unc.speculative
         total_prompt = sum(r.prompt_tokens for r in batch)
         t = now + float(self.cost.prefill_latency(c, total_prompt))
-        live: List[tuple[Request, int]] = []
+        live: List[tuple[Request, int, int]] = []
         for r in batch:
             r.first_token = t
             self.tokens_served += 1          # the prefill's first token
             if r.decode_tokens > 0:
-                live.append((r, r.decode_tokens))
+                cap = (unc.budget_tokens(r.slo) if spec else (1 << 60))
+                live.append((r, r.decode_tokens, cap))
             else:
                 r.finish = t
         while live:
             l_d = float(self.cost.decode_latency(c, len(live)))
             t += l_d
-            nxt: List[tuple[Request, int]] = []
-            for r, remaining in live:
+            nxt: List[tuple[Request, int, int]] = []
+            for r, remaining, cap in live:
                 if l_d > r.tbt_slo + 1e-12:
                     r.tbt_violations += 1
                 self.tokens_served += 1
                 if remaining - 1 > 0:
-                    nxt.append((r, remaining - 1))
+                    if spec and cap <= 1:
+                        # cancel-on-overrun: budget spent, stream not
+                        # done — drop it from the gang (the slot frees)
+                        # and let the runner observe the cancel
+                        r.cancelled = True
+                        self.overrun_cancels += 1
+                        if track:
+                            unc.observe(unc.planned_length(r.slo),
+                                        float(r.decode_tokens), r.slo)
+                    else:
+                        nxt.append((r, remaining - 1, cap - 1))
                 else:
                     r.finish = t
+                    if track:
+                        unc.observe(unc.planned_length(r.slo),
+                                    float(r.decode_tokens), r.slo)
             live = nxt
         return t
 
@@ -627,6 +660,12 @@ class ScenarioRunner:
                                         len(batch)))
                 for r in batch:
                     r.start_proc = t
+                    if r.cancelled:
+                        # cancel-on-overrun (speculative token backend):
+                        # PR 5's machinery — retract λ, count in
+                        # n_cancelled, keep it out of every aggregate
+                        self.monitor.observe_cancel(r)
+                        continue
                     if r.finish is None:   # phase-aware backends record
                         r.finish = fin     # per-request finishes themselves
                     self.monitor.observe_completion(r)

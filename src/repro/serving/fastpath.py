@@ -215,13 +215,20 @@ class TokenFastSimRunner(FastSimRunner):
     def __init__(self, policy, cost: TokenCostModel,
                  c_set=DEFAULT_C, b_set=DEFAULT_B, *, c0: int = 1,
                  tick: float = 1.0, resize_penalty: float = 0.005,
-                 prior_rps: float = 0.0, rate_window: float = 5.0):
+                 prior_rps: float = 0.0, rate_window: float = 5.0,
+                 uncertainty=None):
         super().__init__(policy, cost, c_set, b_set, c0=c0, tick=tick,
                          resize_penalty=resize_penalty,
                          prior_rps=prior_rps, rate_window=rate_window)
         self.cost = cost
         self.queue = TokenFastEDFQueue()
         self._pending_penalty = 0.0
+        # decode-length uncertainty (ISSUE 7): a non-point
+        # ``repro.core.uncertainty.UncertaintyConfig`` arms speculative
+        # admission with cancel-on-overrun on the session loop; None or
+        # a point mass keeps the deterministic loop verbatim
+        self.uncertainty = uncertainty
+        self.overrun_cancels = 0   # set by the session at report time
 
     def _apply(self, d, now: float) -> None:
         """In-place vertical resize; the penalty lands on the next step."""

@@ -37,6 +37,15 @@ Registered scenarios (see ``docs/scenarios.md`` for the full briefs):
   joint horizontal + vertical engines in ``repro.serving.fleet``):
   mid-run replica loss, a rolling deploy under live traffic, and
   arrival spikes against a peak-provisioned static-fleet baseline.
+* ``llm-heavy-tail``  — chat traffic with *heavy-tailed* decode lengths
+  (lognormal sigma=1.4, p90 ~6x the median) whose generating
+  distribution is declared to the scheduler (``meta["decode_dist"]``):
+  quantile-based admission and speculative cancel-on-overrun
+  (``repro.core.uncertainty``) vs the deterministic-cost scaler.
+* ``retrieve-then-generate`` — multi-stage RAG mix: ~35% of requests
+  spend a variable retrieval stage *before* arriving (it eats the TTFT
+  budget like a slow network), then decode against a declared
+  two-component mixture; per-SLO-class planning quantiles.
 * ``slo-renegotiation`` / ``cancel-storm`` — online-session scenarios
   (``meta["session_events"]`` routes the run through the session API,
   ``repro.serving.session``): network telemetry re-keys queued
@@ -319,6 +328,97 @@ register(Scenario(
 
 
 # --------------------------------------------------------------------------
+# uncertainty scenarios (decode lengths unknown at admission — ISSUE 7)
+# --------------------------------------------------------------------------
+def _build_llm_heavy_tail(duration, rps, rng):
+    """Chat traffic whose decode lengths are *heavy-tailed* (Orloj's
+    regime): the declared ``LognormalLengths`` is exactly the generating
+    distribution, so the scheduler knows the distribution but not any
+    request's realized length.  The tail above the p90 carries ~half the
+    total decode mass — a deterministic-cost scaler planning at the mean
+    lets a few monster streams hog every slot."""
+    from repro.core.uncertainty import LognormalLengths
+    seed = int(rng.integers(2**31))
+    trace = synth_4g_trace(_trace_seconds(duration), seed=seed)
+    send = poisson_times(rps, duration, rng)
+    n = send.size
+    prompt = lognormal_lengths(rng, n, median=64, sigma=0.7, lo=8, hi=512)
+    decode = lognormal_lengths(rng, n, median=16, sigma=1.4, lo=1, hi=1024)
+    sizes = np.maximum(prompt * 0.008, 1.0)
+    cl = comm_latency_many(sizes, trace, send)
+    dist = LognormalLengths(median=16, sigma=1.4, lo=1, hi=1024)
+    batch = RequestBatch.from_send(send, cl, slo=1.0, size_kb=sizes,
+                                   prompt_tokens=prompt,
+                                   decode_tokens=decode, tbt_slo=0.08,
+                                   decode_dist=dist)
+    meta = _token_meta(batch, rps, trace, slo=1.0, tbt=0.08)
+    meta["decode_dist"] = dist
+    meta["admission_quantile"] = 0.9       # scenario default; CLI overrides
+    return batch, meta
+
+
+register(Scenario(
+    name="llm-heavy-tail",
+    summary="heavy-tailed decode lengths (lognormal sigma=1.4, declared "
+            "distribution): quantile admission + cancel-on-overrun vs "
+            "the deterministic-cost scaler",
+    build=_build_llm_heavy_tail, default_rps=25.0, default_duration=600.0))
+
+
+def _build_retrieve_then_generate(duration, rps, rng):
+    """Vortex-style multi-stage requests under one end-to-end budget:
+    ~35% of requests run a retrieval stage first (variable-duration,
+    gamma-distributed, spent *before* the prompt reaches the server — it
+    eats the TTFT budget exactly like slow networks do in the paper's
+    dynamic-SLO mechanism) and then generate against a much longer
+    retrieved context.  Decode lengths follow a two-component mixture
+    the scheduler declares but cannot resolve per request."""
+    from repro.core.uncertainty import LognormalLengths, MixtureLengths
+    seed = int(rng.integers(2**31))
+    trace = synth_4g_trace(_trace_seconds(duration), seed=seed)
+    send = poisson_times(rps, duration, rng)
+    n = send.size
+    is_rag = rng.uniform(0.0, 1.0, n) < 0.35
+    prompt = np.where(
+        is_rag,
+        lognormal_lengths(rng, n, median=320, sigma=0.5, lo=64, hi=1024),
+        lognormal_lengths(rng, n, median=48, sigma=0.5, lo=8, hi=256))
+    direct = LognormalLengths(median=16, sigma=0.6, lo=1, hi=128)
+    rag = LognormalLengths(median=64, sigma=0.9, lo=8, hi=768)
+    decode = np.where(is_rag,
+                      rag.sample(rng, n).astype(np.int64),
+                      direct.sample(rng, n).astype(np.int64))
+    # the retrieval stage: gamma-distributed seconds added before the
+    # request arrives at the generator (deadline = send + slo stands,
+    # so retrieval time comes straight out of the TTFT budget)
+    retrieval = np.where(is_rag, rng.gamma(2.0, 0.12, n), 0.0)
+    sizes = np.maximum(prompt * 0.008, 1.0)
+    cl = comm_latency_many(sizes, trace, send) + retrieval
+    slo = np.where(is_rag, 2.0, 0.9)
+    tbt = np.where(is_rag, 0.10, 0.07)
+    dist = MixtureLengths((direct, rag), (0.65, 0.35))
+    batch = RequestBatch.from_send(send, cl, slo=slo, size_kb=sizes,
+                                   prompt_tokens=prompt,
+                                   decode_tokens=decode, tbt_slo=tbt,
+                                   decode_dist=dist)
+    meta = _token_meta(batch, rps, trace, slo=0.9, tbt=0.07)
+    meta["decode_dist"] = dist
+    meta["admission_quantile"] = 0.9
+    # tight class (direct, slo<=0.9) plans higher up the distribution
+    meta["class_quantiles"] = ((1.0, 0.95),)
+    return batch, meta
+
+
+register(Scenario(
+    name="retrieve-then-generate",
+    summary="multi-stage RAG mix: variable-duration retrieval eats the "
+            "TTFT budget, decode is a declared two-component mixture — "
+            "per-SLO-class quantile admission",
+    build=_build_retrieve_then_generate, default_rps=20.0,
+    default_duration=600.0))
+
+
+# --------------------------------------------------------------------------
 # fleet scenarios (joint horizontal + vertical scaling — ISSUE 4)
 # --------------------------------------------------------------------------
 def _fleet_meta(rps: float, trace, *, n0: int, c0: int = 16,
@@ -428,8 +528,10 @@ def _merge_batches(batches) -> RequestBatch:
     order = np.argsort(np.concatenate([b.arrival for b in batches]),
                        kind="stable")
     for f in dataclasses.fields(RequestBatch):
-        cols[f.name] = np.concatenate(
-            [getattr(b, f.name) for b in batches])[order]
+        vals = [getattr(b, f.name) for b in batches]
+        if not isinstance(vals[0], np.ndarray):
+            continue                 # object attachments (decode_dist)
+        cols[f.name] = np.concatenate(vals)[order]
     return RequestBatch(**cols)
 
 
@@ -697,6 +799,8 @@ def run_scenario(name: str, *, policy: str = "sponge",
                  mid_flight: bool = True,
                  tenant_policy: Optional[str] = None,
                  pool_cores: Optional[int] = None,
+                 admission_quantile: Optional[float] = None,
+                 speculative: bool = True,
                  **policy_kw):
     """Run a registered scenario end to end; returns ``(RunReport,
     stats)`` where ``stats`` carries engine/meta/solver-cache info.
@@ -716,6 +820,15 @@ def run_scenario(name: str, *, policy: str = "sponge",
     ``mixed-zoo-rush``) run through the shared-pool engines
     (``repro.serving.tenancy``); ``tenant_policy`` picks the pool's
     reallocation policy, ``pool_cores`` overrides the core budget.
+
+    Token scenarios that declare a decode-length distribution
+    (``meta["decode_dist"]``: ``llm-heavy-tail``,
+    ``retrieve-then-generate``) run distribution-aware admission
+    (``repro.core.uncertainty``): ``admission_quantile`` overrides the
+    scenario's planning quantile (``0.0`` disables it entirely — the
+    deterministic-cost baseline; ``None`` takes the scenario default),
+    ``speculative=False`` turns off over-admission with
+    cancel-on-overrun while keeping quantile drag.
     """
     import time
     from repro.serving.api import make_policy, make_sim_server
@@ -726,12 +839,18 @@ def run_scenario(name: str, *, policy: str = "sponge",
                                  seed=seed, requests=requests)
     # a scenario with sub-second SLOs recommends its adaptation cadence
     tick = tick if tick is not None else meta.get("tick", 1.0)
+    if admission_quantile is not None and not meta.get("token"):
+        raise ValueError(
+            "admission_quantile applies to token scenarios only "
+            f"(scenario {name!r} is not token-based)")
     if meta.get("token"):
         return _run_token_scenario(batch, meta, policy=policy,
                                    engine=engine, c_set=c_set, b_set=b_set,
                                    c0=c0, tick=tick, horizon=horizon,
                                    budget_quantum=budget_quantum,
-                                   lam_quantum=lam_quantum, **policy_kw)
+                                   lam_quantum=lam_quantum,
+                                   admission_quantile=admission_quantile,
+                                   speculative=speculative, **policy_kw)
     if meta.get("tenants"):
         return _run_tenant_scenario(meta, policy=policy, engine=engine,
                                     tick=tick, horizon=horizon,
@@ -963,10 +1082,40 @@ def _run_tenant_scenario(meta: dict, *, policy: str, engine: str,
     return report, stats
 
 
+def _token_uncertainty(meta: dict, admission_quantile: Optional[float],
+                       speculative: bool):
+    """Build the run's shared ``UncertaintyConfig`` (or ``None``).
+
+    One instance is shared by the scaler and the engine so the online
+    predictor's calibration error feeds back into the solver's slack.
+    ``admission_quantile=None`` takes the scenario default
+    (``meta["admission_quantile"]``); ``0.0`` disables the uncertainty
+    path entirely — the deterministic-cost baseline.  Scenarios without
+    a declared ``decode_dist`` always run deterministic.
+    """
+    from repro.core.uncertainty import UncertaintyConfig
+    dist = meta.get("decode_dist")
+    if dist is None:
+        return None
+    q = admission_quantile
+    if q is None:
+        q = meta.get("admission_quantile", 0.9)
+    if q == 0.0:
+        return None
+    if not 0.0 < q < 1.0:
+        raise ValueError(f"admission_quantile must be in [0, 1) "
+                         f"(0 disables), got {q}")
+    return UncertaintyConfig(dist=dist, admission_quantile=q,
+                             class_quantiles=meta.get("class_quantiles", ()),
+                             speculative=speculative)
+
+
 def _run_token_scenario(batch: RequestBatch, meta: dict, *, policy: str,
                         engine: str, c_set, b_set, c0: int, tick: float,
                         horizon, budget_quantum: float, lam_quantum: float,
-                        token_quantum: int = 16, **policy_kw):
+                        token_quantum: int = 16,
+                        admission_quantile: Optional[float] = None,
+                        speculative: bool = True, **policy_kw):
     """Token-scenario execution: the continuous-batching engines.
 
     ``engine="fast"`` — :class:`repro.serving.fastpath.TokenFastSimRunner`
@@ -976,6 +1125,11 @@ def _run_token_scenario(batch: RequestBatch, meta: dict, *, policy: str,
     gang-scheduled :class:`repro.serving.api.TokenSimBackend`.  Only the
     ``sponge`` policy understands token compositions; ask for the real
     kernel path via ``launch/serve.py --engine jax``.
+
+    When the scenario declares a decode-length distribution a fresh
+    :class:`repro.core.uncertainty.UncertaintyConfig` is built per run
+    (shared between scaler and engine — the calibration feedback loop)
+    and its summary lands in ``stats["uncertainty"]``.
     """
     import time
     from repro.core.scaler import TokenSpongeScaler
@@ -986,29 +1140,38 @@ def _run_token_scenario(batch: RequestBatch, meta: dict, *, policy: str,
             f"token scenarios run the sponge policy only (got {policy!r}); "
             "fixed-work baselines cannot see token compositions")
     cost: TokenCostModel = meta["cost"]
+    unc = _token_uncertainty(meta, admission_quantile, speculative)
     scaler = TokenSpongeScaler(
         cost, c_set=tuple(c_set), b_set=tuple(b_set),
         adaptation_interval=tick, budget_quantum=budget_quantum,
-        lam_quantum=lam_quantum, token_quantum=token_quantum, **policy_kw)
+        lam_quantum=lam_quantum, token_quantum=token_quantum,
+        uncertainty=unc, **policy_kw)
     if engine == "fast":
         runner = TokenFastSimRunner(scaler, cost, c_set, b_set, c0=c0,
                                     tick=tick,
-                                    prior_rps=meta["expected_rps"])
+                                    prior_rps=meta["expected_rps"],
+                                    uncertainty=unc)
         t0 = time.perf_counter()
         report = runner.run(batch, horizon)
         stats = {"engine": "fast", "events": runner.events_processed,
                  "run_wall_s": time.perf_counter() - t0, "meta": meta,
                  "solver": scaler.solver_stats()}
+        if unc is not None:
+            stats["uncertainty"] = dict(
+                unc.stats(), overrun_cancels=runner.overrun_cancels)
         return report, stats
     scaler.budget_quantum = 0.0
     scaler.lam_quantum = 0.0
     scaler.token_quantum = 0
-    backend = TokenSimBackend(cost, c_set, b_set, c0=c0)
+    backend = TokenSimBackend(cost, c_set, b_set, c0=c0, uncertainty=unc)
     runner = ScenarioRunner(scaler, backend, tick=tick)
     runner.monitor.rate.prior_rps = meta["expected_rps"]
     reqs = batch.to_requests()
     t0 = time.perf_counter()
     report = runner.run(reqs, horizon)
-    return report, {"engine": "exact",
-                    "events": runner.events_processed,
-                    "run_wall_s": time.perf_counter() - t0, "meta": meta}
+    stats = {"engine": "exact", "events": runner.events_processed,
+             "run_wall_s": time.perf_counter() - t0, "meta": meta}
+    if unc is not None:
+        stats["uncertainty"] = dict(
+            unc.stats(), overrun_cancels=backend.overrun_cancels)
+    return report, stats

@@ -790,6 +790,20 @@ class TokenFastSession(_ColumnSession):
     point past which a real engine has spent the prefill).  Admission,
     step composition and the per-token accounting follow the batch
     loop's rules verbatim.
+
+    Decode-length uncertainty (ISSUE 7): when the runner carries a
+    non-point ``repro.core.uncertainty.UncertaintyConfig``, admission
+    is *speculative* — every stream joins with a decode-token budget
+    (``config.budget_tokens(slo)``: the per-SLO-class quantile estimate
+    widened by the predictor's slack) and a stream that exhausts its
+    budget before finishing is **cancelled at the step boundary**: its
+    slot frees immediately, the cancel flows through the PR 5 machinery
+    (λ retraction via the ``_cxl`` window + ``n_cancelled``) and the
+    request is excluded from latency/violation aggregates (``finish``
+    stays NaN).  Finished and overrun streams both feed the shared
+    length predictor, closing the calibration → solver-slack loop.
+    With no config (or a point mass) none of this code runs and the
+    deterministic loop is bit-identical to before.
     """
 
     def __init__(self, runner):
@@ -809,6 +823,15 @@ class TokenFastSession(_ColumnSession):
         self._decode_tokens_served = 0
         self._tbt_viol_tokens = 0
         self._rebind = False
+        # speculative admission (parallel to _run_idx when tracking):
+        # per-stream token budgets + the length each was planned at
+        unc = getattr(runner, "uncertainty", None)
+        self._unc = unc
+        self._track = unc is not None and not unc.is_point()
+        self._spec = self._track and unc.speculative
+        self._run_cap: List[int] = []
+        self._run_pred: List[float] = []
+        self._n_overrun = 0
 
     def _on_submit(self) -> None:
         n = self._n - len(self._first_tok)
@@ -938,9 +961,13 @@ class TokenFastSession(_ColumnSession):
                 gap = et - self._step_start
                 run_idx, run_rem, run_tbt = (self._run_idx, self._run_rem,
                                              self._run_tbt)
+                run_cap, run_pred = self._run_cap, self._run_pred
+                track, spec, unc = self._track, self._spec, self._unc
                 nxt_idx: List[int] = []
                 nxt_rem: List[int] = []
                 nxt_tbt: List[float] = []
+                nxt_cap: List[int] = []
+                nxt_pred: List[float] = []
                 for k in range(self._step_decoders):
                     i = run_idx[k]
                     self._tokens_served += 1
@@ -949,11 +976,30 @@ class TokenFastSession(_ColumnSession):
                         self._tbt_viol_tokens += 1
                         tbt_bad[i] = True
                     if run_rem[k] > 1:
-                        nxt_idx.append(i)
-                        nxt_rem.append(run_rem[k] - 1)
-                        nxt_tbt.append(run_tbt[k])
+                        if spec and run_cap[k] <= 1:
+                            # cancel-on-overrun: the stream consumed its
+                            # token budget without finishing — free the
+                            # slot through the PR 5 cancel machinery
+                            # (λ retraction + n_cancelled); finish stays
+                            # NaN so aggregates exclude the request
+                            state[i] = CANCELLED
+                            self._n_cancelled += 1
+                            self._n_overrun += 1
+                            insort(self._cxl, float(self._arrival[i]))
+                            unc.observe(run_pred[k], float(dtoks[i]),
+                                        float(self._slo[i]))
+                        else:
+                            nxt_idx.append(i)
+                            nxt_rem.append(run_rem[k] - 1)
+                            nxt_tbt.append(run_tbt[k])
+                            if track:
+                                nxt_cap.append(run_cap[k] - 1)
+                                nxt_pred.append(run_pred[k])
                     else:
                         finish[i] = et
+                        if track:
+                            unc.observe(run_pred[k], float(dtoks[i]),
+                                        float(self._slo[i]))
                 for i in self._step_admit:
                     first_tok[i] = et
                     self._tokens_served += 1
@@ -961,10 +1007,16 @@ class TokenFastSession(_ColumnSession):
                         nxt_idx.append(i)
                         nxt_rem.append(int(dtoks[i]))
                         nxt_tbt.append(float(tbts[i]))
+                        if track:
+                            s = float(self._slo[i])
+                            nxt_pred.append(unc.planned_length(s))
+                            nxt_cap.append(unc.budget_tokens(s)
+                                           if spec else (1 << 60))
                     else:
                         finish[i] = et
                 self._run_idx, self._run_rem, self._run_tbt = (
                     nxt_idx, nxt_rem, nxt_tbt)
+                self._run_cap, self._run_pred = nxt_cap, nxt_pred
                 self._step_admit = []
                 self._step_decoders = 0
                 self._step_end = self._start_step(et)
@@ -975,6 +1027,7 @@ class TokenFastSession(_ColumnSession):
 
     def _report(self, horizon: float) -> RunReport:
         r = self.runner
+        r.overrun_cancels = self._n_overrun   # telemetry for run stats
         return r._token_report(
             self._columns_batch(),
             np.asarray(self._first_tok, np.float64),

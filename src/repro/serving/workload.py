@@ -42,6 +42,14 @@ class RequestBatch:
     requests ``deadline`` is the TTFT deadline.  The columns default to
     the fixed-work shape (1/0/inf), so every pre-token consumer of a
     batch is unchanged.
+
+    Uncertainty attachment (ISSUE 7): ``decode_dist`` optionally carries
+    the workload's declared decode-length distribution
+    (``repro.core.uncertainty.LengthDistribution`` — one object for the
+    batch, not a column).  ``decode_tokens`` stays the realized ground
+    truth the engines serve; the distribution is what the *scheduler* is
+    allowed to know.  None (or a point mass) keeps every deterministic
+    path bit-identical.
     """
     send: np.ndarray
     arrival: np.ndarray
@@ -52,6 +60,7 @@ class RequestBatch:
     prompt_tokens: Optional[np.ndarray] = None
     decode_tokens: Optional[np.ndarray] = None
     tbt_slo: Optional[np.ndarray] = None
+    decode_dist: Optional[object] = None
 
     def __post_init__(self):
         n = self.arrival.size
@@ -68,7 +77,8 @@ class RequestBatch:
     @classmethod
     def from_send(cls, send: np.ndarray, comm_latency: np.ndarray,
                   slo, size_kb=200.0, prompt_tokens=None,
-                  decode_tokens=None, tbt_slo=None) -> "RequestBatch":
+                  decode_tokens=None, tbt_slo=None,
+                  decode_dist=None) -> "RequestBatch":
         """Build + arrival-sort a batch from send times and comm latencies
         (``slo`` / ``size_kb`` / the token columns may be scalars or
         per-request arrays; token columns default to fixed work)."""
@@ -94,7 +104,8 @@ class RequestBatch:
         arrival = arrival[order]
         return cls(send=send, arrival=arrival, comm_latency=cl, slo=slo,
                    deadline=arrival - cl + slo, size_kb=size_kb,
-                   prompt_tokens=pt, decode_tokens=dt, tbt_slo=tbt)
+                   prompt_tokens=pt, decode_tokens=dt, tbt_slo=tbt,
+                   decode_dist=decode_dist)
 
     def __len__(self) -> int:
         return int(self.arrival.size)
@@ -113,7 +124,8 @@ class RequestBatch:
                             size_kb=self.size_kb[:k],
                             prompt_tokens=self.prompt_tokens[:k],
                             decode_tokens=self.decode_tokens[:k],
-                            tbt_slo=self.tbt_slo[:k])
+                            tbt_slo=self.tbt_slo[:k],
+                            decode_dist=self.decode_dist)
 
     def to_requests(self) -> List[Request]:
         """Materialize ``Request`` objects (arrival order) for the exact
@@ -121,7 +133,8 @@ class RequestBatch:
         return [Request(deadline=float(d), arrival=float(a),
                         comm_latency=float(c), slo=float(s),
                         size_kb=float(k), prompt_tokens=int(pt),
-                        decode_tokens=int(dt), tbt_slo=float(tb))
+                        decode_tokens=int(dt), tbt_slo=float(tb),
+                        decode_dist=self.decode_dist)
                 for d, a, c, s, k, pt, dt, tb in zip(
                     self.deadline, self.arrival, self.comm_latency,
                     self.slo, self.size_kb, self.prompt_tokens,

@@ -1,0 +1,91 @@
+"""The benchmark regression gate (``tools/bench_gate.py``).
+
+The gate is the CI tripwire over recorded ``BENCH_*.json``
+trajectories: green on the repo's real history, red on an artificially
+regressed record — both directions are pinned here so the gate itself
+cannot silently rot.
+"""
+import json
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(REPO / "tools"))
+
+import bench_gate  # noqa: E402
+
+
+def _write(root: Path, name: str, entries) -> None:
+    (root / f"BENCH_{name}.json").write_text(json.dumps(entries),
+                                             encoding="utf-8")
+
+
+def _savings_entry(key: str, value: float) -> dict:
+    return {"timestamp": "t", "commit": "c", "metrics": {key: value}}
+
+
+def test_gate_green_on_repo_history():
+    """The repo's own recorded trajectories must pass the gate."""
+    problems, _notices = bench_gate.run_gate(REPO)
+    assert problems == [], problems
+
+
+def test_gate_green_main_exit_code():
+    assert bench_gate.main(["--root", str(REPO)]) == 0
+
+
+def test_missing_files_pass_with_notice(tmp_path):
+    problems, notices = bench_gate.run_gate(tmp_path)
+    assert problems == []
+    assert len(notices) == len(bench_gate.SAVINGS_KEYS)
+
+
+def test_regressed_savings_blocks(tmp_path):
+    """Latest savings >10% below the trajectory best must fail."""
+    _write(tmp_path, "tenant", [_savings_entry("savings", 0.50),
+                                _savings_entry("savings", 0.30)])
+    problems, _ = bench_gate.run_gate(tmp_path)
+    assert any("BENCH_tenant.json" in p and "regressed" in p
+               for p in problems), problems
+    assert bench_gate.main(["--root", str(tmp_path)]) == 1
+
+
+def test_savings_within_tolerance_passes(tmp_path):
+    _write(tmp_path, "tenant", [_savings_entry("savings", 0.50),
+                                _savings_entry("savings", 0.46)])
+    _write(tmp_path, "uncertainty",
+           [_savings_entry("core_seconds_saved", 0.11)])
+    problems, _ = bench_gate.run_gate(tmp_path)
+    assert problems == [], problems
+
+
+def test_uncertainty_regression_blocks(tmp_path):
+    _write(tmp_path, "uncertainty",
+           [_savings_entry("core_seconds_saved", 0.12),
+            _savings_entry("core_seconds_saved", 0.01)])
+    problems, _ = bench_gate.run_gate(tmp_path)
+    assert any("BENCH_uncertainty.json" in p for p in problems), problems
+
+
+def test_slow_speedup_row_blocks(tmp_path):
+    """A harness row-list whose speedup falls below the 10x bar fails."""
+    rows = [["scenario_fast", 12.3, "events_per_s=81000;speedup=8.4x"]]
+    _write(tmp_path, "throughput",
+           [{"timestamp": "t", "commit": "c", "metrics": rows}])
+    problems, _ = bench_gate.run_gate(tmp_path)
+    assert any("8.4x" in p for p in problems), problems
+
+
+def test_fast_speedup_row_passes(tmp_path):
+    rows = [["scenario_fast", 12.3, "events_per_s=81000;speedup=18.8x"]]
+    _write(tmp_path, "throughput",
+           [{"timestamp": "t", "commit": "c", "metrics": rows}])
+    problems, _ = bench_gate.run_gate(tmp_path)
+    assert problems == [], problems
+
+
+def test_unreadable_file_blocks(tmp_path):
+    (tmp_path / "BENCH_tenant.json").write_text("{not json",
+                                                encoding="utf-8")
+    problems, _ = bench_gate.run_gate(tmp_path)
+    assert any("unreadable" in p for p in problems), problems

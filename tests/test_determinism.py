@@ -9,6 +9,13 @@ the fleet refactor (and anything after it) against nondeterministic
 dispatch sneaking into the control plane: any reliance on set/dict
 iteration order, unseeded randomness or wall-clock time shows up here
 as a diff between two identically configured runs.
+
+The stochastic token engines (ISSUE 7: ``llm-heavy-tail`` /
+``retrieve-then-generate`` with quantile admission and
+cancel-on-overrun) are held to the same bar: all randomness is drawn
+in the seeded scenario build, so equal seeds reproduce the decision
+stream, reports, ``n_cancelled`` and predictor telemetry exactly on
+both token engines.
 """
 import numpy as np
 import pytest
@@ -89,6 +96,8 @@ def test_same_seed_identical_scenario_builds():
     ("fleet-flash-crowd", "fast"),
     ("mixed-zoo", "fast"), ("mixed-zoo", "exact"),
     ("mixed-zoo-rush", "fast"),
+    ("llm-heavy-tail", "fast"), ("llm-heavy-tail", "exact"),
+    ("retrieve-then-generate", "fast"),
 ])
 def test_two_consecutive_runs_identical(name, engine):
     """Every engine family is run-to-run deterministic at equal seed:
@@ -112,3 +121,27 @@ def test_token_fast_engine_decision_determinism():
     assert r1.ttft_p99 == r2.ttft_p99
     assert r1.tbt_violation_rate == r2.tbt_violation_rate
     assert s1["events"] == s2["events"]
+
+
+@pytest.mark.parametrize("engine", ["fast", "exact"])
+def test_stochastic_engine_two_run_identity(engine):
+    """ISSUE 7 satellite: the distribution-aware paths (quantile
+    admission, speculative budgets, predictor feedback, overrun
+    cancels) introduce no hidden nondeterminism — every RNG draw lives
+    in the seeded scenario build, and a fresh UncertaintyConfig is
+    built per run, so two equal-seed runs are bit-identical down to
+    the cancel counts and predictor telemetry."""
+    kw = dict(engine=engine, requests=1500, seed=SEED)
+    r1, s1 = run_scenario("llm-heavy-tail", **kw)
+    r2, s2 = run_scenario("llm-heavy-tail", **kw)
+    assert _sig(r1) == _sig(r2)
+    assert r1.n_cancelled == r2.n_cancelled > 0
+    assert r1.ttft_p99 == r2.ttft_p99
+    assert r1.tbt_violation_rate == r2.tbt_violation_rate
+    u1, u2 = s1["uncertainty"], s2["uncertainty"]
+    assert u1["overrun_cancels"] == u2["overrun_cancels"]
+    assert u1["slack_factor"] == u2["slack_factor"]
+    assert u1["calibration_error"] == u2["calibration_error"]
+    r3, _ = run_scenario("llm-heavy-tail", engine=engine,
+                         requests=1500, seed=SEED + 1)
+    assert _sig(r3) != _sig(r1), "different seeds must diverge"

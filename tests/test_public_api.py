@@ -27,6 +27,12 @@ SOLVER_EXPORTS = {
     "solve_joint_bruteforce", "solve_pruned", "solve_token_bruteforce",
 }
 
+UNCERTAINTY_EXPORTS = {
+    "EmpiricalLengths", "LengthDistribution", "LengthPredictor",
+    "LognormalLengths", "MixtureLengths", "PointMass",
+    "UncertaintyConfig",
+}
+
 
 def _public_names(mod) -> set:
     if hasattr(mod, "__all__"):
@@ -43,6 +49,11 @@ def _is_module(obj) -> bool:
 def test_serving_public_surface():
     import repro.serving as serving
     assert _public_names(serving) == SERVING_EXPORTS
+
+
+def test_uncertainty_public_surface():
+    import repro.core.uncertainty as uncertainty
+    assert _public_names(uncertainty) == UNCERTAINTY_EXPORTS
 
 
 def test_solver_public_surface():

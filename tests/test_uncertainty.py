@@ -1,0 +1,422 @@
+"""Distribution-aware admission property suite (ISSUE 7).
+
+Four families:
+
+1. **Quantile conservativeness** — ``quantile(q)`` is the smallest
+   supported value whose CDF reaches ``q``, so the mass strictly above
+   it can never exceed ``1 - q``; hypothesis sweeps distribution
+   parameters and quantiles and checks sampled coverage never exceeds
+   the promised tail beyond sampling tolerance.  The same bound holds
+   at the engine level: speculative cancel-on-overrun may cut at most
+   the promised tail fraction (plus noise) of admitted streams.
+2. **Point-mass reduction** — a ``PointMass`` (or ``sigma=0``)
+   declaration reduces every uncertainty path to the deterministic
+   engines *bit-identically*: same decision stream, same report, both
+   token engines (the contract that keeps today's scenarios exact).
+3. **Predictor monotonicity** — the coverage-calibrated
+   ``LengthPredictor``'s slack factor is monotone non-decreasing in
+   its calibration error, and the prior-blended error narrows toward
+   zero under sustained correct coverage.
+4. **Cancel-on-overrun economics** — overrun cancels free decode
+   slots: they never inflate core-seconds versus running the tail to
+   completion, and cancelled requests are excluded from every latency
+   and violation aggregate (mirroring the PR 5 cancel-storm checks).
+"""
+import dataclasses
+import math
+
+import numpy as np
+import pytest
+from _hyp import given, settings, st  # guarded hypothesis import
+
+from repro.core.uncertainty import (EmpiricalLengths, LengthDistribution,
+                                    LengthPredictor, LognormalLengths,
+                                    MixtureLengths, PointMass,
+                                    UncertaintyConfig)
+from repro.serving.scenarios import (_run_token_scenario, build_scenario,
+                                     run_scenario)
+
+C_SET = (1, 2, 4, 8, 16, 24, 32)
+B_SET = (1, 2, 4, 8, 16, 32, 64)
+
+
+# --------------------------------------------------------------------------
+# distributions
+# --------------------------------------------------------------------------
+def test_point_mass_basics():
+    d = PointMass(24)
+    assert isinstance(d, LengthDistribution)
+    assert d.is_point()
+    assert d.mean() == 24
+    for q in (0.01, 0.5, 0.99):
+        assert d.quantile(q) == 24
+    assert d.cdf(23) == 0.0 and d.cdf(24) == 1.0
+    rng = np.random.default_rng(0)
+    assert set(np.asarray(d.sample(rng, 8)).tolist()) == {24}
+
+
+def test_empirical_quantile_is_order_statistic():
+    d = EmpiricalLengths((5, 1, 9, 3, 7))
+    assert isinstance(d, LengthDistribution)
+    assert not d.is_point()
+    # sorted samples (1,3,5,7,9): quantile(q) = ceil(q*5)-th order stat
+    assert d.quantile(0.2) == 1
+    assert d.quantile(0.5) == 5
+    assert d.quantile(0.9) == 9
+    assert d.quantile(0.99) == 9
+    assert d.mean() == pytest.approx(5.0)
+
+
+def test_empirical_point_detection():
+    assert EmpiricalLengths((4, 4, 4)).is_point()
+    assert not EmpiricalLengths((4, 5)).is_point()
+
+
+def test_lognormal_quantile_inverts_cdf():
+    d = LognormalLengths(median=16, sigma=1.4, lo=1, hi=1024)
+    assert isinstance(d, LengthDistribution)
+    assert not d.is_point()
+    for q in (0.1, 0.5, 0.9, 0.99):
+        v = d.quantile(q)
+        # smallest supported value reaching q: conservativeness depends
+        # on exactly this inversion convention
+        assert d.cdf(v) >= q
+        assert v == 1 or d.cdf(v - 1) < q
+    # median lands near the declared median
+    assert abs(d.quantile(0.5) - 16) <= 1
+
+
+def test_lognormal_point_cases():
+    assert LognormalLengths(median=16, sigma=0.0).is_point()
+    assert LognormalLengths(median=16, sigma=1.0, lo=8, hi=8).is_point()
+
+
+def test_lognormal_matches_generator():
+    """The declared distribution is the generator's: sampled mass per
+    decile tracks the analytic CDF."""
+    d = LognormalLengths(median=16, sigma=1.4, lo=1, hi=1024)
+    rng = np.random.default_rng(3)
+    xs = np.asarray(d.sample(rng, 20_000))
+    assert xs.min() >= 1 and xs.max() <= 1024
+    for q in (0.25, 0.5, 0.75, 0.9):
+        v = d.quantile(q)
+        frac = float((xs <= v).mean())
+        assert abs(frac - d.cdf(v)) < 0.02, (q, v, frac, d.cdf(v))
+
+
+def test_mixture_cdf_is_weighted_sum():
+    a = LognormalLengths(median=16, sigma=0.6, lo=1, hi=128)
+    b = LognormalLengths(median=64, sigma=0.9, lo=8, hi=768)
+    m = MixtureLengths((a, b), (0.65, 0.35))
+    assert isinstance(m, LengthDistribution)
+    assert not m.is_point()
+    for x in (4, 16, 64, 256):
+        assert m.cdf(x) == pytest.approx(0.65 * a.cdf(x) + 0.35 * b.cdf(x))
+    assert m.mean() == pytest.approx(0.65 * a.mean() + 0.35 * b.mean())
+    for q in (0.1, 0.5, 0.9):
+        v = m.quantile(q)
+        assert m.cdf(v) >= q
+        assert v == 1 or m.cdf(v - 1) < q
+
+
+def test_mixture_point_detection():
+    assert MixtureLengths((PointMass(7), PointMass(7)), (0.5, 0.5)).is_point()
+    assert not MixtureLengths((PointMass(7), PointMass(9)),
+                              (0.5, 0.5)).is_point()
+
+
+def test_invalid_quantile_rejected():
+    d = LognormalLengths(median=16, sigma=1.0)
+    for q in (0.0, 1.0, -0.2, 1.5):
+        with pytest.raises(ValueError):
+            d.quantile(q)
+
+
+# --------------------------------------------------------------------------
+# 1) quantile conservativeness (hypothesis)
+# --------------------------------------------------------------------------
+def _coverage_tol(n: int, q: float) -> float:
+    return 4.0 * math.sqrt(q * (1.0 - q) / n) + 0.01
+
+
+@settings(deadline=None, max_examples=40)
+@given(median=st.floats(2.0, 80.0), sigma=st.floats(0.05, 2.0),
+       q=st.floats(0.05, 0.99), seed=st.integers(0, 2**31 - 1))
+def test_lognormal_coverage_never_exceeds_tail(median, sigma, q, seed):
+    """P(X > quantile(q)) <= 1 - q, checked on sampled mass."""
+    d = LognormalLengths(median=median, sigma=sigma, lo=1, hi=2048)
+    rng = np.random.default_rng(seed)
+    n = 4000
+    xs = np.asarray(d.sample(rng, n))
+    over = float((xs > d.quantile(q)).mean())
+    assert over <= (1.0 - q) + _coverage_tol(n, q), (over, 1 - q)
+
+
+@settings(deadline=None, max_examples=40)
+@given(seed=st.integers(0, 2**31 - 1), q=st.floats(0.05, 0.99),
+       n_samples=st.integers(10, 400))
+def test_empirical_coverage_never_exceeds_tail(seed, q, n_samples):
+    rng = np.random.default_rng(seed)
+    base = rng.integers(1, 500, n_samples)
+    d = EmpiricalLengths.from_array(base)
+    # exact bound on the defining samples — no sampling noise at all
+    over = float((base > d.quantile(q)).mean())
+    assert over <= (1.0 - q) + 1e-12, (over, 1 - q)
+
+
+# --------------------------------------------------------------------------
+# 2) point-mass bit-identity on both token engines
+# --------------------------------------------------------------------------
+def _full_sig(rep):
+    return (rep.n_requests, rep.n_violations, rep.n_cancelled,
+            rep.core_seconds, rep.tokens_served, rep.ttft_p50, rep.ttft_p99,
+            rep.tbt_violation_rate,
+            [(t, d.c, d.b, d.n, d.feasible) for t, d in rep.decisions],
+            rep.buckets)
+
+
+@pytest.mark.parametrize("scenario", ["llm-chat", "llm-mixed-len"])
+@pytest.mark.parametrize("engine", ["fast", "exact"])
+def test_point_mass_reduces_bit_identically(scenario, engine):
+    """Declaring a PointMass distribution must reproduce today's
+    deterministic run verbatim — decisions, reports, everything."""
+    batch, meta = build_scenario(scenario, requests=1200, seed=5)
+    kw = dict(policy="sponge", engine=engine, c_set=C_SET, b_set=B_SET,
+              c0=16, tick=meta["tick"], horizon=None,
+              budget_quantum=0.01, lam_quantum=0.5)
+    base, _ = _run_token_scenario(batch, dict(meta), **kw)
+    m2 = dict(meta)
+    m2["decode_dist"] = PointMass(24)
+    b2 = dataclasses.replace(batch, decode_dist=PointMass(24))
+    pm, stats = _run_token_scenario(b2, m2, **kw)
+    assert stats["uncertainty"]["point"] is True
+    assert stats["uncertainty"]["overrun_cancels"] == 0
+    assert _full_sig(base) == _full_sig(pm)
+
+
+def test_sigma_zero_lognormal_is_point_identical():
+    batch, meta = build_scenario("llm-chat", requests=800, seed=9)
+    kw = dict(policy="sponge", engine="fast", c_set=C_SET, b_set=B_SET,
+              c0=16, tick=meta["tick"], horizon=None,
+              budget_quantum=0.01, lam_quantum=0.5)
+    base, _ = _run_token_scenario(batch, dict(meta), **kw)
+    m2 = dict(meta)
+    m2["decode_dist"] = LognormalLengths(median=24, sigma=0.0)
+    pm, _ = _run_token_scenario(batch, m2, **kw)
+    assert _full_sig(base) == _full_sig(pm)
+
+
+def test_disabled_quantile_is_identical_to_no_dist():
+    """admission_quantile=0.0 turns the whole mechanism off even when
+    the scenario declares a real distribution."""
+    rep0, s0 = run_scenario("llm-heavy-tail", engine="fast",
+                            requests=1500, seed=4,
+                            admission_quantile=0.0)
+    assert "uncertainty" not in s0
+    assert rep0.n_cancelled == 0
+
+
+# --------------------------------------------------------------------------
+# 3) predictor calibration -> slack monotonicity
+# --------------------------------------------------------------------------
+def _predictor_at_overrun_frac(frac: float, tail: float = 0.1,
+                               n: int = 256) -> LengthPredictor:
+    p = LengthPredictor(window=n)
+    n_over = int(round(frac * n))
+    for i in range(n):
+        actual = 2.0 if i < n_over else 0.0   # predicted = 1.0
+        p.observe(1.0, actual, tail=tail)
+    return p
+
+
+def test_slack_monotone_in_calibration_error():
+    """More excess overruns ⇒ never less slack (the pinned property)."""
+    fracs = [0.0, 0.1, 0.15, 0.3, 0.5, 0.8, 1.0]
+    preds = [_predictor_at_overrun_frac(f) for f in fracs]
+    errs = [p.calibration_error() for p in preds]
+    slacks = [p.slack_factor() for p in preds]
+    assert errs == sorted(errs)
+    assert slacks == sorted(slacks)
+    assert slacks[0] == 1.0                   # perfect coverage: no slack
+    assert slacks[-1] > slacks[0]             # gross miscoverage widens
+
+
+def test_correct_coverage_converges_to_floor():
+    """Overrunning exactly as promised is ~zero calibration error
+    (exact up to the window's integer-count granularity)."""
+    p = _predictor_at_overrun_frac(0.1, tail=0.1)
+    assert p.calibration_error() <= 1.0 / p.window + 1e-12
+    assert p.slack_factor() == pytest.approx(1.0, abs=0.05)
+    p = _predictor_at_overrun_frac(0.25, tail=0.25, n=256)
+    assert p.calibration_error() <= 1.0 / p.window + 1e-12
+
+
+def test_prior_narrows_with_observations():
+    p = LengthPredictor(window=100, prior_error=0.05)
+    assert p.calibration_error() == pytest.approx(0.05)
+    errs = [p.calibration_error()]
+    for _ in range(100):
+        p.observe(1.0, 0.0, tail=0.1)         # perfectly covered
+        errs.append(p.calibration_error())
+    assert errs == sorted(errs, reverse=True)  # monotone narrowing
+    assert errs[-1] == pytest.approx(0.0)
+    assert p.n_observed == 100
+
+
+def test_overpessimistic_declaration_clips_at_floor():
+    """Fewer overruns than promised must not shrink below the quantile."""
+    p = _predictor_at_overrun_frac(0.0, tail=0.5)
+    assert p.calibration_error() == pytest.approx(0.0)
+    assert p.slack_factor() == 1.0
+
+
+def test_predictor_validation():
+    with pytest.raises(ValueError):
+        LengthPredictor(window=0)
+    with pytest.raises(ValueError):
+        LengthPredictor(floor=2.0, cap=1.0)
+
+
+@settings(deadline=None, max_examples=30)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_slack_monotone_under_random_histories(seed):
+    """For any observation history, a run with extra overruns stacked on
+    top never reports less slack than the original."""
+    rng = np.random.default_rng(seed)
+    n = int(rng.integers(10, 200))
+    overruns = rng.uniform(0, 1, n) < rng.uniform(0.05, 0.6)
+    a, b = LengthPredictor(window=64), LengthPredictor(window=64)
+    for o in overruns:
+        a.observe(1.0, 2.0 if o else 0.0, tail=0.1)
+        b.observe(1.0, 2.0, tail=0.1)         # b overruns every time
+    assert b.calibration_error() >= a.calibration_error() - 1e-12
+    assert b.slack_factor() >= a.slack_factor() - 1e-12
+
+
+# --------------------------------------------------------------------------
+# config plumbing
+# --------------------------------------------------------------------------
+def test_config_validation():
+    d = LognormalLengths(median=16, sigma=1.0)
+    with pytest.raises(ValueError):
+        UncertaintyConfig(dist=d, admission_quantile=1.0)
+    with pytest.raises(ValueError):
+        UncertaintyConfig(dist=d, overrun_margin=0.5)
+    with pytest.raises(ValueError):
+        UncertaintyConfig(dist=d, class_quantiles=((0.0, 0.9),))
+    with pytest.raises(ValueError):
+        UncertaintyConfig(dist=d, class_quantiles=((1.0, 1.5),))
+
+
+def test_class_quantiles_route_by_slo():
+    d = LognormalLengths(median=16, sigma=1.0)
+    cfg = UncertaintyConfig(dist=d, admission_quantile=0.9,
+                            class_quantiles=((1.0, 0.99), (2.5, 0.8)))
+    assert cfg.quantile_for(0.5) == 0.99      # tight class: first bound
+    assert cfg.quantile_for(1.0) == 0.99
+    assert cfg.quantile_for(2.0) == 0.8
+    assert cfg.quantile_for(10.0) == 0.9      # default beyond all bounds
+    assert cfg.planned_length(0.5) == d.quantile(0.99)
+
+
+def test_budget_widens_with_slack():
+    d = LognormalLengths(median=16, sigma=1.4, lo=1, hi=1024)
+    cfg = UncertaintyConfig(dist=d, admission_quantile=0.9)
+    b0 = cfg.budget_tokens(1.0)
+    assert b0 >= d.quantile(0.9)
+    for _ in range(cfg.predictor.window):      # every stream overruns
+        cfg.predictor.observe(1.0, 2.0, tail=0.1)
+    assert cfg.budget_tokens(1.0) > b0
+    assert cfg.drag_estimate() > d.quantile(0.9)
+
+
+def test_run_scenario_rejects_quantile_on_non_token():
+    with pytest.raises(ValueError):
+        run_scenario("steady", engine="fast", requests=200, seed=0,
+                     admission_quantile=0.9)
+
+
+def test_run_scenario_rejects_out_of_range_quantile():
+    with pytest.raises(ValueError):
+        run_scenario("llm-heavy-tail", engine="fast", requests=200,
+                     seed=0, admission_quantile=1.2)
+
+
+# --------------------------------------------------------------------------
+# 4) engine-level conservativeness + cancel-on-overrun economics
+# --------------------------------------------------------------------------
+@settings(deadline=None, max_examples=5)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_overrun_cancels_bounded_by_promised_tail(seed):
+    """Speculative admission may cancel at most the promised tail mass
+    (budgets sit at or above the planned quantile), any workload."""
+    rep, stats = run_scenario("llm-heavy-tail", engine="fast",
+                              requests=600, seed=seed)
+    q = stats["uncertainty"]["quantile"]
+    total = rep.n_requests + rep.n_cancelled
+    frac = rep.n_cancelled / max(total, 1)
+    assert frac <= (1.0 - q) + _coverage_tol(total, q), (frac, 1 - q)
+
+
+def test_aware_never_more_violations_than_promised():
+    rep, stats = run_scenario("llm-heavy-tail", engine="fast",
+                              requests=3000, seed=11)
+    q = stats["uncertainty"]["quantile"]
+    assert rep.violation_rate <= (1.0 - q) + _coverage_tol(
+        max(rep.n_requests, 1), q)
+
+
+@pytest.mark.parametrize("engine", ["fast", "exact"])
+def test_overrun_cancels_free_slots_not_inflate_cost(engine):
+    """The satellite regression: cancelling the tail must not cost more
+    core-seconds than running it to completion, cancels must be real,
+    and cancelled requests must stay out of the latency aggregates."""
+    common = dict(engine=engine, requests=2500, seed=13)
+    spec, s_on = run_scenario("llm-heavy-tail", **common)
+    nospec, s_off = run_scenario("llm-heavy-tail", speculative=False,
+                                 **common)
+    assert spec.n_cancelled > 0
+    assert s_on["uncertainty"]["overrun_cancels"] == spec.n_cancelled
+    assert nospec.n_cancelled == 0
+    assert s_off["uncertainty"]["overrun_cancels"] == 0
+    # same workload: every request is either served or cancelled
+    assert spec.n_requests + spec.n_cancelled == nospec.n_requests
+    # freeing the tail's slots can only cheapen the run
+    assert spec.core_seconds <= nospec.core_seconds + 1e-9
+    # cancelled requests never enter latency/violation aggregates: the
+    # served population is smaller yet every percentile stays finite
+    assert np.isfinite(spec.ttft_p99) and np.isfinite(spec.p99)
+    assert spec.n_violations <= spec.n_requests
+
+
+def test_exact_engine_overrun_cancels_route_through_monitor():
+    """Exact-engine overruns go through Monitor.observe_cancel: the λ
+    window retracts and the request is reported cancelled, mirroring
+    the PR 5 cancel machinery."""
+    rep, stats = run_scenario("llm-heavy-tail", engine="exact",
+                              requests=1200, seed=3)
+    assert rep.n_cancelled > 0
+    assert rep.n_cancelled == stats["uncertainty"]["overrun_cancels"]
+    assert rep.n_requests + rep.n_cancelled >= 1000
+
+
+def test_retrieve_then_generate_runs_with_class_quantiles():
+    """The RAG scenario carries per-class quantiles end to end."""
+    rep, stats = run_scenario("retrieve-then-generate", engine="fast",
+                              requests=2000, seed=8)
+    unc = stats["uncertainty"]
+    assert unc["speculative"] is True
+    assert rep.n_cancelled > 0
+    assert rep.n_requests > 0
+    assert np.isfinite(rep.ttft_p99)
+
+
+def test_calibration_feedback_reaches_solver():
+    """The shared config closes the loop: after a run the predictor has
+    observed streams and its slack is a finite factor >= 1."""
+    _rep, stats = run_scenario("llm-heavy-tail", engine="fast",
+                               requests=2000, seed=21)
+    unc = stats["uncertainty"]
+    assert unc["n_observed"] > 0
+    assert 1.0 <= unc["slack_factor"] <= 3.0
+    assert unc["calibration_error"] >= 0.0

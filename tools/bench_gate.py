@@ -1,0 +1,140 @@
+"""Benchmark regression gate (``make verify`` / CI).
+
+Reads the ``BENCH_*.json`` trajectory files that
+``benchmarks.run.record_bench`` appends (one JSON list of
+``{timestamp, commit, metrics}`` entries per benchmark) and fails when
+the latest entry regresses:
+
+1. **Savings trajectories** — benches whose metrics dict carries a
+   savings-style scalar (``tenant.savings``,
+   ``uncertainty.core_seconds_saved``) must not fall more than
+   ``SAVINGS_REGRESSION`` (10%) below the best value ever recorded in
+   the trajectory.
+2. **Throughput rows** — harness-recorded row lists
+   (``[name, us_per_call, derived]``) whose derived string carries a
+   ``speedup=<x>x`` figure must stay at or above ``MIN_SPEEDUP``
+   (the repo's 10x fast-vs-exact bar, mirroring
+   ``benchmarks/throughput_bench.py``).
+
+A missing trajectory file is a *notice*, not a failure — benches only
+record on machines that ran them; the gate protects whatever history
+exists.  Exit code 0 when clean; 1 with a findings list otherwise.
+
+    PYTHONPATH=src python tools/bench_gate.py
+    python tools/bench_gate.py --root /tmp/other-checkout
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import re
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+# bench name -> dotted path of the savings-style scalar in its metrics
+SAVINGS_KEYS = {
+    "tenant": "savings",
+    "uncertainty": "core_seconds_saved",
+}
+SAVINGS_REGRESSION = 0.10     # latest may trail the best by at most 10%
+MIN_SPEEDUP = 10.0            # fast-vs-exact bar (throughput_bench)
+_SPEEDUP = re.compile(r"speedup=([0-9.]+)x")
+
+
+def _dig(metrics: dict, dotted: str):
+    """Resolve a dotted key path in a metrics dict (None if absent)."""
+    cur = metrics
+    for part in dotted.split("."):
+        if not isinstance(cur, dict) or part not in cur:
+            return None
+        cur = cur[part]
+    return cur
+
+
+def _load(path: Path):
+    entries = json.loads(path.read_text(encoding="utf-8"))
+    if not isinstance(entries, list) or not entries:
+        raise ValueError(f"{path.name}: expected a non-empty JSON list")
+    return entries
+
+
+def check_savings(path: Path, key: str) -> list[str]:
+    """Latest savings must be within SAVINGS_REGRESSION of the best."""
+    entries = _load(path)
+    vals = [v for v in (_dig(e.get("metrics", {}), key) for e in entries)
+            if isinstance(v, (int, float))]
+    if not vals:
+        return [f"{path.name}: no entry carries metrics.{key}"]
+    best, latest = max(vals), vals[-1]
+    if latest < best * (1.0 - SAVINGS_REGRESSION):
+        return [f"{path.name}: metrics.{key} regressed to {latest:.4f} "
+                f"(best {best:.4f}, floor "
+                f"{best * (1.0 - SAVINGS_REGRESSION):.4f})"]
+    return []
+
+
+def check_speedups(path: Path) -> list[str]:
+    """Every speedup figure in the latest row-list entry meets the bar."""
+    entries = _load(path)
+    metrics = entries[-1].get("metrics")
+    if not isinstance(metrics, list):
+        return []                      # dict-metrics bench: no rows here
+    problems = []
+    for row in metrics:
+        derived = str(row[-1]) if isinstance(row, (list, tuple)) else ""
+        for m in _SPEEDUP.finditer(derived):
+            speedup = float(m.group(1))
+            if speedup < MIN_SPEEDUP:
+                problems.append(
+                    f"{path.name}: {row[0] if row else '?'} speedup "
+                    f"{speedup:.1f}x below the {MIN_SPEEDUP:.0f}x bar")
+    return problems
+
+
+def run_gate(root: Path) -> tuple[list[str], list[str]]:
+    """Returns ``(problems, notices)`` over every BENCH_*.json in root."""
+    problems: list[str] = []
+    notices: list[str] = []
+    seen = set()
+    for name, key in SAVINGS_KEYS.items():
+        path = root / f"BENCH_{name}.json"
+        seen.add(path.name)
+        if not path.exists():
+            notices.append(f"{path.name}: not recorded here (skipped)")
+            continue
+        try:
+            problems += check_savings(path, key)
+        except (ValueError, json.JSONDecodeError) as e:
+            problems.append(f"{path.name}: unreadable ({e})")
+    for path in sorted(root.glob("BENCH_*.json")):
+        if path.name in seen:
+            continue
+        try:
+            problems += check_speedups(path)
+        except (ValueError, json.JSONDecodeError) as e:
+            problems.append(f"{path.name}: unreadable ({e})")
+    return problems, notices
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--root", type=Path, default=REPO,
+                    help="directory holding the BENCH_*.json files")
+    args = ap.parse_args(argv)
+    problems, notices = run_gate(args.root)
+    for n in notices:
+        print(f"bench-gate: note: {n}")
+    if problems:
+        print("bench-gate: FAILED")
+        for p in problems:
+            print(f"  - {p}")
+        return 1
+    n_checked = len(list(args.root.glob("BENCH_*.json")))
+    print(f"bench-gate: OK ({n_checked} trajectories checked, "
+          f"{len(notices)} absent)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -29,7 +29,8 @@ _LINK = re.compile(r"(?<!\!)\[[^\]]+\]\(([^)\s]+)(?:\s+\"[^\"]*\")?\)")
 DOCSTRING_MODULES = ["repro.serving.api", "repro.serving.scenarios",
                      "repro.serving.fastpath", "repro.core.cost_model",
                      "repro.serving.token_backend", "repro.serving.fleet",
-                     "repro.serving.session", "repro.serving.tenancy"]
+                     "repro.serving.session", "repro.serving.tenancy",
+                     "repro.core.uncertainty"]
 
 
 def check_links() -> list[str]:
