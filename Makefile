@@ -1,9 +1,9 @@
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: verify test-fast smoke fig4 bench throughput token-bench \
-	fleet-bench session-bench tenant-bench uncertainty-bench \
-	docs-check bench-gate help
+.PHONY: verify test-fast smoke perf-smoke fig4 bench throughput \
+	token-bench fleet-bench session-bench tenant-bench \
+	uncertainty-bench docs-check bench-gate help
 
 # tier-1 verification (the ROADMAP contract) + the benchmark
 # regression gate over recorded BENCH_*.json trajectories
@@ -18,7 +18,8 @@ verify:
 test-fast:
 	$(PY) -m pytest -x -q tests/test_solver.py tests/test_solver_properties.py \
 		tests/test_queueing.py tests/test_network.py tests/test_perf_model.py \
-		tests/test_fastpath.py tests/test_scenarios.py tests/test_fleet.py \
+		tests/test_fastpath.py tests/test_vectorpath.py tests/test_scanpath.py \
+		tests/test_scenarios.py tests/test_fleet.py \
 		tests/test_determinism.py tests/test_session.py tests/test_tenancy.py \
 		tests/test_uncertainty.py tests/test_bench_gate.py \
 		tests/test_public_api.py
@@ -27,12 +28,18 @@ test-fast:
 smoke:
 	$(PY) benchmarks/smoke.py
 
+# 200k-request vectorpath-only run with an absolute events/s floor —
+# CI-sized canary against a de-vectorized hot path (docs/performance.md)
+perf-smoke:
+	$(PY) -m benchmarks.throughput_bench --smoke
+
 # the paper's headline study
 fig4:
 	$(PY) -m benchmarks.run --only fig4
 
-# 1,000,000-request scenario: fast-engine events/s vs the pre-refactor
-# loop + memoized-solver hit rate (asserts the >=10x bar)
+# 10,000,000-request scenario at a 50 ms control cadence: fast-engine
+# (>=10x bar) and vectorpath (>=100x bar) events/s vs the pre-refactor
+# loop + memoized-solver hit rate; records BENCH_throughput.json
 throughput:
 	$(PY) -m benchmarks.throughput_bench
 
@@ -82,8 +89,9 @@ help:
 	@echo "make verify      - tier-1 test suite (pytest)"
 	@echo "make test-fast   - fast tier-1 subset (control plane + solvers)"
 	@echo "make smoke       - <30s end-to-end smoke, both backends"
+	@echo "make perf-smoke  - 200k-request vectorpath canary (events/s floor)"
 	@echo "make fig4        - the paper's headline study"
-	@echo "make throughput  - 1M-request control-plane benchmark (>=10x bar)"
+	@echo "make throughput  - 10M-request control-plane benchmark (>=10x/>=100x bars)"
 	@echo "make token-bench - 100k-request autoregressive serving benchmark"
 	@echo "make fleet-bench - 500k-request fleet benchmark (>=20% savings bar)"
 	@echo "make session-bench - 100k+-request online-session benchmark"

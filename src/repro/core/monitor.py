@@ -21,6 +21,8 @@ from collections import deque
 from dataclasses import dataclass, field
 from typing import Deque, List, Optional
 
+import numpy as np
+
 from repro.core.slo import Request
 
 
@@ -55,6 +57,25 @@ def array_window_rate(arr, ai: int, w0: int, now: float,
     seen = max(now - arr[0], 0.0) if ai > 0 else 0.0
     w = min(seen / window_s, 1.0)
     return obs * w + prior_rps * (1.0 - w), w0
+
+
+def tick_window_rate(arr, w0: int, now: float, window_s: float,
+                     prior_rps: float) -> tuple[float, int]:
+    """Tick-granular :func:`array_window_rate`: derive the observed-count
+    pointer ``ai`` from the arrival column itself instead of having the
+    event loop advance a counter per arrival.
+
+    Valid whenever the caller asks for λ only at times by which every
+    arrival ``<= now`` has been observed — exactly the adaptation-tick
+    contract of every closed-world engine (the canonical event order
+    processes arrivals at time T *before* the tick at T), so
+    ``ai = searchsorted(arr, now, side="right")`` equals the count the
+    per-arrival increment would have reached, and the estimate is
+    bit-identical.  ``arr`` must be a sorted numpy array (the workload's
+    arrival column).  Returns ``(lambda, new_w0)``.
+    """
+    ai = int(np.searchsorted(arr, now, side="right"))
+    return array_window_rate(arr, ai, w0, now, window_s, prior_rps)
 
 
 def array_window_rate_cancel_aware(arr, ai: int, w0: int, now: float,

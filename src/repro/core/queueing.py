@@ -202,6 +202,54 @@ class FastEDFQueue:
         while h and live.get(h[0][1]) != h[0][0]:
             heapq.heappop(h)
 
+    def push_many(self, deadlines, idxs) -> None:
+        """Bulk push of aligned ``(deadline, index)`` columns — one
+        extend + heapify instead of n sift-ups.  Order-identical to
+        sequential :meth:`push` calls: the heap is a set ordered by
+        ``(deadline, index)`` at pop time, so how entries entered it
+        cannot change any pop sequence (``tests/test_queueing.py``
+        proves this against interleaved re-keys and cancels)."""
+        live = self._live
+        h = self._heap
+        pairs = list(zip(np.asarray(deadlines, np.float64).tolist(),
+                         np.asarray(idxs, np.int64).tolist()))
+        if not pairs:
+            return
+        for dl, i in pairs:
+            live[i] = dl
+        if not h:
+            # an already-(deadline, idx)-sorted block is a valid heap
+            if all(pairs[k] <= pairs[k + 1] for k in range(len(pairs) - 1)):
+                self._heap = pairs
+                return
+        h.extend(pairs)
+        # heapify is O(n); per-item sift-up is O(n log n) — for small
+        # tails on a big heap the pushes win, so pick by size
+        if len(pairs) * 8 >= len(h):
+            heapq.heapify(h)
+        else:
+            del h[-len(pairs):]
+            for p in pairs:
+                heapq.heappush(h, p)
+        self._fix_top()
+
+    def pop_ready(self, b: int, before: float = float("inf")) -> List[int]:
+        """Bulk EDF pop with a deadline bound: pop the ≤``b`` earliest
+        live indices whose deadline is < ``before`` (exclusive), in the
+        exact ``(deadline, index)`` order sequential pops would use.
+        ``before=inf`` makes it :meth:`pop_batch`.  Stale tuples
+        (re-keyed / cancelled entries) are discarded as they surface."""
+        pop = heapq.heappop
+        h, live = self._heap, self._live
+        out: List[int] = []
+        while h and len(out) < b and h[0][0] < before:
+            dl, idx = pop(h)
+            if live.get(idx) == dl:
+                del live[idx]
+                out.append(idx)
+        self._fix_top()
+        return out
+
     def update_deadline(self, idx: int, new_deadline: float) -> bool:
         """Re-key a queued index to ``new_deadline``; False when the
         index is not queued (dispatched / cancelled / unknown)."""

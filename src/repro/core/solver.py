@@ -63,7 +63,7 @@ extend the Algorithm-1 feasibility logic to token compositions:
 from __future__ import annotations
 
 import time
-from typing import Optional, Sequence, Union
+from typing import List, Optional, Sequence, Union
 
 import numpy as np
 
@@ -346,6 +346,35 @@ class MemoizedSolver(_QuantizedDecisionCache):
         return self._cached(
             (rem.tobytes(), lam_q, iw),
             lambda: self.table.solve(rem, lam_q, initial_wait=iw))
+
+    def solve_many(self, remaining_slos_seq, lams, initial_waits=None
+                   ) -> List[Decision]:
+        """Batch decision lookup: quantize every (λ, wait) scalar in two
+        vectorized passes and probe the cache per item, falling back to
+        the table only on misses.  Elementwise identical to calling
+        :meth:`solve` in sequence (the cache is exact per quantized key),
+        but amortizes the per-call numpy scalar overhead — the shape the
+        vectorized control plane and RL-scale rollout loops batch their
+        per-tick lookups in.
+        """
+        n = len(remaining_slos_seq)
+        lams = np.asarray(lams, np.float64)
+        iws = (np.zeros(n) if initial_waits is None
+               else np.asarray(initial_waits, np.float64))
+        lq, bq = self.lam_quantum, self.budget_quantum
+        lams_q = (np.ceil(lams / lq) * lq if lq > 0 else lams)
+        iws_q = (np.ceil(iws / bq) * bq if bq > 0 else iws)
+        out: List[Decision] = []
+        for k in range(n):
+            rem = np.sort(np.asarray(remaining_slos_seq[k],
+                                     np.float64).ravel())
+            if bq > 0:
+                rem = np.floor(rem / bq) * bq
+            lam_q, iw = float(lams_q[k]), float(iws_q[k])
+            out.append(self._cached(
+                (rem.tobytes(), lam_q, iw),
+                lambda: self.table.solve(rem, lam_q, initial_wait=iw)))
+        return out
 
 
 # ---------------------------------------------------------------------------

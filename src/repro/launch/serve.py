@@ -200,11 +200,13 @@ def main(argv=None):
         scenario_help = "registered workload scenario"
     ap.add_argument("--scenario", default=None,
                     help=f"run a registered scenario ({scenario_help})")
-    ap.add_argument("--engine", choices=("fast", "exact", "jax"),
+    ap.add_argument("--engine", choices=("fast", "exact", "vector", "jax"),
                     default="fast",
                     help="scenario mode: struct-of-arrays fast engine, "
-                         "the object-based exact loop, or (token "
-                         "scenarios) the real-kernel TokenJaxBackend")
+                         "the object-based exact loop, the batched-tick "
+                         "vectorpath (plain scenarios; docs/performance.md), "
+                         "or (token scenarios) the real-kernel "
+                         "TokenJaxBackend")
     ap.add_argument("--requests", type=int, default=None,
                     help="scenario mode: size the run by request count")
     ap.add_argument("--replicas", type=int, default=None,

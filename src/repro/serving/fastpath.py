@@ -177,6 +177,20 @@ class FastSimRunner:
         sess.submit_batch(batch)
         return sess.finish(horizon)
 
+    def vectorized(self) -> "repro.serving.vectorpath.VectorSimRunner":
+        """A fresh :class:`~repro.serving.vectorpath.VectorSimRunner`
+        with this runner's exact configuration (policy object included —
+        hand over before running either engine).  The vectorpath replays
+        closed-world workloads bit-identically to :meth:`run` at >=100x
+        the events/s; see ``docs/performance.md`` for when to use it."""
+        from repro.serving.vectorpath import VectorSimRunner
+        return VectorSimRunner(
+            self.policy, self.perf, self.c_set, self.b_set,
+            c0=self.slots[0].c, tick=self.tick,
+            resize_penalty=self.resize_penalty,
+            dispatch_margin=self.dispatch_margin,
+            prior_rps=self.prior_rps, rate_window=self.rate_window)
+
 
 class TokenFastSimRunner(FastSimRunner):
     """Continuous-batching decode streams on the struct-of-arrays engine.
@@ -255,6 +269,19 @@ class TokenFastSimRunner(FastSimRunner):
         sess = self.session()
         sess.submit_batch(batch)
         return sess.finish(horizon)
+
+    def scan_engine(self, *, chunk_steps: int = 64, decide=None
+                    ) -> "repro.serving.scanpath.ScanDecodeEngine":
+        """A :class:`~repro.serving.scanpath.ScanDecodeEngine` built
+        from this runner's cost model and current allocation — the
+        ``lax.scan``-jitted decode-stream prototype (NumPy fallback when
+        JAX is absent).  Its step semantics are a documented
+        simplification of this runner's, not a bit-identical replay;
+        the contract is JAX/NumPy backend parity."""
+        from repro.serving.scanpath import ScanDecodeEngine
+        return ScanDecodeEngine(self.cost, c0=self.slots[0].c,
+                                b0=self.b_set[-1],
+                                chunk_steps=chunk_steps, decide=decide)
 
     # -- reporting ---------------------------------------------------------
     def _token_report(self, batch: RequestBatch, first_tok: np.ndarray,

@@ -65,7 +65,7 @@ from typing import Dict, List, Optional, Sequence, Union
 import numpy as np
 
 from repro.core.cost_model import CostModel
-from repro.core.monitor import array_window_rate
+from repro.core.monitor import array_window_rate, tick_window_rate
 from repro.core.perf_model import PerfModel
 from repro.core.queueing import EDFQueue, FastEDFQueue
 from repro.core.slo import Decision
@@ -455,9 +455,19 @@ class _FleetRunnerBase:
         estimate, resolved through one helper by the single-replica fast
         path and both fleet engines so decisions cannot drift on the
         estimator."""
-        lam, self._w0 = array_window_rate(self._arr, self._ai, self._w0,
-                                          now, self.rate_window,
-                                          self.prior_rps)
+        if self._ai is None:
+            # closed-world batch replay: the observed-arrival count is
+            # derived from the sorted column at tick time (bit-identical
+            # to the per-arrival counter, since arrivals at T precede
+            # the tick at T) — no Python work per arrival
+            lam, self._w0 = tick_window_rate(self._arr, self._w0, now,
+                                             self.rate_window,
+                                             self.prior_rps)
+        else:
+            lam, self._w0 = array_window_rate(self._arr, self._ai,
+                                              self._w0, now,
+                                              self.rate_window,
+                                              self.prior_rps)
         return lam
 
     def _drive(self, now: float, lam: Optional[float] = None) -> None:
@@ -628,7 +638,7 @@ class FleetExactRunner(_FleetRunnerBase):
         pos = {r.id: i for i, r in enumerate(reqs)}
         finish = np.full(n, np.nan)
         self._arr = arr
-        self._ai = 0
+        self._ai = None              # tick-granular λ (no cancels here)
         self._w0 = 0
         lat = self._lat
         bucket_arr = self._bucket_arr
@@ -663,7 +673,6 @@ class FleetExactRunner(_FleetRunnerBase):
                 tgt.queue.push(item)
                 if track_dls:
                     insort(tgt.dls, item.deadline)
-                self._ai += 1
             elif kind == "tick":
                 self._drive(t)
                 self.core_samples.append((t, self.allocated_cores))

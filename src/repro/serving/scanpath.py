@@ -1,0 +1,248 @@
+"""`lax.scan`-jitted decode-stream engine prototype (ISSUE 8 tentpole).
+
+``TokenFastSimRunner`` steps its continuous-batching decode stream one
+engine step at a time in Python.  This module re-expresses that step
+loop as a **pure** ``(carry, xs) -> (carry, ys)`` function over
+fixed-size arrays, compiled with ``jax.lax.scan`` + ``jax.jit`` (the
+jitted pure-function idiom from SNIPPETS.md §3), with a NumPy fallback
+that runs the *same* step function in a Python loop when JAX is absent.
+
+Model (a deliberately simplified decode stream, documented rather than
+bit-matched to ``TokenFastSimRunner``):
+
+* state lives in dense request-indexed arrays over the
+  **deadline-presorted** workload — join and leave are masked writes,
+  never compaction;
+* per step, admission is EDF among arrived un-admitted requests:
+  ``rank = cumsum(eligible)`` caps joins at the free slot count, and a
+  second masked ``cumsum`` over prompt tokens enforces the prefill
+  allowance with break-at-first-overflow prefix semantics (the head
+  request always admits, so an oversized prompt runs over allowance
+  instead of stalling the stream forever);
+* step latency is the token cost model's composition surface quantized
+  to **integer microseconds** (``dt = A_p·T + A_d·S + B``); all state
+  is integer, so the JAX and NumPy backends compute *identical* values
+  — no float contraction or accumulation-order hazards — and the
+  engine asserts bit-identity is even possible (horizon < 2^31 µs);
+* decisions (new ``(c, b)``) apply at **chunk boundaries**: the host
+  runs ``K`` steps per compiled chunk, re-derives the integer cost
+  coefficients for the new ``c``, and hands the updated scalars back
+  to the same traced function (0-d arrays, so no retrace).
+
+Equivalence contract (``tests/test_scanpath.py``): decision streams,
+first-token/finish columns, per-request TBT-violation counts and
+core-seconds are identical with and without JAX present.  The JAX
+backend exists for RL-scale rollouts (ROADMAP open item 2) where
+thousands of simulated traces amortize one compile.
+"""
+from __future__ import annotations
+
+from typing import Callable, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.cost_model import Composition, TokenCostModel
+from repro.serving.workload import RequestBatch
+
+try:  # pragma: no cover - exercised via both-backend parity tests
+    import jax
+    import jax.numpy as jnp
+    from jax import lax
+    HAVE_JAX = True
+except Exception:  # pragma: no cover
+    jax = jnp = lax = None
+    HAVE_JAX = False
+
+_BIG = np.int32(2**31 - 2)
+
+
+def _coefficients(cost: TokenCostModel, c: int) -> Tuple[int, int, int]:
+    """Integer-µs step-latency coefficients at core count ``c``:
+    ``dt_us = A_p·T + A_d·S + B`` for ``T`` prefill tokens and ``S``
+    decode slots.  Derived host-side once per chunk, so both backends
+    consume identical integers."""
+    a_p = cost.gamma_p / c + cost.delta_p
+    a_d = cost.gamma_d / c + cost.delta_d
+    b = cost.eps / c + cost.eta
+    return (int(round(a_p * 1e6)), int(round(a_d * 1e6)),
+            int(round(b * 1e6)))
+
+
+def _step(xp, state, cols, knobs):
+    """One decode-stream engine step — pure, backend-agnostic (``xp``
+    is ``numpy`` or ``jax.numpy``).  All arithmetic is exact integer
+    math, so both backends produce identical values."""
+    t, adm, done, rem, first, fin, viol, nsteps = state
+    arrival, ptok, tbt = cols
+    a_p, a_d, b0, cap, allow = knobs
+    i32 = xp.int32
+    active = adm & ~done
+    s_cnt = xp.sum(active.astype(i32))
+    # EDF admission: arrays are deadline-presorted, so a masked cumsum
+    # IS the earliest-deadline-first rank
+    eligible = (arrival <= t) & ~adm
+    rank = xp.cumsum(eligible.astype(i32))
+    mask1 = eligible & (rank <= (cap - s_cnt))
+    cumtok = xp.cumsum(xp.where(mask1, ptok, xp.int32(0)))
+    # break at first overflow, but the head request always admits: an
+    # oversized prompt must run (over allowance) rather than livelock
+    # the idle-jump (next arrival already <= t, so time cannot advance)
+    head1 = xp.cumsum(mask1.astype(i32)) == 1
+    newly = mask1 & ((cumtok <= allow) | head1)
+    t_cnt = xp.sum(xp.where(newly, ptok, xp.int32(0)))
+    advance = (s_cnt + t_cnt) > 0
+    dt = a_p * t_cnt + a_d * s_cnt + b0
+    # idle: jump to the next un-admitted arrival (if any)
+    na = xp.min(xp.where(~adm, arrival, _BIG))
+    t_end = xp.where(advance, t + dt,
+                     xp.where(xp.any(~adm), xp.maximum(t, na), t))
+    adm = adm | newly
+    first = xp.where(newly, t_end, first)
+    rem = xp.where(active, rem - 1, rem)
+    just_done = active & (rem <= 0)
+    done = done | just_done
+    fin = xp.where(just_done, t_end, fin)
+    viol = viol + xp.where(active & (dt > tbt), xp.int32(1), xp.int32(0))
+    nsteps = nsteps + xp.where(advance, xp.int32(1), xp.int32(0))
+    return (t_end, adm, done, rem, first, fin, viol, nsteps)
+
+
+class ScanDecodeEngine:
+    """Chunked decode-stream simulator: ``K`` steps per compiled chunk,
+    decisions at chunk boundaries, identical results on the JAX and
+    NumPy backends.
+
+    ``decide`` (optional) is called host-side at every chunk boundary
+    with ``(t_seconds, n_waiting, n_active)`` and returns ``(c, b)``;
+    the default holds ``(c0, b0)`` static.  Use
+    :func:`make_sponge_decide` to adapt a ``SpongeScaler``."""
+
+    def __init__(self, cost: TokenCostModel, *, c0: int = 8, b0: int = 8,
+                 chunk_steps: int = 64,
+                 prefill_allowance: int = 1 << 30,
+                 decide: Optional[Callable] = None):
+        self.cost = cost
+        self.c0 = int(c0)
+        self.b0 = int(b0)
+        self.chunk_steps = int(chunk_steps)
+        self.prefill_allowance = int(prefill_allowance)
+        self.decide = decide
+        self.decisions: List[tuple] = []
+        self._jit_chunk = None
+
+    # -- backends ----------------------------------------------------------
+    def _chunk_numpy(self, state, cols, knobs):
+        for _ in range(self.chunk_steps):
+            state = _step(np, state, cols, knobs)
+        return state
+
+    def _chunk_jax(self, state, cols, knobs):
+        if self._jit_chunk is None:
+            k = self.chunk_steps
+
+            def chunk(state, cols, knobs):
+                def body(st, _):
+                    return _step(jnp, st, cols, knobs), None
+                st, _ = lax.scan(body, state, None, length=k)
+                return st
+            self._jit_chunk = jax.jit(chunk)
+        return self._jit_chunk(state, cols, knobs)
+
+    # -- entry point -------------------------------------------------------
+    def run(self, batch: RequestBatch, horizon: Optional[float] = None,
+            backend: str = "auto") -> dict:
+        """Simulate the whole workload; returns a dict with per-request
+        ``first_tok`` / ``finish`` (seconds, NaN if never served),
+        ``tbt_violations`` counts, the decision stream, ``core_seconds``
+        and ``steps``.  ``backend`` is ``auto`` (JAX if importable),
+        ``jax`` or ``numpy``."""
+        if backend == "auto":
+            backend = "jax" if HAVE_JAX else "numpy"
+        if backend == "jax" and not HAVE_JAX:
+            raise RuntimeError("jax backend requested but jax is not "
+                               "importable")
+        n = len(batch)
+        arrival = np.asarray(batch.arrival, np.float64)
+        if horizon is None:
+            horizon = (float(arrival[-1]) + 60.0) if n else 60.0
+        if horizon * 1e6 >= 2**31:
+            raise ValueError("scanpath is int32-µs; horizon must be "
+                             "< ~2147 s")
+        # deadline-presorted request space (EDF admission by cumsum)
+        dl = np.asarray(batch.deadline, np.float64)
+        order = np.argsort(dl, kind="stable")
+        inv = np.empty(n, np.int64)
+        inv[order] = np.arange(n)
+
+        def us(x):
+            return np.asarray(np.round(np.asarray(x, np.float64) * 1e6),
+                              np.int32)
+        cols = (us(arrival[order]),
+                np.maximum(np.asarray(batch.prompt_tokens,
+                                      np.int64)[order], 1).astype(np.int32),
+                np.minimum(np.asarray(batch.tbt_slo,
+                                      np.float64)[order] * 1e6,
+                           float(_BIG)).astype(np.int32))
+        rem0 = np.maximum(np.asarray(batch.decode_tokens,
+                                     np.int64)[order], 1).astype(np.int32)
+        state = (np.int32(0),
+                 np.zeros(n, bool), np.zeros(n, bool), rem0,
+                 np.full(n, -1, np.int32), np.full(n, -1, np.int32),
+                 np.zeros(n, np.int32), np.int32(0))
+        run_chunk = (self._chunk_jax if backend == "jax"
+                     else self._chunk_numpy)
+        c, b = self.c0, self.b0
+        self.decisions = []
+        horizon_us = int(horizon * 1e6)
+        core_us = 0
+        while True:
+            t_us = int(np.asarray(state[0]))
+            done = np.asarray(state[2])
+            if t_us >= horizon_us or bool(done.all()):
+                break
+            if self.decide is not None:
+                adm = np.asarray(state[1])
+                arrived = np.asarray(cols[0]) <= t_us
+                c, b = self.decide(t_us / 1e6,
+                                   int((arrived & ~adm).sum()),
+                                   int((adm & ~done).sum()))
+            self.decisions.append((t_us / 1e6, int(c), int(b)))
+            a_p, a_d, b_us = _coefficients(self.cost, c)
+            knobs = (np.int32(a_p), np.int32(a_d), np.int32(b_us),
+                     np.int32(b), np.int32(self.prefill_allowance))
+            state = run_chunk(state, cols, knobs)
+            t_end = min(int(np.asarray(state[0])), horizon_us)
+            core_us += c * max(t_end - t_us, 0)
+        first = np.asarray(state[4], np.int64)[inv]
+        fin = np.asarray(state[5], np.int64)[inv]
+        viol = np.asarray(state[6], np.int64)[inv]
+        to_s = lambda col: np.where(col >= 0, col / 1e6, np.nan)
+        return {"backend": backend,
+                "first_tok": to_s(first), "finish": to_s(fin),
+                "tbt_violations": viol,
+                "decisions": list(self.decisions),
+                "core_seconds": core_us / 1e6,
+                "steps": int(np.asarray(state[7])),
+                "n_served": int((fin >= 0).sum())}
+
+
+def make_sponge_decide(scaler, cost: TokenCostModel,
+                       c_set, b_set) -> Callable:
+    """Adapt a queue-pressure heuristic over the solver's ``(c, b)``
+    grid for chunk-boundary decisions: pick the smallest core count
+    whose projected step latency clears the busiest slot cap.  (A
+    deliberately simple stand-in for the IP solver — chunk boundaries
+    are coarse, and the prototype's contract is backend parity, not
+    solver fidelity.)"""
+    c_set = sorted(c_set)
+    b_set = sorted(b_set)
+
+    def decide(t_s: float, n_waiting: int, n_active: int):
+        want = n_waiting + n_active
+        b = next((bb for bb in b_set if bb >= want), b_set[-1])
+        for c in c_set:
+            if cost.step_latency(c, Composition(0, b)) <= getattr(
+                    scaler, "target_step_latency", 0.1):
+                return c, b
+        return c_set[-1], b
+    return decide

@@ -833,12 +833,18 @@ def run_scenario(name: str, *, policy: str = "sponge",
     import time
     from repro.serving.api import make_policy, make_sim_server
     from repro.serving.fastpath import FastSimRunner
-    assert engine in ("fast", "exact"), engine
+    assert engine in ("fast", "exact", "vector"), engine
     perf = perf if perf is not None else yolov5s_like()
     batch, meta = build_scenario(name, duration=duration, rps=rps,
                                  seed=seed, requests=requests)
     # a scenario with sub-second SLOs recommends its adaptation cadence
     tick = tick if tick is not None else meta.get("tick", 1.0)
+    if engine == "vector" and (meta.get("token") or meta.get("tenants")
+                               or meta.get("fleet")
+                               or meta.get("session_events") is not None):
+        raise ValueError(
+            "engine='vector' replays plain single-instance scenarios "
+            f"only ({name!r} needs the fast or exact engine)")
     if admission_quantile is not None and not meta.get("token"):
         raise ValueError(
             "admission_quantile applies to token scenarios only "
@@ -877,7 +883,7 @@ def run_scenario(name: str, *, policy: str = "sponge",
                                      mid_flight=mid_flight, **policy_kw)
     common = dict(slo=meta["slo"], expected_rps=meta["expected_rps"],
                   adaptation_interval=tick)
-    if engine == "fast":
+    if engine in ("fast", "vector"):
         if policy.startswith("sponge-pred"):
             raise ValueError("sponge-pred inspects Request objects; "
                              "run it with engine='exact'")
@@ -886,11 +892,16 @@ def run_scenario(name: str, *, policy: str = "sponge",
             kw.update(solver="memo", budget_quantum=budget_quantum,
                       lam_quantum=lam_quantum)
         pol = make_policy(policy, perf, c_set=c_set, b_set=b_set, **kw)
-        runner = FastSimRunner(pol, perf, c_set, b_set, c0=c0, tick=tick,
-                               prior_rps=meta["expected_rps"])
+        if engine == "vector":
+            from repro.serving.vectorpath import VectorSimRunner
+            cls = VectorSimRunner
+        else:
+            cls = FastSimRunner
+        runner = cls(pol, perf, c_set, b_set, c0=c0, tick=tick,
+                     prior_rps=meta["expected_rps"])
         t0 = time.perf_counter()
         report = runner.run(batch, horizon)
-        stats = {"engine": "fast", "events": runner.events_processed,
+        stats = {"engine": engine, "events": runner.events_processed,
                  "run_wall_s": time.perf_counter() - t0, "meta": meta}
         scaler = getattr(pol, "scaler", None)
         if scaler is not None and hasattr(scaler, "solver_stats"):

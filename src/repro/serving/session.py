@@ -62,7 +62,8 @@ import numpy as np
 
 from repro.core.cost_model import Composition
 from repro.core.monitor import (array_window_rate,
-                                array_window_rate_cancel_aware)
+                                array_window_rate_cancel_aware,
+                                tick_window_rate)
 from repro.core.slo import Request
 from repro.serving.api import RunReport, build_array_report
 from repro.serving.fleet import normalize_fleet_events, route_request
@@ -428,15 +429,32 @@ class _ColumnSession:
         self._w0 = 0
         self._cxl: List[float] = []
         self._cw0 = 0
+        # batch-replay tick-granular λ: when the workload is one adopted
+        # arrival-sorted column and nothing gets cancelled, the λ window
+        # reads the column directly at tick time (tick_window_rate) and
+        # the event loop skips the per-arrival append entirely
+        self._tick_lam = False
         self._next_tick = 0.0
 
     def _ensure_lists(self) -> None:
         """Flip array-backed columns to appendable lists (one-time cost,
         only paid when batch submits are mixed with incremental ones)."""
+        self._tick_off()
         if self._cols_are_arrays:
             for name in self._COLUMNS:
                 setattr(self, name, getattr(self, name).tolist())
             self._cols_are_arrays = False
+
+    def _tick_off(self) -> None:
+        """Leave tick-granular λ mode: materialize the processed-arrival
+        list the incremental estimator expects.  In batch-replay mode
+        arrivals pop strictly in column order, so the processed set is
+        exactly the first ``n - len(pending)`` rows; the window pointer
+        ``_w0`` transfers unchanged."""
+        if self._tick_lam:
+            self._tick_lam = False
+            k = self._n - len(self._pending)
+            self._arr = np.asarray(self._arrival[:k], np.float64).tolist()
 
     # -- submission --------------------------------------------------------
     def submit(self, req: Optional[Request] = None, *,
@@ -501,6 +519,7 @@ class _ColumnSession:
             self._tbt = np.array(batch.tbt_slo, np.float64)
             self._finish = np.full(n, np.nan)
             self._cols_are_arrays = True
+            self._tick_lam = self._TICK_LAM
         else:
             self._ensure_lists()
             self._send.extend(batch.send.tolist())
@@ -563,6 +582,7 @@ class _ColumnSession:
         unknown handles refused."""
         if not 0 <= handle < self._n:
             return False
+        self._tick_off()     # cancels break the derived-count invariant
         st = self._state[handle]
         if st == PENDING:
             self._state[handle] = CANCELLED
@@ -601,8 +621,16 @@ class _ColumnSession:
                 if fin == fin else None}
 
     # -- λ -----------------------------------------------------------------
+    # subclasses whose event loop mutates λ state mid-flight (the token
+    # session retracts overrun-cancelled streams in-loop) opt out
+    _TICK_LAM = True
+
     def _rate(self, now: float) -> float:
         r = self.runner
+        if self._tick_lam:
+            lam, self._w0 = tick_window_rate(
+                self._arrival, self._w0, now, r.rate_window, r.prior_rps)
+            return lam
         if self._cxl:
             lam, self._w0, self._cw0 = array_window_rate_cancel_aware(
                 self._arr, len(self._arr), self._w0, now, r.rate_window,
@@ -677,7 +705,9 @@ class FastSession(_ColumnSession):
         events = self._events
         queue = r.queue
         dl = self._dl
-        arr = self._arr
+        # tick-granular λ mode derives the window count from the arrival
+        # column itself — no per-arrival Python append
+        arr = None if self._tick_lam else self._arr
         state = self._state
         tick = r.tick
         policy = r.policy
@@ -704,7 +734,8 @@ class FastSession(_ColumnSession):
                     continue
                 state[h] = QUEUED
                 queue.push(dl[h], h)
-                arr.append(et)
+                if arr is not None:
+                    arr.append(et)
             elif kind == 1:
                 self._next_tick += tick
                 self.now = et
@@ -784,6 +815,11 @@ class TokenFastSession(_ColumnSession):
     """Online session over the continuous-batching
     :class:`TokenFastSimRunner`.
 
+    Opts out of tick-granular λ (``_TICK_LAM = False``): speculative
+    admission cancels overrun streams *inside* the step loop, which
+    retracts arrivals from the λ window mid-flight — the derived-count
+    shortcut would miss those retractions.
+
     Renegotiation applies to the *TTFT* deadline while a request waits
     for admission; once its prompt joins a decode step the stream is
     committed (``update_slo`` / ``cancel`` return False — exactly the
@@ -805,6 +841,8 @@ class TokenFastSession(_ColumnSession):
     With no config (or a point mass) none of this code runs and the
     deterministic loop is bit-identical to before.
     """
+
+    _TICK_LAM = False
 
     def __init__(self, runner):
         super().__init__(runner)
@@ -1120,7 +1158,7 @@ class FleetSession(_ColumnSession):
         pend = self._pending
         events = self._events
         dl = self._dl
-        arr = self._arr
+        arr = None if self._tick_lam else self._arr
         state = self._state
         fev = self._fev
         tick = r.tick
@@ -1156,7 +1194,8 @@ class FleetSession(_ColumnSession):
                 tgt.queue.push(dl[h], h)
                 if track_dls:
                     insort(tgt.dls, dl[h])
-                arr.append(et)
+                if arr is not None:
+                    arr.append(et)
             elif kind == 1:                      # adaptation tick
                 self._next_tick += tick
                 self._drive(et)

@@ -496,7 +496,9 @@ class TenantFastRunner(_TenantRunnerBase):
                for s in self.specs]
         finishes = [np.full(a.size, np.nan) for a in arrs]
         for sub, arr in zip(subs, arrs):
-            sub._arr, sub._ai, sub._w0 = arr, 0, 0
+            # tick-granular λ: the sorted arrival column replaces the
+            # per-arrival counter (closed world, no cancels)
+            sub._arr, sub._ai, sub._w0 = arr, None, 0
         if horizon is None:
             horizon = self._default_horizon()
         ptrs = [0] * K
@@ -536,7 +538,6 @@ class TenantFastRunner(_TenantRunnerBase):
                 tgt.queue.push(d, h)
                 if sub._track_dls:
                     insort(tgt.dls, d)
-                sub._ai += 1
             elif kind == 1:                      # pool tick
                 next_tick += tick
                 self._pool_tick(et)
@@ -622,7 +623,7 @@ class TenantExactRunner(_TenantRunnerBase):
                 for s in self.specs]
         finishes = [np.full(a.size, np.nan) for a in arrs]
         for sub, arr in zip(subs, arrs):
-            sub._arr, sub._ai, sub._w0 = arr, 0, 0
+            sub._arr, sub._ai, sub._w0 = arr, None, 0
         if horizon is None:
             horizon = self._default_horizon()
         reqs = [s.batch.to_requests() for s in self.specs]
@@ -655,7 +656,6 @@ class TenantExactRunner(_TenantRunnerBase):
                 tgt.queue.push(req)
                 if sub._track_dls:
                     insort(tgt.dls, req.deadline)
-                sub._ai += 1
             elif kind == 1:                      # pool tick
                 self._pool_tick(t)
             # else kind == 2: "check" — fall through to the dispatch scan

@@ -1,9 +1,10 @@
 """Determinism regression (ISSUE 4 satellite).
 
 Same seed + same scenario must give bit-identical decision streams and
-bucket logs (a) across the three fixed-work engines — the verbatim
-pre-refactor ``ReferenceRunner``, the streamed ``ScenarioRunner`` and
-the struct-of-arrays ``FastSimRunner`` — and (b) across two consecutive
+bucket logs (a) across the four fixed-work engines — the verbatim
+pre-refactor ``ReferenceRunner``, the streamed ``ScenarioRunner``, the
+struct-of-arrays ``FastSimRunner`` and the batched-tick
+``VectorSimRunner`` (ISSUE 8) — and (b) across two consecutive
 runs of every engine family (fixed-work, token, fleet).  This guards
 the fleet refactor (and anything after it) against nondeterministic
 dispatch sneaking into the control plane: any reliance on set/dict
@@ -28,6 +29,7 @@ from repro.serving.api import ScenarioRunner, SimBackend
 from repro.serving.fastpath import FastSimRunner
 from repro.serving.reference import ReferenceRunner
 from repro.serving.scenarios import build_scenario, run_scenario
+from repro.serving.vectorpath import VectorSimRunner
 
 PERF = yolov5s_like()
 SEED = 11
@@ -44,7 +46,7 @@ def _sig(report):
 
 
 def _fixed_engines(batch, meta):
-    """Run the same scenario workload through all three fixed-work
+    """Run the same scenario workload through all four fixed-work
     engines with identically configured sponge policies."""
     tick = meta.get("tick", 1.0)
     prior = meta["expected_rps"]
@@ -65,15 +67,20 @@ def _fixed_engines(batch, meta):
     fast = FastSimRunner(policy(), PERF, DEFAULT_C, DEFAULT_B, c0=16,
                          tick=tick, prior_rps=prior)
     r_fast = fast.run(batch)
-    return r_ref, r_new, r_fast
+
+    vec = VectorSimRunner(policy(), PERF, DEFAULT_C, DEFAULT_B, c0=16,
+                          tick=tick, prior_rps=prior)
+    r_vec = vec.run(batch)
+    return r_ref, r_new, r_fast, r_vec
 
 
 @pytest.mark.parametrize("name", ["steady", "mixed-slo"])
 def test_same_seed_identical_across_engines(name):
-    """reference == streamed == fastpath on the same scenario build."""
+    """reference == streamed == fastpath == vectorpath on the same
+    scenario build."""
     batch, meta = build_scenario(name, duration=60, seed=SEED)
-    r_ref, r_new, r_fast = _fixed_engines(batch, meta)
-    assert _sig(r_ref) == _sig(r_new) == _sig(r_fast)
+    r_ref, r_new, r_fast, r_vec = _fixed_engines(batch, meta)
+    assert _sig(r_ref) == _sig(r_new) == _sig(r_fast) == _sig(r_vec)
 
 
 def test_same_seed_identical_scenario_builds():
@@ -89,8 +96,8 @@ def test_same_seed_identical_scenario_builds():
 
 
 @pytest.mark.parametrize("name,engine", [
-    ("steady", "fast"), ("steady", "exact"),
-    ("mixed-slo", "fast"),
+    ("steady", "fast"), ("steady", "exact"), ("steady", "vector"),
+    ("mixed-slo", "fast"), ("mixed-slo", "vector"),
     ("llm-chat", "fast"), ("llm-chat", "exact"),
     ("replica-failure", "fast"), ("replica-failure", "exact"),
     ("fleet-flash-crowd", "fast"),

@@ -246,3 +246,86 @@ def test_object_queue_drop_expired_with_stale_entries():
     dropped = oq.q.drop_expired(now=2.0)
     assert sorted(r.deadline for r in dropped) == [0.5, 1.0]
     assert len(oq) == 1 and oq.head_deadline() == 9.0
+
+
+# --------------------------------------------------------------------------
+# bulk push_many / pop_ready (ISSUE 8 satellite): the vectorpath's batch
+# ingestion and windowed dispatch primitives must be order-identical to
+# sequential push / pop_batch calls, across every internal path (sorted-
+# block adoption, extend+heapify, per-item sift) and against interleaved
+# re-keys and cancels.
+# --------------------------------------------------------------------------
+bulk_dls = st.lists(st.floats(0.0, 100.0), min_size=0, max_size=60)
+
+
+def _drain(q):
+    out = []
+    while len(q):
+        out.extend(q.pop_batch(1))
+    return out
+
+
+@given(bulk_dls, st.integers(1, 5))
+@settings(deadline=None)
+def test_push_many_order_identical_to_sequential(dls, n_chunks):
+    """Chunked push_many (hitting the sorted-block, heapify and sift
+    paths depending on chunk shape) pops in exactly the sequential
+    push order."""
+    seq, bulk = FastEDFQueue(), FastEDFQueue()
+    for i, dl in enumerate(dls):
+        seq.push(dl, i)
+    idxs = np.arange(len(dls), dtype=np.int64)
+    arr = np.asarray(dls, np.float64)
+    for part_d, part_i in zip(np.array_split(arr, n_chunks),
+                              np.array_split(idxs, n_chunks)):
+        bulk.push_many(part_d, part_i)
+    assert len(bulk) == len(seq)
+    assert _drain(bulk) == _drain(seq)
+
+
+def test_push_many_sorted_block_fast_path():
+    """An already-sorted block into an empty queue IS the heap."""
+    q = FastEDFQueue()
+    q.push_many([1.0, 2.0, 3.0, 3.0], [0, 1, 2, 3])
+    assert q.peek_deadline() == 1.0
+    assert _drain(q) == [0, 1, 2, 3]
+
+
+@given(bulk_dls, st.integers(1, 8), st.floats(0.0, 120.0))
+@settings(deadline=None)
+def test_pop_ready_matches_model(dls, b, before):
+    """pop_ready(b, before) = the ≤b earliest (deadline, idx) pairs
+    with deadline strictly below the bound, removed from the queue."""
+    q = FastEDFQueue()
+    q.push_many(np.asarray(dls, np.float64),
+                np.arange(len(dls), dtype=np.int64))
+    model = sorted((dl, i) for i, dl in enumerate(dls))
+    want = [i for dl, i in model if dl < before][:b]
+    got = q.pop_ready(b, before=before)
+    assert got == want
+    assert len(q) == len(dls) - len(want)
+    assert _drain(q) == [i for dl, i in model if (dl, i) not in
+                         {(dls[j], j) for j in want}]
+
+
+def test_pop_ready_exclusive_bound_and_empty():
+    q = FastEDFQueue()
+    assert q.pop_ready(4) == []
+    q.push_many([2.0, 1.0, 3.0], [0, 1, 2])
+    assert q.pop_ready(5, before=1.0) == []      # strict: dl < before
+    assert q.pop_ready(5, before=2.0) == [1]
+    assert q.pop_ready(5) == [0, 2]              # before=inf == pop_batch
+
+
+def test_bulk_ops_with_renegotiation_and_cancels():
+    """Stale tuples from update_deadline/cancel between bulk calls are
+    discarded, never served; re-keyed entries pop at their new rank."""
+    q = FastEDFQueue()
+    q.push_many([5.0, 6.0, 7.0, 8.0], [0, 1, 2, 3])
+    assert q.update_deadline(3, 1.0)             # tighten: jumps the line
+    assert q.cancel(1)
+    q.push_many([6.5, 0.5], [4, 5])              # second block, non-empty heap
+    assert q.pop_ready(2, before=5.0) == [5, 3]
+    assert q.update_deadline(0, 9.0)             # relax behind idx 2
+    assert _drain(q) == [4, 2, 0]
+    assert q.pop_ready(3) == []

@@ -1,0 +1,142 @@
+"""``lax.scan``-jitted decode-stream prototype (ISSUE 8 satellite).
+
+The scanpath contract is **backend parity**, not replay fidelity: the
+pure integer-µs step function must produce bit-identical decision
+streams, first-token / finish columns, per-request TBT-violation counts,
+core-seconds and step counts whether it runs under ``jax.lax.scan`` +
+``jax.jit`` or the NumPy fallback loop.  JAX-side tests skip with a
+reason when JAX is not importable — the NumPy fallback is always
+exercised.
+"""
+import numpy as np
+import pytest
+
+from repro.core.cost_model import TokenCostModel
+from repro.core.scaler import SpongeScaler
+from repro.core.solver import DEFAULT_B, DEFAULT_C
+from repro.serving.scanpath import (HAVE_JAX, ScanDecodeEngine,
+                                    make_sponge_decide)
+from repro.serving.scenarios import build_scenario
+
+needs_jax = pytest.mark.skipif(
+    not HAVE_JAX, reason="jax not importable: numpy fallback is the "
+    "only backend here; parity needs both")
+
+
+def _workload(duration=40, seed=3):
+    batch, meta = build_scenario("llm-chat", duration=duration, seed=seed)
+    return batch, meta["cost"]
+
+
+def _run_pair(engine_kw, batch, cost, horizon=None):
+    a = ScanDecodeEngine(cost, **engine_kw).run(batch, horizon=horizon,
+                                                backend="jax")
+    b = ScanDecodeEngine(cost, **engine_kw).run(batch, horizon=horizon,
+                                                backend="numpy")
+    return a, b
+
+
+def _assert_parity(a, b):
+    assert a["backend"] == "jax" and b["backend"] == "numpy"
+    assert a["decisions"] == b["decisions"]
+    assert np.array_equal(a["first_tok"], b["first_tok"], equal_nan=True)
+    assert np.array_equal(a["finish"], b["finish"], equal_nan=True)
+    assert np.array_equal(a["tbt_violations"], b["tbt_violations"])
+    assert a["core_seconds"] == b["core_seconds"]
+    assert a["steps"] == b["steps"]
+    assert a["n_served"] == b["n_served"]
+
+
+@needs_jax
+@pytest.mark.parametrize("chunk", [16, 64])
+def test_jax_numpy_parity_static(chunk):
+    """Static (c0, b0) knobs, two chunk sizes."""
+    batch, cost = _workload()
+    a, b = _run_pair(dict(c0=8, b0=8, chunk_steps=chunk), batch, cost)
+    _assert_parity(a, b)
+    assert a["n_served"] > 0 and a["steps"] > 0
+
+
+@needs_jax
+def test_jax_numpy_parity_dynamic_decide():
+    """Chunk-boundary (c, b) decisions via make_sponge_decide: the
+    knobs change across chunks (0-d scalars, no retrace) and both
+    backends still agree bit-for-bit."""
+    batch, cost = _workload(duration=30, seed=7)
+    sc = SpongeScaler(cost)
+    kw = dict(c0=4, b0=4, chunk_steps=32,
+              decide=make_sponge_decide(sc, cost, DEFAULT_C, DEFAULT_B))
+    a, b = _run_pair(kw, batch, cost)
+    _assert_parity(a, b)
+    assert len({(c, bb) for _, c, bb in a["decisions"]}) > 1, \
+        "decide hook never changed the knobs — test is vacuous"
+
+
+@needs_jax
+def test_jax_numpy_parity_prefill_allowance():
+    """The break-at-first-overflow prefill-prefix semantics must match
+    across backends when the allowance actually bites."""
+    batch, cost = _workload(duration=25, seed=11)
+    allow = int(np.asarray(batch.prompt_tokens).mean() * 2)
+    a, b = _run_pair(dict(c0=8, b0=16, chunk_steps=32,
+                          prefill_allowance=allow), batch, cost)
+    _assert_parity(a, b)
+
+
+def test_numpy_backend_standalone():
+    """The fallback serves the workload end to end without JAX."""
+    batch, cost = _workload(duration=30, seed=5)
+    out = ScanDecodeEngine(cost, c0=8, b0=8).run(batch, backend="numpy")
+    assert out["backend"] == "numpy"
+    assert out["n_served"] == int(np.isfinite(out["finish"]).sum())
+    assert out["n_served"] > 0
+    served = np.isfinite(out["finish"])
+    assert np.all(out["first_tok"][served] <= out["finish"][served])
+    assert np.all(out["first_tok"][served]
+                  >= np.asarray(batch.arrival)[served])
+    assert out["core_seconds"] > 0.0
+
+
+def test_numpy_two_runs_identical():
+    batch, cost = _workload(duration=30, seed=9)
+    r1 = ScanDecodeEngine(cost, c0=8, b0=8).run(batch, backend="numpy")
+    r2 = ScanDecodeEngine(cost, c0=8, b0=8).run(batch, backend="numpy")
+    _assert_parity({**r1, "backend": "jax"}, r2)
+
+
+def test_auto_backend_resolves():
+    batch, cost = _workload(duration=15, seed=2)
+    out = ScanDecodeEngine(cost, c0=8, b0=8).run(batch, backend="auto")
+    assert out["backend"] == ("jax" if HAVE_JAX else "numpy")
+
+
+def test_horizon_overflow_rejected():
+    """int32-µs time: horizons at/over 2^31 µs must refuse, not wrap."""
+    batch, cost = _workload(duration=10, seed=1)
+    eng = ScanDecodeEngine(cost, c0=8, b0=8)
+    with pytest.raises(ValueError, match="2147"):
+        eng.run(batch, horizon=2200.0)
+
+
+def test_jax_backend_refused_when_absent():
+    if HAVE_JAX:
+        pytest.skip("jax importable here; refusal path needs it absent")
+    batch, cost = _workload(duration=10, seed=1)
+    with pytest.raises(RuntimeError, match="jax"):
+        ScanDecodeEngine(cost, c0=8, b0=8).run(batch, backend="jax")
+
+
+def test_scan_engine_adapter():
+    """TokenFastSimRunner.scan_engine() hands its cost model and current
+    allocation to a ScanDecodeEngine."""
+    from repro.core.baselines import SpongePolicy
+    from repro.serving.fastpath import TokenFastSimRunner
+
+    batch, cost = _workload(duration=20, seed=4)
+    runner = TokenFastSimRunner(SpongePolicy(SpongeScaler(cost)), cost,
+                                DEFAULT_C, DEFAULT_B, c0=8)
+    eng = runner.scan_engine(chunk_steps=32)
+    assert eng.cost is cost
+    assert eng.c0 == 8 and eng.chunk_steps == 32
+    out = eng.run(batch, backend="numpy")
+    assert out["n_served"] > 0

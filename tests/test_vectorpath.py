@@ -1,0 +1,219 @@
+"""Vectorized batched-tick control plane (ISSUE 8 tentpole).
+
+``VectorSimRunner`` must replay the ``FastSimRunner`` event stream
+**bit-identically** — decision stream, violation buckets, report floats
+and core-seconds — on every registered closed-world scenario, for every
+policy family it accepts (memoized sponge with the batched
+decision-lookup fast path, exact sponge, static), and at sub-second
+adaptation ticks (the regime the vectorpath exists for).  The satellite
+helpers it leans on are held to the same bar: the tick-granular λ
+estimator against the per-arrival ``RateEstimator``, and the memo
+solver's batch ``solve_many`` against sequential ``solve`` calls.
+"""
+import numpy as np
+import pytest
+
+from repro.core.baselines import SpongePolicy, StaticPolicy
+from repro.core.monitor import RateEstimator, tick_window_rate
+from repro.core.perf_model import yolov5s_like
+from repro.core.scaler import SpongeScaler
+from repro.core.slo import Decision
+from repro.core.solver import DEFAULT_B, DEFAULT_C, MemoizedSolver
+from repro.serving.fastpath import FastSimRunner
+from repro.serving.scenarios import build_scenario, run_scenario
+from repro.serving.vectorpath import VectorSimRunner
+from repro.serving.workload import RequestBatch
+
+PERF = yolov5s_like()
+PLAIN = ["steady", "diurnal", "flash-crowd", "network-replay", "mixed-slo"]
+
+
+def _policy(kind, tick):
+    if kind == "memo":
+        return SpongePolicy(SpongeScaler(
+            PERF, solver="memo", adaptation_interval=tick,
+            budget_quantum=0.01, lam_quantum=0.5))
+    if kind == "exact":
+        return SpongePolicy(SpongeScaler(PERF, adaptation_interval=tick))
+    return StaticPolicy(PERF, cores=16, b_set=DEFAULT_B, interval=tick)
+
+
+def _runner(cls, kind, tick, prior):
+    return cls(_policy(kind, tick), PERF, DEFAULT_C, DEFAULT_B, c0=16,
+               tick=tick, prior_rps=prior)
+
+
+def _sig(rep, runner):
+    """Everything the equivalence contract covers, floats unrounded."""
+    decs = [(t, d.c, d.b, getattr(d, "n", 1), d.feasible)
+            for t, d in (rep.decisions or [])]
+    nan = float("nan")
+
+    def f(x):
+        return "nan" if isinstance(x, float) and np.isnan(x) else x
+    return (decs, runner.bucket_log, runner.core_samples,
+            rep.core_seconds, rep.n_violations, rep.violation_rate,
+            rep.avg_cores, f(rep.p50), f(rep.p99), rep.buckets)
+
+
+def _both(batch, meta, kind, tick):
+    prior = meta.get("rps") or meta.get("expected_rps") or 20.0
+    fast = _runner(FastSimRunner, kind, tick, prior)
+    vec = _runner(VectorSimRunner, kind, tick, prior)
+    return (_sig(fast.run(batch), fast), _sig(vec.run(batch), vec))
+
+
+@pytest.mark.parametrize("name", PLAIN)
+@pytest.mark.parametrize("kind", ["memo", "exact", "static"])
+def test_bit_identical_to_fastpath(name, kind):
+    """The headline contract on every registered plain scenario."""
+    batch, meta = build_scenario(name, duration=60, seed=11)
+    f, v = _both(batch, meta, kind, meta.get("tick") or 1.0)
+    assert f == v
+
+
+@pytest.mark.parametrize("tick", [0.25, 0.1, 0.05])
+def test_bit_identical_at_subsecond_ticks(tick):
+    """The benchmark regime: sub-second adaptation cadence, memoized
+    solver, batched decision lookups on the hot path."""
+    batch, meta = build_scenario("steady", duration=45, seed=7)
+    f, v = _both(batch, meta, "memo", tick)
+    assert f == v
+
+
+def test_bit_identical_nonmono_deadline_merge():
+    """mixed-slo interleaves deadlines (the argsort + searchsorted +
+    insert merge path, not the append path) — order must still match
+    the heap's (deadline, handle) pop order exactly."""
+    batch, meta = build_scenario("mixed-slo", duration=90, seed=3)
+    assert np.any(np.diff(np.asarray(batch.deadline)) < 0), \
+        "scenario must exercise the non-monotone merge"
+    f, v = _both(batch, meta, "memo", 0.25)
+    assert f == v
+
+
+def test_two_runs_identical_and_engine_routing():
+    """engine='vector' routes through run_scenario and is run-to-run
+    deterministic; its report matches engine='fast' bit-for-bit."""
+    kw = dict(duration=45, seed=11)
+    r1, s1 = run_scenario("steady", engine="vector", **kw)
+    r2, s2 = run_scenario("steady", engine="vector", **kw)
+    rf, _ = run_scenario("steady", engine="fast", **kw)
+    assert s1["engine"] == "vector"
+    for a, b in ((r1, r2), (r1, rf)):
+        assert [(t, d.c, d.b) for t, d in a.decisions] == \
+            [(t, d.c, d.b) for t, d in b.decisions]
+        assert (a.buckets, a.n_violations, a.core_seconds) == \
+            (b.buckets, b.n_violations, b.core_seconds)
+
+
+@pytest.mark.parametrize("name", ["llm-chat", "fleet-flash-crowd",
+                                  "mixed-zoo"])
+def test_vector_engine_rejects_non_plain_scenarios(name):
+    """Token, fleet and multi-tenant scenarios need their own engines —
+    engine='vector' must refuse loudly, not silently misreplay."""
+    with pytest.raises(ValueError, match="vector"):
+        run_scenario(name, engine="vector", duration=30, seed=1)
+
+
+def test_vectorized_adapter_matches():
+    """FastSimRunner.vectorized() hands its exact configuration (policy
+    object included, so hand over *before* running either engine) to a
+    fresh vector runner that replays identically to a fast run."""
+    batch, meta = build_scenario("steady", duration=45, seed=5)
+    donor = _runner(FastSimRunner, "memo", 1.0, meta["rps"])
+    vec = donor.vectorized()
+    assert (vec.tick, vec.c_set, vec.b_set) == \
+        (donor.tick, donor.c_set, donor.b_set)
+    fast = _runner(FastSimRunner, "memo", 1.0, meta["rps"])
+    f = fast.run(batch)
+    v = vec.run(batch)
+    assert _sig(f, fast) == _sig(v, vec)
+
+
+def test_explicit_horizon_and_empty_batch():
+    batch, meta = build_scenario("steady", duration=40, seed=2)
+    fast = _runner(FastSimRunner, "memo", 1.0, meta["rps"])
+    vec = _runner(VectorSimRunner, "memo", 1.0, meta["rps"])
+    assert _sig(fast.run(batch, horizon=25.0), fast) == \
+        _sig(vec.run(batch, horizon=25.0), vec)
+    empty = batch.head(0)
+    rep = _runner(VectorSimRunner, "memo", 1.0, 20.0).run(empty)
+    assert rep.n_requests == 0 and rep.n_violations == 0
+
+
+def test_horizontal_policy_rejected():
+    """Decision.n > 1 (FA2-style horizontal targets) is out of scope."""
+    class Horizontal:
+        decisions = None
+
+        def due(self, now):
+            return True
+
+        def decide(self, now, queue, lam, initial_wait=0.0):
+            return Decision(c=8, b=8, feasible=True, n=2)
+
+    batch, _ = build_scenario("steady", duration=10, seed=1)
+    vec = VectorSimRunner(Horizontal(), PERF, DEFAULT_C, DEFAULT_B, c0=16)
+    with pytest.raises(NotImplementedError, match="horizontal"):
+        vec.run(batch)
+
+
+def test_events_processed_counts_control_events():
+    batch, meta = build_scenario("steady", duration=30, seed=9)
+    vec = _runner(VectorSimRunner, "memo", 1.0, meta["rps"])
+    vec.run(batch)
+    n_batches = len(vec.bucket_log)
+    n_ticks = len(vec.core_samples)
+    assert vec.events_processed == len(batch) + n_ticks + n_batches
+
+
+def test_queue_mirror_stays_in_sync():
+    """The Python-float mirror that feeds the front-cache key must
+    track the live array region through appends, in-place inserts,
+    merges and batch pops."""
+    batch, meta = build_scenario("mixed-slo", duration=60, seed=13)
+    vec = _runner(VectorSimRunner, "memo", 0.5, meta["expected_rps"])
+    vec.run(batch)
+    assert vec._q_dll == vec._q_dl[vec._qh:vec._qt].tolist()
+
+
+# -- satellite: tick-granular λ ------------------------------------------
+def test_tick_window_rate_matches_rate_estimator():
+    """The estimator the runners now query at tick granularity equals
+    the per-arrival RateEstimator at every tick time, on arrival
+    streams with idle gaps, bursts and a deploy prior."""
+    rng = np.random.default_rng(4)
+    arr = np.sort(rng.uniform(0.0, 30.0, 400))
+    arr = np.concatenate([arr, np.sort(45.0 + rng.uniform(0, 5, 50))])
+    for prior in (0.0, 15.0):
+        est = RateEstimator(window_s=2.0, prior_rps=prior)
+        w0 = 0
+        k = 0
+        for now in np.arange(0.0, 55.0, 0.25):
+            while k < arr.size and arr[k] <= now:
+                est.observe(float(arr[k]))
+                k += 1
+            lam_obj = est.rate(float(now))
+            lam_arr, w0 = tick_window_rate(arr, w0, float(now), 2.0,
+                                           prior)
+            assert lam_obj == lam_arr, (now, prior)
+
+
+# -- satellite: batched decision lookups ---------------------------------
+def test_solve_many_elementwise_identical():
+    rng = np.random.default_rng(8)
+    solver = MemoizedSolver(PERF, DEFAULT_C, DEFAULT_B,
+                            budget_quantum=0.01, lam_quantum=0.5)
+    seq = MemoizedSolver(PERF, DEFAULT_C, DEFAULT_B,
+                         budget_quantum=0.01, lam_quantum=0.5)
+    rems = [np.sort(rng.uniform(0.0, 1.0, rng.integers(0, 12)))
+            for _ in range(60)]
+    lams = rng.uniform(1.0, 40.0, 60)
+    iws = rng.uniform(0.0, 0.4, 60)
+    batch = solver.solve_many(rems, lams, iws)
+    single = [seq.solve(r, float(l), initial_wait=float(w))
+              for r, l, w in zip(rems, lams, iws)]
+    assert [(d.c, d.b, d.feasible) for d in batch] == \
+        [(d.c, d.b, d.feasible) for d in single]
+    assert solver.hits + solver.misses == 60

@@ -12,9 +12,11 @@ the latest entry regresses:
    the trajectory.
 2. **Throughput rows** — harness-recorded row lists
    (``[name, us_per_call, derived]``) whose derived string carries a
-   ``speedup=<x>x`` figure must stay at or above ``MIN_SPEEDUP``
-   (the repo's 10x fast-vs-exact bar, mirroring
-   ``benchmarks/throughput_bench.py``).
+   ``speedup=<x>x`` figure must stay at or above its floor: the
+   generic ``MIN_SPEEDUP`` (the repo's 10x fast-vs-exact bar,
+   mirroring ``benchmarks/throughput_bench.py``) or a stricter
+   per-row floor from ``ROW_FLOORS`` (``throughput_vector*`` rows —
+   the batched-tick vectorpath engine — must hold >=100x).
 
 A missing trajectory file is a *notice*, not a failure — benches only
 record on machines that ran them; the gate protects whatever history
@@ -39,7 +41,24 @@ SAVINGS_KEYS = {
 }
 SAVINGS_REGRESSION = 0.10     # latest may trail the best by at most 10%
 MIN_SPEEDUP = 10.0            # fast-vs-exact bar (throughput_bench)
+# per-row speedup floors by row-name prefix: rows the generic bar is too
+# lax for.  The vectorized batched-tick engine (ISSUE 8) must hold
+# >=100x over the pre-refactor loop, not merely the 10x fast-path bar.
+ROW_FLOORS = {
+    "throughput_vector": 100.0,
+}
 _SPEEDUP = re.compile(r"speedup=([0-9.]+)x")
+
+
+def _row_floor(name: str) -> float:
+    """The speedup floor for a bench row: a ``ROW_FLOORS`` prefix match
+    (longest wins) or the generic ``MIN_SPEEDUP`` bar."""
+    best = MIN_SPEEDUP
+    best_len = -1
+    for prefix, floor in ROW_FLOORS.items():
+        if name.startswith(prefix) and len(prefix) > best_len:
+            best, best_len = floor, len(prefix)
+    return best
 
 
 def _dig(metrics: dict, dotted: str):
@@ -83,12 +102,14 @@ def check_speedups(path: Path) -> list[str]:
     problems = []
     for row in metrics:
         derived = str(row[-1]) if isinstance(row, (list, tuple)) else ""
+        name = str(row[0]) if isinstance(row, (list, tuple)) and row else "?"
+        floor = _row_floor(name)
         for m in _SPEEDUP.finditer(derived):
             speedup = float(m.group(1))
-            if speedup < MIN_SPEEDUP:
+            if speedup < floor:
                 problems.append(
-                    f"{path.name}: {row[0] if row else '?'} speedup "
-                    f"{speedup:.1f}x below the {MIN_SPEEDUP:.0f}x bar")
+                    f"{path.name}: {name} speedup "
+                    f"{speedup:.1f}x below the {floor:.0f}x bar")
     return problems
 
 
