@@ -3,7 +3,7 @@ export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
 .PHONY: verify test-fast smoke perf-smoke fig4 bench throughput \
 	token-bench fleet-bench session-bench tenant-bench \
-	uncertainty-bench docs-check bench-gate help
+	uncertainty-bench degrade-bench docs-check bench-gate help
 
 # tier-1 verification (the ROADMAP contract) + the benchmark
 # regression gate over recorded BENCH_*.json trajectories
@@ -73,6 +73,13 @@ tenant-bench:
 uncertainty-bench:
 	$(PY) -m benchmarks.uncertainty_bench
 
+# degrade-under-pressure benchmark: the (m, n, c, b) planner vs every
+# fixed ladder rung on the three degradation scenarios (asserts the
+# planner beats the top rung on accuracy-weighted goodput at
+# equal-or-lower core-seconds; appends to BENCH_degrade.json)
+degrade-bench:
+	$(PY) -m benchmarks.run --only degrade
+
 # doc link integrity + serving-API docstring coverage
 docs-check:
 	$(PY) tools/docs_check.py
@@ -97,6 +104,7 @@ help:
 	@echo "make session-bench - 100k+-request online-session benchmark"
 	@echo "make tenant-bench - 200k+-request multi-tenant pool benchmark"
 	@echo "make uncertainty-bench - 100k+-request distribution-aware admission benchmark"
+	@echo "make degrade-bench - (m, n, c, b) planner vs fixed-model fleets"
 	@echo "make docs-check  - doc links + serving-API docstring coverage"
 	@echo "make bench-gate  - regression gate over BENCH_*.json trajectories"
 	@echo "make bench       - full benchmark harness"

@@ -8,12 +8,18 @@ removes one pillar at a time, plus the paper's own future-work extension
 from __future__ import annotations
 
 import time
+import warnings
 from dataclasses import dataclass
 
 import numpy as np
 
 from repro.core.baselines import SpongePolicy, StaticPolicy
-from repro.core.multidim import MultiDimPolicy
+
+# the multidim ramp ablation deliberately exercises the deprecated
+# share-splitting policy (that is the point of the comparison)
+with warnings.catch_warnings():
+    warnings.simplefilter("ignore", DeprecationWarning)
+    from repro.core.multidim import MultiDimPolicy
 from repro.core.perf_model import yolov5s_like
 from repro.core.queueing import EDFQueue
 from repro.core.scaler import SpongeScaler

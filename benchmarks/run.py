@@ -61,6 +61,10 @@ BENCHES = [
     # vs the deterministic-cost scaler on heavy-tailed decode lengths
     # (benchmarks/uncertainty_bench.py)
     ("uncertainty", "benchmarks.uncertainty_bench"),
+    # accuracy degradation: the (m, n, c, b) planner vs fixed-model
+    # fleets on the degrade-under-pressure family
+    # (benchmarks/degrade_bench.py)
+    ("degrade", "benchmarks.degrade_bench"),
 ]
 
 

@@ -26,6 +26,40 @@ _MODULES = {
 
 ARCH_IDS = tuple(_MODULES)
 
+# Per-model accuracy score in (0, 1] — the quality axis of the
+# (m, n, c, b) degradation solver (``repro.core.degradation``).
+# Normalized open-eval composite per architecture class: monotone in
+# capability (roughly log active params), so the registry's natural
+# ladder smollm-135m -> smollm-360m -> gemma-2b -> zamba2/rwkv6 ->
+# deepseek/kimi is also the accuracy order.  The absolute numbers only
+# matter relatively: the solver ranks rungs by them and the
+# accuracy-weighted-goodput metric sums them.
+MODEL_ACCURACY = {
+    "smollm-135m": 0.58,
+    "smollm-360m": 0.64,
+    "rwkv6-1.6b": 0.69,
+    "h2o-danube-1.8b": 0.70,
+    "gemma-2b": 0.72,
+    "qwen2-vl-2b": 0.73,
+    "zamba2-2.7b": 0.74,
+    "whisper-large-v3": 0.76,
+    "deepseek-v3-671b": 0.90,
+    "kimi-k2-1t-a32b": 0.92,
+}
+assert set(MODEL_ACCURACY) == set(_MODULES)
+
+
+def model_accuracy(arch_id: str) -> float:
+    """The registry accuracy score for ``arch_id`` (``-reduced``
+    variants score as their parent — a smoke-sized config is not a
+    different model)."""
+    if arch_id.endswith("-reduced"):
+        arch_id = arch_id[: -len("-reduced")]
+    if arch_id not in MODEL_ACCURACY:
+        raise KeyError(f"unknown arch {arch_id!r}; known: "
+                       f"{sorted(MODEL_ACCURACY)}")
+    return MODEL_ACCURACY[arch_id]
+
 
 def get_config(arch_id: str, reduced: bool = False) -> ModelConfig:
     if arch_id.endswith("-reduced"):

@@ -3,7 +3,17 @@
 The paper's §6 "Multidimensional scaling" future work: vertical scaling
 saturates at c_max on one node; when the workload exceeds a single
 instance's max throughput, horizontal replicas must join — each of which is
-itself vertically scaled.  Policy:
+itself vertically scaled.
+
+.. deprecated::
+    The ``rem_all[::k]`` share-splitting heuristic here is superseded by
+    the joint (n, c, b) solver (``repro.core.solver.JointSolverTable`` /
+    ``JointMemoizedSolver`` driving ``repro.serving.fleet``), which
+    searches replica count, cores and batch jointly instead of slicing a
+    fixed share per instance.  Importing this module emits a
+    ``DeprecationWarning``; see the migration note in docs/api.md.
+
+Policy:
 
 * target replica count n = ceil(lambda_eff / h_max(c_max)) (backlog-aware);
   scale-ups pay the cold start (new instances ARE new pods — the paper's
@@ -16,12 +26,20 @@ itself vertically scaled.  Policy:
 from __future__ import annotations
 
 import math
+import warnings
 from dataclasses import dataclass, field
 from typing import Sequence
 
 from repro.core.perf_model import PerfModel
 from repro.core.scaler import SpongeScaler
 from repro.core.solver import DEFAULT_B, DEFAULT_C
+
+warnings.warn(
+    "repro.core.multidim is deprecated: the per-instance share-splitting "
+    "heuristic is superseded by the joint (n, c, b) solver — use "
+    "repro.core.solver.JointSolverTable / JointMemoizedSolver with "
+    "repro.serving.fleet; see the migration note in docs/api.md",
+    DeprecationWarning, stacklevel=2)
 
 
 @dataclass
@@ -56,8 +74,8 @@ class MultiDimPolicy:
         k = len(ready)
         rem_all = sim.queue.snapshot_remaining(now)
         wait0 = min(max(s.busy_until - now, 0.0) for s in ready)
-        d = self.scaler.decide_shared(now, rem_all[::k], lam / k,
-                                      initial_wait=wait0)
+        d = _decide_shared(self.scaler, now, rem_all[::k], lam / k,
+                           initial_wait=wait0)
         sim.set_batch(d.b)
         for srv in ready:
             penalty = srv.instance.resize(d.c, now)
@@ -66,7 +84,9 @@ class MultiDimPolicy:
 
 
 def _decide_shared(self, now, remaining, lam, initial_wait=0.0):
-    """SpongeScaler.decide on a pre-sliced budget list."""
+    """``SpongeScaler.decide`` on a pre-sliced budget list (module-local
+    helper — this used to be monkey-patched onto ``SpongeScaler`` at
+    import time, mutating the class for every other consumer)."""
     from repro.core.solver import solve_bruteforce, solve_pruned
     self._next_t = now + self.adaptation_interval
     rem = sorted(max(r - self.headroom, 0.0) for r in remaining)
@@ -76,5 +96,3 @@ def _decide_shared(self, now, remaining, lam, initial_wait=0.0):
     self.decisions.append((now, d))
     return d
 
-
-SpongeScaler.decide_shared = _decide_shared

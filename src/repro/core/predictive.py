@@ -77,7 +77,11 @@ class PredictivePolicy:
     _seen: set = field(default_factory=set)
 
     def _feed(self, sim) -> None:
-        pending = [req for _, _, req in sim.queue._heap
+        # Read the live-entry snapshot, never the raw heap: after a
+        # deadline re-key the heap holds stale duplicates (double-feed)
+        # and after a cancel it still holds the dead tuple (a request
+        # that will never be served polluting the forecast).
+        pending = [req for req in sim.queue.live_requests()
                    if req.id not in self._seen]
         done = [r for r in sim.monitor.completed if r.id not in self._seen]
         for r in sorted(pending + done, key=lambda r: r.arrival):

@@ -123,6 +123,16 @@ class EDFQueue:
     def pop_batch(self, b: int) -> List[Request]:
         return [self.pop() for _ in range(min(b, len(self._live)))]
 
+    def live_requests(self) -> List[Request]:
+        """The live-entry snapshot: every queued request exactly once.
+
+        This — never ``_heap`` — is the observer-facing view.  After an
+        ``update_deadline`` the heap holds stale duplicates of the re-keyed
+        request, and after a ``cancel`` it still holds the dead tuple;
+        only ``_live`` reflects the queue's true contents.
+        """
+        return list(self._live.values())
+
     def snapshot_remaining(self, now: float) -> List[float]:
         """Remaining budgets (sorted ascending) — the solver's input."""
         return sorted(r.deadline - now for r in self._live.values())

@@ -108,6 +108,10 @@ class Decision:
       latency the chosen (c, b) is predicted to sustain (b doubles as
       the decode-slot cap on the continuous-batching engines); 0.0 for
       fixed-work decisions.
+    * ``m`` — model rung the allocation is planned for (the (m, n, c, b)
+      degradation solver's third axis — ``repro.core.degradation``);
+      ``None`` for single-model decisions, which keeps every pre-ladder
+      code path bit-identical.
     """
     c: int
     b: int
@@ -117,6 +121,7 @@ class Decision:
     n: int = 1
     scale_up_delay: float = 0.0
     predicted_tbt: float = 0.0
+    m: Optional[str] = None
 
     @property
     def cost(self) -> float:

@@ -63,6 +63,7 @@ extend the Algorithm-1 feasibility logic to token compositions:
 from __future__ import annotations
 
 import time
+from dataclasses import replace
 from typing import List, Optional, Sequence, Union
 
 import numpy as np
@@ -611,7 +612,8 @@ class JointSolverTable:
 
     def min_violations(self, remaining_slos, lam: float,
                        initial_wait: float = 0.0,
-                       max_cores: Optional[int] = None) -> int:
+                       max_cores: Optional[int] = None,
+                       sustaining_pool: bool = True) -> int:
         """Fewest predicted EDF violations achievable under ``max_cores``.
 
         Reads the same frontier as :meth:`solve`: ``0`` when any
@@ -622,6 +624,13 @@ class JointSolverTable:
         every candidate).  This is the value function ``V(cap)`` that
         the multi-tenant reallocator (``repro.serving.tenancy``)
         differentiates to price a core transfer between tenants.
+
+        ``sustaining_pool=False`` skips the λ-sustaining preference and
+        minimizes over every candidate under the cap — the pool the
+        (m, n, c, b) fallback needs, because cross-rung counts are only
+        comparable when every rung minimizes over the same grid (a
+        sustaining-restricted pool can report *more* violations for a
+        strictly faster rung).
         """
         rem = np.sort(np.asarray(remaining_slos, np.float64).ravel())
         n_req = rem.size
@@ -655,7 +664,7 @@ class JointSolverTable:
                 finish = initial_wait + lat[:, j, None] * mult
                 viol[i, :, j] = (finish > rem).sum(axis=1)
         sus = sustain.reshape(-1)[self._flat] & fit
-        pool = sus if sus.any() else fit
+        pool = sus if (sustaining_pool and sus.any()) else fit
         if not pool.any():
             return n_req
         return int(viol.reshape(-1)[self._flat][pool].min())
@@ -706,6 +715,230 @@ class JointMemoizedSolver(_QuantizedDecisionCache):
             (rem.tobytes(), lam_q, iw, only_n, max_cores),
             lambda: self.table.solve(rem, lam_q, initial_wait=iw,
                                      only_n=only_n, max_cores=max_cores))
+
+
+# ---------------------------------------------------------------------------
+# (m, n, c, b): the model-size axis (ISSUE 9 — accuracy degradation)
+# ---------------------------------------------------------------------------
+def _joint_min_violations_bruteforce(rem, lam: float, perf, c_set, b_set,
+                                     n_set, initial_wait: float,
+                                     max_cores: Optional[int] = None,
+                                     sustaining_pool: bool = True) -> int:
+    """Loop-and-count reference for ``JointSolverTable.min_violations``
+    (same tier structure: 0 if any candidate drains in time, else the
+    minimum over λ-sustaining candidates, else over all candidates,
+    else the whole queue; ``sustaining_pool=False`` minimizes over all
+    candidates directly — the cross-rung-comparable pool)."""
+    rem = sorted(float(x) for x in rem)
+    n_req = len(rem)
+    if n_req == 0:
+        return 0
+    best_sus = None
+    best_any = None
+    for _total, n, b, c in joint_candidates(c_set, b_set, n_set):
+        if max_cores is not None and n * c > max_cores:
+            continue
+        l = float(perf.latency(b, c))
+        v = _predicted_violations(rem, l, n * b, initial_wait)
+        sustains = lam <= 0 or n * float(perf.throughput(b, c)) >= lam
+        if sustains and (best_sus is None or v < best_sus):
+            best_sus = v
+        if best_any is None or v < best_any:
+            best_any = v
+    if sustaining_pool and best_sus is not None:
+        return best_sus
+    if best_any is not None:
+        return best_any
+    return n_req
+
+
+def solve_multimodel_bruteforce(remaining_slos, lam: float, ladder,
+                                c_set: Sequence[int] = DEFAULT_C,
+                                b_set: Sequence[int] = DEFAULT_B,
+                                n_set: Sequence[int] = DEFAULT_N,
+                                initial_wait: float = 0.0,
+                                replica_pen: float = 0.0,
+                                accuracy_floor: float = 0.0,
+                                m_set: Optional[Sequence[str]] = None,
+                                current_m: Optional[str] = None,
+                                ) -> Decision:
+    """The (m, n, c, b) reference solver: Algorithm 1 lifted to the
+    fleet *and* the model ladder.
+
+    Rungs are searched in accuracy-descending order (the
+    ``ModelLadder`` iteration order), each via the joint (n, c, b)
+    solve on the rung's own cost surface; the first rung with any
+    feasible allocation wins.  Accuracy is therefore **shed only when
+    no (n, c, b) at every higher rung is feasible** — the candidate
+    order prefers higher-accuracy models unconditionally, making the
+    shed provable rather than a weighted trade-off.
+
+    ``accuracy_floor`` removes rungs below the SLO's quality floor
+    from the search entirely; ``m_set`` pins the admissible rungs (a
+    single-name pin reduces to :func:`solve_joint_bruteforce` on that
+    rung, decision-for-decision).  ``current_m`` makes the search
+    swap-cost-aware: any rung other than the currently loaded model
+    charges its weights-load time on top of ``initial_wait`` (the
+    fleet cannot serve on a rung before its weights arrive), so a
+    degradation must be worth its own swap.
+
+    When no admissible rung has a feasible allocation, the fallback
+    compares rungs by (1) fewest predicted queued violations, counted
+    over *every* (n, c, b) candidate (the only pool in which a strictly
+    faster rung can never report more violations), then (2) the largest
+    capacity-accuracy product ``min(lam, ceiling) * accuracy`` — the
+    sustainable accuracy-weighted serve rate, which hands the win to
+    the highest-accuracy rung that absorbs ``lam`` and degrades
+    smoothly to throughput damage control when nothing does — then
+    (3) higher accuracy (earlier in the ladder), and returns that
+    rung's damage-minimizing joint fallback.
+    """
+    t0 = time.perf_counter()
+    rungs = ladder.admissible(accuracy_floor, m_set)
+    iters = 0
+    best = None          # ((violations, -capacity*acc), rung, decision)
+    for rung in rungs:
+        iw = initial_wait
+        if current_m is not None and rung.name != current_m:
+            iw = initial_wait + float(rung.swap_cost)
+        d = solve_joint_bruteforce(remaining_slos, lam, rung.cost,
+                                   c_set, b_set, n_set,
+                                   initial_wait=iw,
+                                   replica_pen=replica_pen)
+        iters += d.solver_iters
+        if d.feasible:
+            return replace(d, m=rung.name, solver_iters=iters,
+                           solver_time=time.perf_counter() - t0)
+        v = _joint_min_violations_bruteforce(
+            remaining_slos, lam, rung.cost, c_set, b_set, n_set, iw,
+            sustaining_pool=False)
+        ceiling = max(n * float(rung.cost.throughput(b, c))
+                      for _t, n, b, c in joint_candidates(c_set, b_set,
+                                                          n_set))
+        key = (v, -min(max(lam, 0.0), ceiling) * rung.accuracy)
+        if best is None or key < best[0]:
+            best = (key, rung, d)
+    _, rung, d = best
+    return replace(d, m=rung.name, solver_iters=iters,
+                   solver_time=time.perf_counter() - t0)
+
+
+class MultiModelSolverTable:
+    """The (m, n, c, b) solver: one :class:`JointSolverTable` per
+    ladder rung, searched in accuracy-descending order.
+
+    Semantics are exactly :func:`solve_multimodel_bruteforce`'s, rung
+    for rung: accuracy is shed only when every (n, c, b) at every
+    higher admissible rung is infeasible, ``accuracy_floor`` bounds
+    the shed, ``current_m`` charges non-resident rungs their
+    weights-load time, and the all-infeasible fallback returns the
+    damage-minimizing decision of the best rung under the ordering
+    (fewest predicted violations over the all-candidate pool, largest
+    capacity-accuracy product under the core cap, higher accuracy).
+
+    **Pinned-m reduction**: with ``m_set=(rung,)`` and no swap charge
+    (``current_m`` absent or equal to the pin) the solve is a single
+    delegation to that rung's :class:`JointSolverTable` — bit-identical
+    to the PR 4 joint solver by construction, with only the ``m`` tag
+    added (property-tested in ``tests/test_degradation.py``).
+    """
+
+    def __init__(self, ladder, c_set: Sequence[int] = DEFAULT_C,
+                 b_set: Sequence[int] = DEFAULT_B,
+                 n_set: Sequence[int] = DEFAULT_N,
+                 replica_pen: float = 0.0):
+        self.ladder = ladder
+        self.tables = {
+            rung.name: JointSolverTable(rung.cost, c_set, b_set, n_set,
+                                        replica_pen)
+            for rung in ladder}
+        self.size = sum(t.size for t in self.tables.values())
+
+    def _rung_wait(self, rung, initial_wait: float,
+                   current_m: Optional[str]) -> float:
+        if current_m is not None and rung.name != current_m:
+            return initial_wait + float(rung.swap_cost)
+        return initial_wait
+
+    def solve(self, remaining_slos, lam: float, initial_wait: float = 0.0,
+              only_n: Optional[int] = None,
+              max_cores: Optional[int] = None,
+              accuracy_floor: float = 0.0,
+              m_set: Optional[Sequence[str]] = None,
+              current_m: Optional[str] = None) -> Decision:
+        t0 = time.perf_counter()
+        rungs = self.ladder.admissible(accuracy_floor, m_set)
+        if len(rungs) == 1:
+            # the pinned-m reduction: pure delegation (bit-identical
+            # to JointSolverTable.solve on that rung, m tag aside)
+            rung = rungs[0]
+            d = self.tables[rung.name].solve(
+                remaining_slos, lam,
+                initial_wait=self._rung_wait(rung, initial_wait,
+                                             current_m),
+                only_n=only_n, max_cores=max_cores)
+            return replace(d, m=rung.name)
+        iters = 0
+        best = None          # ((violations, -capacity*acc), rung, decision)
+        for rung in rungs:
+            iw = self._rung_wait(rung, initial_wait, current_m)
+            table = self.tables[rung.name]
+            d = table.solve(remaining_slos, lam, initial_wait=iw,
+                            only_n=only_n, max_cores=max_cores)
+            iters += d.solver_iters
+            if d.feasible:
+                return replace(d, m=rung.name, solver_iters=iters,
+                               solver_time=time.perf_counter() - t0)
+            # violations counted over the all-candidate pool — the only
+            # pool in which a strictly faster rung can never report
+            # more violations — then the capacity-accuracy product
+            # min(lam, ceiling)*acc: the sustainable accuracy-weighted
+            # serve rate (blind queued counts cannot see that a rung
+            # which absorbs lam stops the backlog growing)
+            v = table.min_violations(remaining_slos, lam, initial_wait=iw,
+                                     max_cores=max_cores,
+                                     sustaining_pool=False)
+            cap_acc = (min(max(lam, 0.0), table.max_rate(max_cores))
+                       * rung.accuracy)
+            key = (v, -cap_acc)
+            if best is None or key < best[0]:
+                best = (key, rung, d)
+        _, rung, d = best
+        return replace(d, m=rung.name, solver_iters=iters,
+                       solver_time=time.perf_counter() - t0)
+
+
+class MultiModelMemoizedSolver(_QuantizedDecisionCache):
+    """Quantized decision cache in front of a
+    :class:`MultiModelSolverTable` — the shared conservative bucketing
+    with the degradation knobs (floor, rung pin, resident model)
+    folded into the cache key."""
+
+    def __init__(self, ladder, c_set: Sequence[int] = DEFAULT_C,
+                 b_set: Sequence[int] = DEFAULT_B,
+                 n_set: Sequence[int] = DEFAULT_N,
+                 budget_quantum: float = 0.0, lam_quantum: float = 0.0,
+                 replica_pen: float = 0.0, max_entries: int = 200_000):
+        super().__init__(budget_quantum, lam_quantum, max_entries)
+        self.table = MultiModelSolverTable(ladder, c_set, b_set, n_set,
+                                           replica_pen)
+
+    def solve(self, remaining_slos, lam: float, initial_wait: float = 0.0,
+              only_n: Optional[int] = None,
+              max_cores: Optional[int] = None,
+              accuracy_floor: float = 0.0,
+              m_set: Optional[Sequence[str]] = None,
+              current_m: Optional[str] = None) -> Decision:
+        rem = np.sort(np.asarray(remaining_slos, np.float64).ravel())
+        rem, lam_q, iw = self._quantize(rem, lam, initial_wait)
+        pins = None if m_set is None else tuple(m_set)
+        return self._cached(
+            (rem.tobytes(), lam_q, iw, only_n, max_cores,
+             round(float(accuracy_floor), 12), pins, current_m),
+            lambda: self.table.solve(rem, lam_q, initial_wait=iw,
+                                     only_n=only_n, max_cores=max_cores,
+                                     accuracy_floor=accuracy_floor,
+                                     m_set=pins, current_m=current_m))
 
 
 # ---------------------------------------------------------------------------

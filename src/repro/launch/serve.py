@@ -23,6 +23,11 @@ Three modes, one control plane (``repro.serving.api.SpongeServer``):
   the joint horizontal + vertical engines (``repro.serving.fleet``);
   ``--replicas`` sizes the deploy-time fleet and ``--router`` picks the
   arrival router (``least-loaded`` / ``jsq`` / ``edf-deadline``).
+  Degradation scenarios (``degrade-sustained-overload``,
+  ``degrade-flash-overload``, ``degrade-fade-overload``) run the
+  (m, n, c, b) planner over a model ladder; ``--model-ladder`` attaches
+  (or overrides) the ladder, ``--accuracy-floor`` bounds the shed and
+  ``--policy fixed-<arch>`` pins one rung (the fixed-model baseline).
   Multi-tenant scenarios (``mixed-zoo``, ``mixed-zoo-rush``) run the
   shared-pool engines (``repro.serving.tenancy``); ``--tenants`` picks
   the pool reallocation policy and ``--pool-cores`` the core budget.
@@ -144,7 +149,9 @@ def run_scenario_mode(args) -> dict:
             tenant_policy=args.tenants, pool_cores=args.pool_cores,
             mid_flight=not args.no_mid_flight,
             admission_quantile=args.admission_quantile,
-            speculative=not args.no_speculative)
+            speculative=not args.no_speculative,
+            model_ladder=args.model_ladder,
+            accuracy_floor=args.accuracy_floor)
     ev = stats["events"]
     dt = stats["run_wall_s"]            # engine time only (no generation)
     out = {"scenario": args.scenario, "engine": stats["engine"],
@@ -162,6 +169,13 @@ def run_scenario_mode(args) -> dict:
     if "max_replicas" in stats:         # fleet scenarios: the ISSUE-4 bar
         out.update(max_replicas=stats["max_replicas"],
                    router=stats["router"])
+    if "ladder" in stats:               # degradation runs: the ISSUE-9 bar
+        out.update(core_seconds=report.core_seconds,
+                   ladder=stats["ladder"],
+                   accuracy_floor=stats["accuracy_floor"],
+                   accuracy_goodput=report.accuracy_goodput,
+                   mean_served_accuracy=report.mean_served_accuracy,
+                   model_swaps=report.model_swaps)
     if "session" in stats:              # session scenarios: the ISSUE-5 bar
         out.update(n_cancelled=report.n_cancelled, **{
             f"mid_flight_{k}": v for k, v in stats["session"].items()})
@@ -232,6 +246,16 @@ def main(argv=None):
                          "(0 disables the uncertainty path — the "
                          "deterministic-cost baseline; default: the "
                          "scenario's own quantile)")
+    ap.add_argument("--model-ladder", default=None,
+                    help="fleet scenarios: attach a model ladder and run "
+                         "the (m, n, c, b) planner — 'default', 'full' or "
+                         "a comma-separated registry arch list (degrade-* "
+                         "scenarios carry 'default' already); "
+                         "--policy fixed-<arch> pins one rung")
+    ap.add_argument("--accuracy-floor", type=float, default=None,
+                    help="ladder runs: never shed below this accuracy "
+                         "score (default: the scenario's own floor, 0.60 "
+                         "for the degrade-* family)")
     ap.add_argument("--no-speculative", action="store_true",
                     help="distribution-aware runs: disable speculative "
                          "over-admission with cancel-on-overrun (streams "

@@ -18,6 +18,24 @@ from repro.configs.base import ModelConfig
 
 FSDP = ("pod", "data")
 
+
+def shard_map_compat(f, *, mesh, in_specs, out_specs, check_vma=False):
+    """Version-portable ``shard_map``.
+
+    JAX >= 0.6 exposes ``jax.shard_map`` (replication checking controlled
+    by ``check_vma``); the pinned 0.4.x line only has
+    ``jax.experimental.shard_map.shard_map``, where the same switch is
+    spelled ``check_rep``.  Resolve whichever exists and translate the
+    kwarg so call sites can use the modern spelling everywhere.
+    """
+    sm = getattr(jax, "shard_map", None)
+    if sm is not None:
+        return sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                  check_vma=check_vma)
+    from jax.experimental.shard_map import shard_map as sm
+    return sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+              check_rep=check_vma)
+
 # (path regex, spec over trailing dims)
 PARAM_RULES: list[tuple[str, P]] = [
     # embeddings / heads

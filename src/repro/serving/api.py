@@ -410,6 +410,20 @@ class RunReport:
     * ``n_cancelled`` — requests withdrawn mid-flight via
       ``SpongeSession.cancel``; excluded from every served/violation
       aggregate (0 on closed-world replays).
+
+    Degradation extras (``repro.core.degradation`` fleets; NaN/0/None
+    on single-model runs):
+
+    * ``accuracy_goodput`` — accuracy-weighted goodput: the sum of the
+      serving model's accuracy score over requests served *within* their
+      deadline, divided by the horizon (Orloj's objective — a degraded
+      answer in time beats a full-accuracy answer that is late, but
+      counts for less than a full-accuracy answer in time).
+    * ``mean_served_accuracy`` — mean accuracy score over served
+      requests (degradation depth, independent of the rate axis).
+    * ``model_swaps`` — committed model swaps over the run.
+    * ``model_timeline`` — ``(t, rung_name, accuracy)`` resident-model
+      segments (first entry at t=0).
     """
     policy: str
     backend: str
@@ -430,6 +444,10 @@ class RunReport:
     ttft_p99: float = float("nan")
     tbt_violation_rate: float = 0.0
     n_cancelled: int = 0
+    accuracy_goodput: float = float("nan")
+    mean_served_accuracy: float = float("nan")
+    model_swaps: int = 0
+    model_timeline: Optional[List[tuple]] = None
 
     def __getitem__(self, key: str):
         return getattr(self, key)

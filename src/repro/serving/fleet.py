@@ -65,7 +65,8 @@ from typing import Dict, List, Optional, Sequence, Union
 import numpy as np
 
 from repro.core.cost_model import CostModel
-from repro.core.monitor import array_window_rate, tick_window_rate
+from repro.core.monitor import (accuracy_weighted_goodput,
+                                array_window_rate, tick_window_rate)
 from repro.core.perf_model import PerfModel
 from repro.core.queueing import EDFQueue, FastEDFQueue
 from repro.core.slo import Decision
@@ -248,6 +249,26 @@ class FleetSpongeScaler(_JointPolicyBase):
             lam_quantum=self.lam_quantum,
             replica_pen=self.replica_pen)
 
+    def _solve_full(self, rem: np.ndarray, lam_eff: float,
+                    initial_wait: float) -> Decision:
+        """The unconstrained joint solve (degradation subclasses widen
+        this to the (m, n, c, b) search)."""
+        return self.memo.solve(rem, lam_eff, initial_wait=initial_wait,
+                               max_cores=self.core_cap)
+
+    def _solve_pinned_n(self, d: Decision, rem: np.ndarray, lam_eff: float,
+                        initial_wait: float, pin: int) -> Decision:
+        """The hysteresis-hold re-solve at a pinned replica count
+        (degradation subclasses additionally pin the model to ``d.m``)."""
+        return self.memo.solve(rem, lam_eff, initial_wait=initial_wait,
+                               only_n=pin, max_cores=self.core_cap)
+
+    def _model_gate(self, d: Decision, rem: np.ndarray, lam_eff: float,
+                    initial_wait: float) -> Decision:
+        """Model-swap hysteresis hook — identity for the single-model
+        scaler."""
+        return d
+
     def decide_fleet(self, now: float, remaining: np.ndarray, lam: float,
                      initial_wait: float = 0.0,
                      active_n: int = 1) -> Decision:
@@ -256,8 +277,8 @@ class FleetSpongeScaler(_JointPolicyBase):
         rem = np.maximum(np.asarray(remaining, np.float64) - self.headroom,
                          0.0)
         lam_eff = lam * self.lam_headroom
-        d = self.memo.solve(rem, lam_eff, initial_wait=initial_wait,
-                            max_cores=self.core_cap)
+        d = self._solve_full(rem, lam_eff, initial_wait)
+        d = self._model_gate(d, rem, lam_eff, initial_wait)
         if d.n < active_n:
             self._down_streak += 1
             if self._down_streak < self.down_patience:
@@ -268,10 +289,9 @@ class FleetSpongeScaler(_JointPolicyBase):
                 # more conservative (tighter drain + throughput)
                 fits = [n for n in self.n_set if n <= active_n]
                 pin = max(fits) if fits else min(self.n_set)
-                d = self.memo.solve(rem, lam_eff,
-                                    initial_wait=initial_wait, only_n=pin,
-                                    max_cores=self.core_cap)
-                d = replace(d, n=active_n)
+                held = self._solve_pinned_n(d, rem, lam_eff, initial_wait,
+                                            pin)
+                d = replace(held, n=active_n)
             else:
                 self._down_streak = 0
         else:
@@ -280,6 +300,104 @@ class FleetSpongeScaler(_JointPolicyBase):
             d = replace(d, scale_up_delay=self.scale_up_delay)
         self.decisions.append((now, d))
         return d
+
+
+@dataclass
+class DegradingFleetScaler(FleetSpongeScaler):
+    """The (m, n, c, b) scaler: model size as the third scaling axis.
+
+    Wraps the joint fleet scaler around a
+    :class:`~repro.core.degradation.ModelLadder`: every adaptation
+    interval the :class:`~repro.core.solver.MultiModelMemoizedSolver`
+    searches rungs accuracy-descending, so accuracy is **shed only
+    when no (n, c, b) at the resident model is feasible**, never below
+    ``accuracy_floor``.  The search is swap-cost-aware — a non-resident
+    rung's feasibility is checked with its weights-load time added to
+    the initial wait — and model swaps are hysteretic the same way
+    scale-downs are: a proposed swap must persist for a run of
+    consecutive decisions (same target rung) before it is emitted;
+    until then (n, c, b) re-solves with ``m`` pinned at the resident
+    model, which reduces bit-identically to the PR 4 joint solver.
+    The patience is asymmetric: a *shed* (accuracy-decreasing swap)
+    commits after ``shed_patience`` proposals — it protects the SLO,
+    and every held tick grows the backlog — while a *recovery*
+    (accuracy-increasing swap) waits the longer ``swap_patience``,
+    because recovering onto a rung that is only marginally feasible
+    flips straight back and pays two weights loads for nothing.
+
+    The emitted :class:`~repro.core.slo.Decision` carries the target
+    rung in ``d.m``; the fleet runners apply the swap with
+    drain-before-swap semantics (in-flight batches finish on the old
+    model, the weights-load penalty blocks new dispatch — see
+    ``_FleetRunnerBase._apply``).
+    """
+    ladder: Optional[object] = None      # ModelLadder (required)
+    accuracy_floor: float = 0.0
+    swap_patience: int = 6               # recovery (accuracy-up) patience
+    shed_patience: int = 2               # shed (accuracy-down) patience
+    m0: Optional[str] = None             # initial resident rung
+    name: str = "sponge-degrade"
+    _swap_streak: int = 0
+    _swap_target: Optional[str] = None
+
+    def __post_init__(self):
+        if self.ladder is None:
+            raise ValueError("DegradingFleetScaler needs a ModelLadder")
+        self.model = (self.m0 if self.m0 is not None
+                      else self.ladder.best(self.accuracy_floor).name)
+        self.ladder.rung(self.model)     # validate m0
+
+    def _make_memo(self):
+        from repro.core.solver import MultiModelMemoizedSolver
+        return MultiModelMemoizedSolver(
+            self.ladder, self.c_set, self.b_set, self.n_set,
+            budget_quantum=self.budget_quantum,
+            lam_quantum=self.lam_quantum,
+            replica_pen=self.replica_pen)
+
+    def _solve_full(self, rem: np.ndarray, lam_eff: float,
+                    initial_wait: float) -> Decision:
+        return self.memo.solve(rem, lam_eff, initial_wait=initial_wait,
+                               max_cores=self.core_cap,
+                               accuracy_floor=self.accuracy_floor,
+                               current_m=self.model)
+
+    def _solve_pinned_n(self, d: Decision, rem: np.ndarray, lam_eff: float,
+                        initial_wait: float, pin: int) -> Decision:
+        # the n-hysteresis hold also holds the (already model-gated)
+        # rung, so a held decision never smuggles a swap past the gate
+        return self.memo.solve(rem, lam_eff, initial_wait=initial_wait,
+                               only_n=pin, max_cores=self.core_cap,
+                               accuracy_floor=self.accuracy_floor,
+                               m_set=(d.m,), current_m=self.model)
+
+    def _model_gate(self, d: Decision, rem: np.ndarray, lam_eff: float,
+                    initial_wait: float) -> Decision:
+        """``down_patience``-style hysteresis on the model axis: commit
+        a swap only after enough consecutive decisions propose the
+        *same* target rung (``shed_patience`` for accuracy-decreasing
+        swaps, ``swap_patience`` for recoveries); hold the resident
+        model (full re-solve with ``m`` pinned) in the meantime."""
+        if d.m == self.model:
+            self._swap_streak, self._swap_target = 0, None
+            return d
+        if d.m == self._swap_target:
+            self._swap_streak += 1
+        else:
+            self._swap_streak, self._swap_target = 1, d.m
+        patience = (self.shed_patience
+                    if (self.ladder.accuracy(d.m)
+                        < self.ladder.accuracy(self.model))
+                    else self.swap_patience)
+        if self._swap_streak >= patience:
+            self._swap_streak, self._swap_target = 0, None
+            self.model = d.m             # commit; runners pay the load
+            return d
+        held = self.memo.solve(rem, lam_eff, initial_wait=initial_wait,
+                               max_cores=self.core_cap,
+                               accuracy_floor=self.accuracy_floor,
+                               m_set=(self.model,), current_m=self.model)
+        return held
 
 
 @dataclass
@@ -355,7 +473,8 @@ class _FleetRunnerBase:
                  c0: int = 1, tick: float = 1.0,
                  resize_penalty: float = 0.005,
                  dispatch_margin: float = 0.02, prior_rps: float = 0.0,
-                 rate_window: float = 5.0, router: str = "least-loaded"):
+                 rate_window: float = 5.0, router: str = "least-loaded",
+                 ladder=None, m0: Optional[str] = None):
         if not hasattr(policy, "decide_fleet"):
             raise TypeError(
                 f"{type(policy).__name__} has no decide_fleet(); fleet "
@@ -378,10 +497,28 @@ class _FleetRunnerBase:
         # mirror; the other routers skip its upkeep (an O(backlog)
         # insort per arrival that nothing would read)
         self._track_dls = router == "edf-deadline"
-        # precomputed latency table: identical floats to perf.latency
-        self._lat: Dict[tuple[int, int], float] = {
-            (c, b): float(perf.latency(b, c))
-            for c in self.c_set for b in self.b_set}
+        # model ladder (ISSUE 9): per-rung latency tables + the resident
+        # rung; ``self._lat`` is mutated IN PLACE on a swap because both
+        # engines hold local aliases to it across dispatch loops
+        self.ladder = ladder
+        if ladder is not None:
+            self.model = (m0 or getattr(policy, "model", None)
+                          or ladder[0].name)
+            ladder.rung(self.model)          # validate
+            self._lat_by_m: Dict[str, dict] = {
+                rung.name: {(c, b): float(rung.cost.latency(b, c))
+                            for c in self.c_set for b in self.b_set}
+                for rung in ladder}
+            self._lat: Dict[tuple[int, int], float] = dict(
+                self._lat_by_m[self.model])
+            self.model_log: List[tuple[float, str, float]] = [
+                (0.0, self.model, ladder.accuracy(self.model))]
+        else:
+            self.model = None
+            self.model_log = []
+            # precomputed latency table: identical floats to perf.latency
+            self._lat = {(c, b): float(perf.latency(b, c))
+                         for c in self.c_set for b in self.b_set}
         bmax = self.b_set[-1]
         buckets = np.empty(bmax + 1, np.int64)
         for x in range(bmax + 1):
@@ -491,14 +628,36 @@ class _FleetRunnerBase:
         self._apply(d, now)
 
     def _apply(self, d: Decision, now: float) -> None:
-        """Apply a joint decision: retire extras (drain), resize the
-        survivors in place, then add cold-starting replicas."""
+        """Apply a joint decision: retire extras (drain), swap the model
+        if the decision carries a new rung, resize the survivors in
+        place, then add cold-starting replicas.
+
+        **Drain-before-swap**: a model swap never interrupts in-flight
+        work — batches already dispatched keep their finish times (they
+        were computed on the old rung's surface) and the weights-load
+        penalty extends ``busy_until`` past them, so a replica serves
+        its first new-model batch only after the old-model batch
+        completed *and* the new weights loaded.  The penalty is the
+        model-swap analogue of the resize penalty / horizontal cold
+        start, and like them it only delays dispatch: core-second
+        accounting is untouched (the replica's cores stay allocated
+        either way — property-tested in ``tests/test_degradation.py``).
+        """
         c, self.b = resolve_decision(self.c_set, d)
         n = max(1, int(getattr(d, "n", 1)))
         reps = self.replicas
         if n < len(reps):
             for _ in range(min(len(reps) - n, len(reps) - 1)):
                 self._retire(reps.pop(), now)       # youngest first
+        swap_pen = 0.0
+        m = getattr(d, "m", None)
+        if self.ladder is not None and m is not None and m != self.model:
+            swap_pen = float(self.ladder.swap_cost(m))
+            self.model = m
+            # in place: both engines alias self._lat across dispatches
+            self._lat.clear()
+            self._lat.update(self._lat_by_m[m])
+            self.model_log.append((now, m, self.ladder.accuracy(m)))
         pen = self.resize_penalty
         for r in reps:
             r.account(now)
@@ -506,6 +665,8 @@ class _FleetRunnerBase:
                 r.c = c
                 if pen:
                     r.busy_until = max(r.busy_until, now) + pen
+            if swap_pen:
+                r.busy_until = max(r.busy_until, now) + swap_pen
         if n > len(reps):
             delay = getattr(d, "scale_up_delay", 0.0)
             for _ in range(n - len(reps)):
@@ -529,11 +690,29 @@ class _FleetRunnerBase:
                 horizon: float) -> RunReport:
         """Aggregate through the shared ``serving.api.build_array_report``
         (same served/violation/percentile/core-second conventions as the
-        single-replica fast path, by construction)."""
-        return build_array_report(self.policy, self.backend_name, batch,
-                                  finish, horizon,
-                                  self.replicas + self.dead,
-                                  self.core_samples, self.bucket_log)
+        single-replica fast path, by construction); ladder runs add the
+        accuracy-weighted goodput axes from the resident-model
+        timeline."""
+        rep = build_array_report(self.policy, self.backend_name, batch,
+                                 finish, horizon,
+                                 self.replicas + self.dead,
+                                 self.core_samples, self.bucket_log)
+        return self._enrich_report(rep, finish, batch.deadline, horizon)
+
+    def _enrich_report(self, rep: RunReport, finish: np.ndarray,
+                       deadline: np.ndarray, horizon: float) -> RunReport:
+        """Attach the degradation axes (accuracy-weighted goodput, swap
+        count, resident-model timeline) on ladder runs — shared by the
+        closed-world report above and the online ``FleetSession`` report,
+        so the two cannot drift on the metric."""
+        if self.ladder is None:
+            return rep
+        agp, macc = accuracy_weighted_goodput(finish, deadline,
+                                              self.model_log, horizon)
+        return replace(rep, accuracy_goodput=agp,
+                       mean_served_accuracy=macc,
+                       model_swaps=len(self.model_log) - 1,
+                       model_timeline=list(self.model_log))
 
 
 class FleetFastSimRunner(_FleetRunnerBase):

@@ -37,6 +37,13 @@ Registered scenarios (see ``docs/scenarios.md`` for the full briefs):
   joint horizontal + vertical engines in ``repro.serving.fleet``):
   mid-run replica loss, a rolling deploy under live traffic, and
   arrival spikes against a peak-provisioned static-fleet baseline.
+* ``degrade-sustained-overload`` / ``degrade-flash-overload`` /
+  ``degrade-fade-overload`` — degrade-under-pressure scenarios: fleet
+  scenarios whose meta additionally carries a model-ladder spec
+  (``meta["ladder"]``, resolved via ``repro.core.degradation``) and an
+  ``accuracy_floor`` — the (m, n, c, b) planner sheds model size only
+  when no (n, c, b) at the resident rung is feasible, and never below
+  the floor.
 * ``llm-heavy-tail``  — chat traffic with *heavy-tailed* decode lengths
   (lognormal sigma=1.4, p90 ~6x the median) whose generating
   distribution is declared to the scheduler (``meta["decode_dist"]``):
@@ -499,6 +506,101 @@ register(Scenario(
 
 
 # --------------------------------------------------------------------------
+# degrade-under-pressure scenarios (model ladder — ISSUE 9)
+# --------------------------------------------------------------------------
+def _degrade_meta(rps: float, trace, *, n0: int,
+                  accuracy_floor: float = 0.60, events=()) -> dict:
+    """Fleet meta plus the model-ladder keys: ``ladder`` is a *spec*
+    (resolved by :func:`repro.core.degradation.resolve_ladder` at run
+    time, so the meta stays JSON-serializable) and ``accuracy_floor``
+    bounds how far the (m, n, c, b) solver may shed.  The 0.60 default
+    admits smollm-360m (0.64) but fences off smollm-135m (0.58) — the
+    floor does real work in every degrade scenario."""
+    meta = _fleet_meta(rps, trace, n0=n0, events=events)
+    meta.update(ladder="default", accuracy_floor=accuracy_floor)
+    return meta
+
+
+def _build_degrade_sustained(duration, rps, rng):
+    seed = int(rng.integers(2**31))
+    trace = synth_4g_trace(_trace_seconds(duration), seed=seed)
+    send = poisson_times(rps, duration, rng)
+    cl = comm_latency_many(np.full(send.shape, 200.0), trace, send)
+    batch = RequestBatch.from_send(send, cl, slo=1.0, size_kb=200.0)
+    return batch, _degrade_meta(rps, trace, n0=8)
+
+
+register(Scenario(
+    name="degrade-sustained-overload",
+    summary="arrivals hold well above the top rung's full-fleet ceiling "
+            "for the whole run — the (m, n, c, b) planner must shed "
+            "accuracy (never below the floor) to keep the SLO",
+    build=_build_degrade_sustained, default_rps=180.0,
+    default_duration=600.0))
+
+
+def _build_degrade_flash(duration, rps, rng):
+    seed = int(rng.integers(2**31))
+    trace = synth_4g_trace(_trace_seconds(duration), seed=seed)
+    start, width, mult = 0.35, 0.15, 3.2     # one long over-capacity spike
+
+    def rate(t):
+        s = start * duration
+        return np.where((t >= s) & (t < s + width * duration),
+                        rps * mult, float(rps))
+
+    send = inhomogeneous_poisson_times(rate, rps * mult, duration, rng)
+    cl = comm_latency_many(np.full(send.shape, 200.0), trace, send)
+    batch = RequestBatch.from_send(send, cl, slo=1.0, size_kb=200.0)
+    return batch, _degrade_meta(rps, trace, n0=8)
+
+
+register(Scenario(
+    name="degrade-flash-overload",
+    summary="comfortable base load, then a 3.2x flash crowd beyond the "
+            "top rung's capacity — shed for the spike, recover "
+            "(hysteretic swap-back) once it passes",
+    build=_build_degrade_flash, default_rps=55.0,
+    default_duration=600.0,
+    mean_rate_factor=1.33))    # 1 + 0.15*(3.2-1)
+
+
+def _build_degrade_fade(duration, rps, rng):
+    seed = int(rng.integers(2**31))
+    trace = synth_4g_trace(_trace_seconds(duration), seed=seed)
+
+    lo, hi, surge = 0.40 * duration, 0.70 * duration, 2.4
+
+    def rate(t):
+        return np.where((t >= lo) & (t < hi), rps * surge, float(rps))
+
+    send = inhomogeneous_poisson_times(rate, rps * surge, duration, rng)
+    cl = comm_latency_many(np.full(send.shape, 200.0), trace, send)
+    # a mid-run network fade stretches comm latency 4x, capped at
+    # 0.8 s, while the arrival rate surges 2.4x inside the same
+    # window: the surviving 0.2 s compute budget caps the top rung at
+    # single-item batches, whose fleet-wide ceiling sits well below
+    # the surged rate — only a smaller rung clears both the deadline
+    # and the rate at once
+    fade = (send >= lo) & (send < hi)
+    cl = np.where(fade, np.minimum(cl * 4.0, 0.80), cl)
+    batch = RequestBatch.from_send(send, cl, slo=1.0, size_kb=200.0)
+    return batch, _degrade_meta(rps, trace, n0=8)
+
+
+register(Scenario(
+    name="degrade-fade-overload",
+    summary="a network fade stretches comm latency 4x (deadlines "
+            "tighten to the top rung's single-item latency) while "
+            "the arrival rate surges 2.4x inside the fade window — "
+            "overload arrives through the SLO budget and the rate "
+            "at once",
+    build=_build_degrade_fade, default_rps=55.0,
+    default_duration=600.0,
+    mean_rate_factor=1.42))    # 1 + 0.3*(2.4-1)
+
+
+# --------------------------------------------------------------------------
 # multi-tenant scenarios (shared core pool — ISSUE 6)
 # --------------------------------------------------------------------------
 def _whisper_like() -> PerfModel:
@@ -801,6 +903,8 @@ def run_scenario(name: str, *, policy: str = "sponge",
                  pool_cores: Optional[int] = None,
                  admission_quantile: Optional[float] = None,
                  speculative: bool = True,
+                 model_ladder=None,
+                 accuracy_floor: Optional[float] = None,
                  **policy_kw):
     """Run a registered scenario end to end; returns ``(RunReport,
     stats)`` where ``stats`` carries engine/meta/solver-cache info.
@@ -829,6 +933,14 @@ def run_scenario(name: str, *, policy: str = "sponge",
     deterministic-cost baseline; ``None`` takes the scenario default),
     ``speculative=False`` turns off over-admission with
     cancel-on-overrun while keeping quantile drag.
+
+    Fleet scenarios additionally accept ``model_ladder`` (a ladder spec
+    — see ``repro.core.degradation.resolve_ladder``; overrides
+    ``meta["ladder"]``) and ``accuracy_floor``: with a ladder attached,
+    ``policy="sponge"`` runs the (m, n, c, b)
+    :class:`~repro.serving.fleet.DegradingFleetScaler` and
+    ``policy="fixed-<arch>"`` the same machinery pinned to one rung
+    (the accuracy-reporting fixed-model baseline).
     """
     import time
     from repro.serving.api import make_policy, make_sim_server
@@ -849,6 +961,11 @@ def run_scenario(name: str, *, policy: str = "sponge",
         raise ValueError(
             "admission_quantile applies to token scenarios only "
             f"(scenario {name!r} is not token-based)")
+    if ((model_ladder is not None or accuracy_floor is not None)
+            and not meta.get("fleet")):
+        raise ValueError(
+            "model_ladder/accuracy_floor apply to fleet scenarios only "
+            f"(scenario {name!r} is not fleet-based)")
     if meta.get("token"):
         return _run_token_scenario(batch, meta, policy=policy,
                                    engine=engine, c_set=c_set, b_set=b_set,
@@ -872,6 +989,8 @@ def run_scenario(name: str, *, policy: str = "sponge",
                                    budget_quantum=budget_quantum,
                                    lam_quantum=lam_quantum,
                                    replicas=replicas, router=router,
+                                   model_ladder=model_ladder,
+                                   accuracy_floor=accuracy_floor,
                                    **policy_kw)
     if meta.get("session_events") is not None:
         return _run_session_scenario(batch, meta, policy=policy,
@@ -984,6 +1103,8 @@ def _run_fleet_scenario(batch: RequestBatch, meta: dict, *, policy: str,
                         tick: float, horizon,
                         budget_quantum: float, lam_quantum: float,
                         replicas: Optional[int], router: Optional[str],
+                        model_ladder=None,
+                        accuracy_floor: Optional[float] = None,
                         **policy_kw):
     """Fleet-scenario execution: the joint horizontal + vertical engines.
 
@@ -996,17 +1117,50 @@ def _run_fleet_scenario(batch: RequestBatch, meta: dict, *, policy: str,
     ``policy="static-<cores>"`` pins a
     :class:`~repro.serving.fleet.StaticFleetPolicy` at the deploy fleet
     size (the ``benchmarks/fleet_bench.py`` baseline).
+
+    With a model ladder attached (``model_ladder`` argument or
+    ``meta["ladder"]`` — the degrade-under-pressure family),
+    ``policy="sponge"`` runs the (m, n, c, b)
+    :class:`~repro.serving.fleet.DegradingFleetScaler` over the full
+    ladder and ``policy="fixed-<arch>"`` runs the identical machinery
+    over a single-rung ladder — the fixed-model baseline whose report
+    still carries accuracy-weighted goodput, so
+    ``benchmarks/degrade_bench.py`` compares like with like.
     """
     import time
-    from repro.serving.fleet import (FleetExactRunner, FleetFastSimRunner,
-                                     FleetSpongeScaler, StaticFleetPolicy)
+    from repro.core.degradation import ModelLadder, resolve_ladder
+    from repro.serving.fleet import (DegradingFleetScaler, FleetExactRunner,
+                                     FleetFastSimRunner, FleetSpongeScaler,
+                                     StaticFleetPolicy)
     n0 = int(replicas if replicas is not None else meta.get("n0", 1))
     c0 = int(meta.get("c0", max(c_set)))
     router = router if router is not None else meta.get("router",
                                                         "least-loaded")
     bq, lq = (budget_quantum, lam_quantum) if engine == "fast" else (0.0,
                                                                      0.0)
-    if policy == "sponge":
+    spec = model_ladder if model_ladder is not None else meta.get("ladder")
+    ladder = resolve_ladder(spec)
+    afloor = (float(accuracy_floor) if accuracy_floor is not None
+              else float(meta.get("accuracy_floor", 0.0)))
+    run_ladder = None
+    if ladder is not None and (policy == "sponge"
+                               or policy.startswith("fixed-")):
+        run_ladder = ladder
+        if policy.startswith("fixed-"):
+            # one-rung ladder: the same scaler/runner machinery pinned
+            # to a single model, so accuracy reporting stays comparable
+            run_ladder = ModelLadder([ladder.rung(policy[len("fixed-"):])])
+            afloor = 0.0
+        pol = DegradingFleetScaler(perf, c_set=tuple(c_set),
+                                   b_set=tuple(b_set),
+                                   adaptation_interval=tick,
+                                   budget_quantum=bq, lam_quantum=lq,
+                                   ladder=run_ladder,
+                                   accuracy_floor=afloor,
+                                   name=policy if policy != "sponge"
+                                   else "sponge-degrade",
+                                   **policy_kw)
+    elif policy == "sponge":
         pol = FleetSpongeScaler(perf, c_set=tuple(c_set),
                                 b_set=tuple(b_set),
                                 adaptation_interval=tick,
@@ -1022,17 +1176,22 @@ def _run_fleet_scenario(batch: RequestBatch, meta: dict, *, policy: str,
         c0 = cores
     else:
         raise ValueError(
-            f"fleet scenarios run 'sponge' or 'static-<cores>' policies "
-            f"(got {policy!r})")
+            f"fleet scenarios run 'sponge', 'static-<cores>' or (with a "
+            f"model ladder) 'fixed-<arch>' policies (got {policy!r})")
     cls = FleetFastSimRunner if engine == "fast" else FleetExactRunner
+    lkw = ({} if run_ladder is None
+           else dict(ladder=run_ladder, m0=pol.model))
     runner = cls(pol, perf, c_set, b_set, n0=n0, c0=c0, tick=tick,
-                 prior_rps=meta["expected_rps"], router=router)
+                 prior_rps=meta["expected_rps"], router=router, **lkw)
     t0 = time.perf_counter()
     report = runner.run(batch, horizon, events=meta.get("fleet_events", ()))
     stats = {"engine": engine, "events": runner.events_processed,
              "run_wall_s": time.perf_counter() - t0, "meta": meta,
              "max_replicas": runner.max_replicas, "router": router,
              "solver": pol.solver_stats()}
+    if run_ladder is not None:
+        stats["ladder"] = [r.name for r in run_ladder]
+        stats["accuracy_floor"] = afloor
     return report, stats
 
 

@@ -1265,8 +1265,10 @@ class FleetSession(_ColumnSession):
 
     def _report(self, horizon: float) -> RunReport:
         r = self.runner
-        return build_array_report(
-            r.policy, r.backend_name, self._columns_batch(),
-            np.asarray(self._finish, np.float64), horizon,
+        batch = self._columns_batch()
+        finish = np.asarray(self._finish, np.float64)
+        rep = build_array_report(
+            r.policy, r.backend_name, batch, finish, horizon,
             r.replicas + r.dead, r.core_samples, r.bucket_log,
             n_cancelled=self._n_cancelled)
+        return r._enrich_report(rep, finish, batch.deadline, horizon)

@@ -84,6 +84,27 @@ def test_fast_speedup_row_passes(tmp_path):
     assert problems == [], problems
 
 
+def test_degrade_gain_below_break_even_blocks(tmp_path):
+    """degrade* rows gate on acc_goodput_gain >= 1x: the planner must
+    never lose accuracy-weighted goodput to the top fixed rung."""
+    rows = [["degrade_flash-overload", 90.0,
+             "acc_goodput_gain=0.92x;agp=11000;swaps=15"]]
+    _write(tmp_path, "degrade",
+           [{"timestamp": "t", "commit": "c", "metrics": rows}])
+    problems, _ = bench_gate.run_gate(tmp_path)
+    assert any("0.9x below the 1x bar" in p for p in problems), problems
+
+
+def test_degrade_gain_uses_break_even_floor_not_speedup_bar(tmp_path):
+    """A 1.2x gain passes: degrade rows use the 1x prefix floor, not
+    the generic 10x speedup bar."""
+    rows = [["degrade_total", 90.0, "acc_goodput_gain=1.22x;agp=54000"]]
+    _write(tmp_path, "degrade",
+           [{"timestamp": "t", "commit": "c", "metrics": rows}])
+    problems, _ = bench_gate.run_gate(tmp_path)
+    assert problems == [], problems
+
+
 def test_unreadable_file_blocks(tmp_path):
     (tmp_path / "BENCH_tenant.json").write_text("{not json",
                                                 encoding="utf-8")

@@ -1,0 +1,488 @@
+"""Model-size degradation (ISSUE 9): ladder, (m, n, c, b) solver, fleet.
+
+The acceptance contracts pinned here:
+
+* **Pinned-m reduction** — ``MultiModelSolverTable`` with a single
+  admissible rung is bit-identical to the PR 4 ``JointSolverTable`` on
+  that rung (``solver_iters`` included: it is a pure delegation, not a
+  re-derivation).
+* **Monotone shed** — a feasible (m, n, c, b) decision sheds accuracy
+  only when every strictly higher-accuracy admissible rung has no
+  feasible (n, c, b); the floor fences rungs out of the search.
+* **Swap accounting** — the weights-load penalty delays dispatch
+  (busy_until) but never inflates core-second accounting, in both
+  fleet engines, and in-flight work drains before the swap lands.
+* **Engine identity** — ``FleetFastSimRunner`` == ``FleetExactRunner``
+  decision-for-decision (model swaps included) on every
+  degrade-under-pressure scenario.
+"""
+import numpy as np
+import pytest
+from _hyp import given, settings, st  # guarded hypothesis import
+
+from repro.core.degradation import (DEFAULT_LADDER_ARCHS, FULL_LADDER_ARCHS,
+                                    ModelLadder, ModelRung, default_ladder,
+                                    resolve_ladder)
+from repro.core.monitor import accuracy_weighted_goodput
+from repro.core.perf_model import PerfModel, yolov5s_like
+from repro.core.slo import Decision
+from repro.core.solver import (DEFAULT_B, DEFAULT_C, JointSolverTable,
+                               MultiModelMemoizedSolver,
+                               MultiModelSolverTable, solve_joint_bruteforce,
+                               solve_multimodel_bruteforce)
+from repro.serving.fleet import (DegradingFleetScaler, FleetExactRunner,
+                                 FleetFastSimRunner)
+from repro.serving.scenarios import SCENARIOS, build_scenario, run_scenario
+
+PERF = yolov5s_like()
+N_SET = (1, 2, 4, 8, 16)
+LADDER = default_ladder()
+DEGRADE_SCENARIOS = ("degrade-sustained-overload", "degrade-flash-overload",
+                     "degrade-fade-overload")
+
+
+def _slowed(s: float) -> PerfModel:
+    return PerfModel(gamma=PERF.gamma * s, eps=PERF.eps * s,
+                     delta=PERF.delta * s, eta=PERF.eta * s)
+
+
+def _two_rung_ladder(swap_big: float = 0.5, swap_small: float = 0.1
+                     ) -> ModelLadder:
+    """A synthetic big/small ladder with an 8x latency gap — wide enough
+    to place budgets between the rungs deterministically."""
+    return ModelLadder([
+        ModelRung("big", 0.9, _slowed(8.0), swap_cost=swap_big),
+        ModelRung("small", 0.6, PERF, swap_cost=swap_small)])
+
+
+# --------------------------------------------------------------------------
+# ladder construction + resolution
+# --------------------------------------------------------------------------
+def test_ladder_validates_and_orders():
+    lad = _two_rung_ladder()
+    assert [r.name for r in lad] == ["big", "small"]  # accuracy-descending
+    assert lad.accuracy("big") == 0.9 and lad.swap_cost("small") == 0.1
+    assert "big" in lad and "nope" not in lad
+    with pytest.raises(KeyError):
+        lad.rung("nope")
+    with pytest.raises(ValueError):
+        ModelLadder([])
+    with pytest.raises(ValueError):                       # duplicate name
+        ModelLadder([ModelRung("a", 0.9, PERF), ModelRung("a", 0.5, PERF)])
+    with pytest.raises(ValueError):                       # duplicate accuracy
+        ModelLadder([ModelRung("a", 0.9, PERF), ModelRung("b", 0.9, PERF)])
+    with pytest.raises(ValueError):                       # accuracy range
+        ModelLadder([ModelRung("a", 1.5, PERF)])
+
+
+def test_ladder_floor_and_pins():
+    lad = _two_rung_ladder()
+    assert lad.best().name == "big"
+    assert lad.best(0.95) if False else True
+    with pytest.raises(ValueError):
+        lad.best(0.95)                    # floor above every rung
+    assert [r.name for r in lad.admissible(0.7)] == ["big"]
+    assert [r.name for r in lad.admissible(0.0, m_set=("small",))] == \
+        ["small"]
+    with pytest.raises(ValueError):
+        lad.admissible(0.7, m_set=("small",))   # pin below the floor
+
+
+def test_resolve_ladder_specs():
+    assert resolve_ladder(None) is None
+    assert resolve_ladder(LADDER) is LADDER
+    assert [r.name for r in resolve_ladder("default")] == \
+        [r.name for r in default_ladder()]
+    full = resolve_ladder("full")
+    assert {r.name for r in full} == set(FULL_LADDER_ARCHS)
+    two = resolve_ladder("smollm-135m, gemma-2b")
+    assert {r.name for r in two} == {"smollm-135m", "gemma-2b"}
+    seq = resolve_ladder(("smollm-135m", "smollm-360m"))
+    assert {r.name for r in seq} == {"smollm-135m", "smollm-360m"}
+
+
+def test_default_ladder_is_deterministic_and_swap_scaled():
+    a, b = default_ladder(), default_ladder()
+    for ra, rb in zip(a, b):
+        assert ra.name == rb.name and ra.swap_cost == rb.swap_cost
+        assert ra.cost.latency(4, 8) == rb.cost.latency(4, 8)
+    # bigger total weights, longer load: gemma-2b dwarfs smollm-135m
+    assert a.swap_cost("gemma-2b") > a.swap_cost("smollm-135m") > 0.0
+    # larger active models are slower at every probed shape
+    assert a.cost("gemma-2b").latency(1, 16) > \
+        a.cost("smollm-135m").latency(1, 16)
+
+
+# --------------------------------------------------------------------------
+# the pinned-m reduction: bit-identity with the PR 4 joint solver
+# --------------------------------------------------------------------------
+def _decision_key(d: Decision):
+    return (d.c, d.b, d.n, d.feasible, d.solver_iters)
+
+
+def test_pinned_m_reduces_to_joint_solver():
+    """m_set=(rung,) + current_m=rung is a pure delegation: every field
+    of the PR 4 joint decision survives, solver_iters included."""
+    mm = MultiModelSolverTable(LADDER, n_set=N_SET)
+    rng = np.random.default_rng(0)
+    for trial in range(40):
+        rung = LADDER[trial % len(LADDER)]
+        joint = JointSolverTable(rung.cost, n_set=N_SET)
+        n = int(rng.integers(0, 30))
+        rem = np.sort(rng.uniform(0.0, 2.5, n))
+        lam = float(rng.uniform(0, 300))
+        iw = float(rng.uniform(0, 0.4))
+        d1 = joint.solve(rem, lam, initial_wait=iw)
+        d2 = mm.solve(rem, lam, initial_wait=iw,
+                      m_set=(rung.name,), current_m=rung.name)
+        assert _decision_key(d1) == _decision_key(d2), (trial, rung.name)
+        assert d2.m == rung.name
+        # a floor that admits only this rung reduces identically too
+        d3 = mm.solve(rem, lam, initial_wait=iw, m_set=(rung.name,),
+                      current_m=rung.name,
+                      accuracy_floor=rung.accuracy - 1e-9)
+        assert _decision_key(d1) == _decision_key(d3)
+
+
+def test_table_matches_bruteforce():
+    """MultiModelSolverTable == solve_multimodel_bruteforce, fallback
+    ordering included, across floors / pins / resident models."""
+    mm = MultiModelSolverTable(LADDER, n_set=N_SET)
+    names = [r.name for r in LADDER]
+    rng = np.random.default_rng(1)
+    for trial in range(60):
+        n = int(rng.integers(0, 25))
+        rem = np.sort(rng.uniform(0.0, 2.0, n))
+        lam = float(rng.uniform(0, 400))
+        iw = float(rng.uniform(0, 0.3))
+        floor = float(rng.choice([0.0, 0.6, 0.65]))
+        cur = names[int(rng.integers(0, len(names)))] \
+            if rng.random() < 0.7 else None
+        d1 = solve_multimodel_bruteforce(rem, lam, LADDER, n_set=N_SET,
+                                         initial_wait=iw,
+                                         accuracy_floor=floor,
+                                         current_m=cur)
+        d2 = mm.solve(rem, lam, initial_wait=iw, accuracy_floor=floor,
+                      current_m=cur)
+        assert (d1.m, d1.c, d1.b, d1.n, d1.feasible) == \
+            (d2.m, d2.c, d2.b, d2.n, d2.feasible), trial
+
+
+def test_memoized_matches_table_and_caches():
+    memo = MultiModelMemoizedSolver(LADDER, n_set=N_SET)
+    rem = np.array([0.5, 0.8, 1.2])
+    d1 = memo.solve(rem, 40.0, accuracy_floor=0.6, current_m="gemma-2b")
+    d2 = memo.solve(rem, 40.0, accuracy_floor=0.6, current_m="gemma-2b")
+    assert (d1.m, d1.c, d1.b, d1.n) == (d2.m, d2.c, d2.b, d2.n)
+    assert memo.hits >= 1
+    # the resident model is part of the cache key, not folded away
+    d3 = memo.solve(rem, 40.0, accuracy_floor=0.6,
+                    current_m="smollm-360m")
+    assert d3.m is not None
+
+
+# --------------------------------------------------------------------------
+# monotone shed + the accuracy floor
+# --------------------------------------------------------------------------
+@given(st.lists(st.floats(0.05, 2.0), min_size=0, max_size=25),
+       st.floats(0.0, 400.0), st.floats(0.0, 0.3))
+@settings(deadline=None, max_examples=40)
+def test_feasible_decision_sheds_monotonically(rem, lam, iw):
+    """The chosen rung of a *feasible* decision is the highest-accuracy
+    admissible rung with any feasible (n, c, b): every strictly more
+    accurate rung is infeasible under its own joint solve."""
+    rem = sorted(rem)
+    d = solve_multimodel_bruteforce(rem, lam, LADDER, n_set=N_SET,
+                                    initial_wait=iw, accuracy_floor=0.6)
+    if not d.feasible:
+        return
+    acc = LADDER.accuracy(d.m)
+    assert acc >= 0.6 - 1e-12           # the floor fences the shed
+    for rung in LADDER.admissible(0.6):
+        dj = solve_joint_bruteforce(rem, lam, rung.cost, n_set=N_SET,
+                                    initial_wait=iw)
+        if rung.accuracy > acc:
+            assert not dj.feasible, (rung.name, d.m)
+        elif rung.name == d.m:
+            assert dj.feasible
+
+
+def test_feasible_decision_sheds_monotonically_seeded():
+    """Deterministic fuzz twin of the hypothesis property above, so the
+    monotone-shed contract is exercised even where hypothesis is
+    absent."""
+    rng = np.random.default_rng(9)
+    checked = 0
+    for _ in range(60):
+        rem = np.sort(rng.uniform(0.05, 2.0, int(rng.integers(0, 25))))
+        lam = float(rng.uniform(0, 200))
+        iw = float(rng.uniform(0, 0.3))
+        d = solve_multimodel_bruteforce(rem, lam, LADDER, n_set=N_SET,
+                                        initial_wait=iw,
+                                        accuracy_floor=0.6)
+        if not d.feasible:
+            continue
+        checked += 1
+        acc = LADDER.accuracy(d.m)
+        assert acc >= 0.6 - 1e-12
+        for rung in LADDER.admissible(0.6):
+            if rung.accuracy > acc:
+                dj = solve_joint_bruteforce(rem, lam, rung.cost,
+                                            n_set=N_SET, initial_wait=iw)
+                assert not dj.feasible, (rung.name, d.m)
+    assert checked >= 10          # the fuzz actually hit feasible cases
+
+
+def test_relaxed_budgets_never_shed():
+    d = solve_multimodel_bruteforce([5.0, 6.0], 2.0, LADDER, n_set=N_SET)
+    assert d.feasible and d.m == LADDER[0].name
+
+
+def test_floor_above_ladder_raises():
+    with pytest.raises(ValueError):
+        solve_multimodel_bruteforce([], 1.0, LADDER, n_set=N_SET,
+                                    accuracy_floor=0.99)
+
+
+def test_swap_cost_gates_non_resident_rungs():
+    """A lower rung that is feasible only without its weights-load time
+    is NOT a legal shed target while non-resident: the solver must keep
+    degrading (or fall back) rather than plan on weights it does not
+    have."""
+    lad = _two_rung_ladder(swap_big=0.5, swap_small=10.0)
+    small_lat = float(PERF.latency(1, 16))
+    big_lat = float(lad.cost("big").latency(1, 16))
+    budget = (small_lat + big_lat) / 2.0      # small fits, big does not
+    rem = np.full(3, budget)
+    # resident on small: no swap charge, small is feasible
+    d_res = solve_multimodel_bruteforce(rem, 1.0, lad, n_set=N_SET,
+                                        current_m="small")
+    assert d_res.feasible and d_res.m == "small"
+    # resident on big: small costs 10 s of weights first — infeasible
+    d_swap = solve_multimodel_bruteforce(rem, 1.0, lad, n_set=N_SET,
+                                         current_m="big")
+    assert not d_swap.feasible
+
+
+def test_all_infeasible_fallback_prefers_sustaining_rung():
+    """Dead backlog, λ above the top rung's ceiling: every rung predicts
+    the same queued violations, and the capacity-accuracy product must
+    hand the fallback to a rung that absorbs λ — not lock onto the top
+    rung on raw accuracy (the sustained-overload regression)."""
+    mm = MultiModelSolverTable(LADDER, n_set=N_SET)
+    tops = {r.name: mm.tables[r.name].max_rate(None) for r in LADDER}
+    rem = np.zeros(40)                       # every deadline already blown
+    lam_mid = (tops["gemma-2b"] + tops["smollm-360m"]) / 2.0
+    d = mm.solve(rem, lam_mid, accuracy_floor=0.6)
+    assert not d.feasible
+    assert tops[d.m] >= lam_mid, (d.m, tops)
+    assert d.m != "gemma-2b"
+    # ...and when λ is low enough for every rung to absorb, raw accuracy
+    # decides again: the top rung wins the fallback
+    d_low = mm.solve(rem, min(tops.values()) * 0.5, accuracy_floor=0.6)
+    assert d_low.m == "gemma-2b"
+    # bruteforce agrees on both fallback picks
+    for lam in (lam_mid, min(tops.values()) * 0.5):
+        db = solve_multimodel_bruteforce(rem, lam, LADDER, n_set=N_SET,
+                                         accuracy_floor=0.6)
+        dt = mm.solve(rem, lam, accuracy_floor=0.6)
+        assert db.m == dt.m
+
+
+# --------------------------------------------------------------------------
+# accuracy-weighted goodput
+# --------------------------------------------------------------------------
+def test_accuracy_weighted_goodput_unit():
+    # swap at t=5: requests finishing before it score 0.9, after 0.6
+    log = [(0.0, "big", 0.9), (5.0, "small", 0.6)]
+    finish = np.array([1.0, 6.0, 8.0, np.nan])
+    deadline = np.array([2.0, 7.0, 7.5, 9.0])   # third one is late
+    agp, macc = accuracy_weighted_goodput(finish, deadline, log, 10.0)
+    assert agp == pytest.approx((0.9 + 0.6) / 10.0)
+    # macc averages over *served* requests, late ones included
+    assert macc == pytest.approx((0.9 + 0.6 + 0.6) / 3.0)
+    agp0, macc0 = accuracy_weighted_goodput(
+        np.array([np.nan]), np.array([1.0]), log, 10.0)
+    assert agp0 == 0.0 and np.isnan(macc0)
+
+
+# --------------------------------------------------------------------------
+# scaler: asymmetric swap hysteresis
+# --------------------------------------------------------------------------
+def test_shed_commits_fast_recovery_commits_slow():
+    lad = _two_rung_ladder()
+    sc = DegradingFleetScaler(PERF, ladder=lad, adaptation_interval=1.0,
+                              shed_patience=2, swap_patience=3,
+                              scale_up_delay=0.0)
+    assert sc.model == "big"
+    overload = np.full(6, 0.4)      # big (~0.6 s single-item) cannot fit
+    calm = np.empty(0)
+    d = sc.decide_fleet(0.0, overload, 5.0, active_n=1)
+    assert sc.model == "big" and d.m == "big"     # held: streak 1 < 2
+    d = sc.decide_fleet(1.0, overload, 5.0, active_n=1)
+    assert sc.model == "small" and d.m == "small"  # shed committed
+    # recovery proposals must persist swap_patience=3 ticks
+    d = sc.decide_fleet(2.0, calm, 5.0, active_n=1)
+    assert sc.model == "small" and d.m == "small"
+    d = sc.decide_fleet(3.0, calm, 5.0, active_n=1)
+    assert sc.model == "small"
+    d = sc.decide_fleet(4.0, calm, 5.0, active_n=1)
+    assert sc.model == "big" and d.m == "big"      # recovery committed
+
+
+def test_resident_proposal_resets_swap_streak():
+    lad = _two_rung_ladder()
+    sc = DegradingFleetScaler(PERF, ladder=lad, adaptation_interval=1.0,
+                              shed_patience=2, swap_patience=3,
+                              scale_up_delay=0.0)
+    sc.decide_fleet(0.0, np.full(6, 0.4), 5.0, active_n=1)
+    sc.decide_fleet(1.0, np.full(6, 0.4), 5.0, active_n=1)
+    assert sc.model == "small"
+    sc.decide_fleet(2.0, np.empty(0), 5.0, active_n=1)   # big, streak 1
+    sc.decide_fleet(3.0, np.full(6, 0.4), 5.0, active_n=1)  # resident wins
+    assert sc._swap_streak == 0 and sc.model == "small"
+    sc.decide_fleet(4.0, np.empty(0), 5.0, active_n=1)   # streak restarts
+    sc.decide_fleet(5.0, np.empty(0), 5.0, active_n=1)
+    assert sc.model == "small"                           # 2 < 3: still held
+    sc.decide_fleet(6.0, np.empty(0), 5.0, active_n=1)
+    assert sc.model == "big"
+
+
+def test_scaler_requires_ladder_and_validates_m0():
+    with pytest.raises(ValueError):
+        DegradingFleetScaler(PERF)
+    with pytest.raises(KeyError):
+        DegradingFleetScaler(PERF, ladder=_two_rung_ladder(), m0="nope")
+    sc = DegradingFleetScaler(PERF, ladder=_two_rung_ladder(),
+                              accuracy_floor=0.7)
+    assert sc.model == "big"        # best rung above the floor
+
+
+# --------------------------------------------------------------------------
+# runners: drain-before-swap + core-second accounting (both engines)
+# --------------------------------------------------------------------------
+@pytest.mark.parametrize("cls", (FleetFastSimRunner, FleetExactRunner))
+def test_swap_penalty_delays_dispatch_not_core_seconds(cls):
+    lad = _two_rung_ladder()
+
+    def mk(with_ladder):
+        sc = DegradingFleetScaler(PERF, ladder=lad,
+                                  adaptation_interval=1.0)
+        kw = dict(ladder=lad, m0="big") if with_ladder else {}
+        return cls(sc, PERF, DEFAULT_C, DEFAULT_B, n0=2, c0=8, **kw)
+
+    runner = mk(True)
+    twin = mk(True)
+    inflight = runner.replicas[0]
+    inflight.busy_until = 12.5                 # old-model batch in flight
+    runner._apply(Decision(c=8, b=2, n=2, m="small"), now=10.0)
+    # drain-before-swap: the in-flight batch finishes first, THEN the
+    # weights load; the idle replica pays the load from `now`
+    assert inflight.busy_until == pytest.approx(12.5 + 0.1)
+    assert runner.replicas[1].busy_until == pytest.approx(10.0 + 0.1)
+    assert runner.model == "small"
+    assert runner._lat == runner._lat_by_m["small"]
+    assert runner.model_log == [(0.0, "big", 0.9), (10.0, "small", 0.6)]
+    # swap penalties never inflate core-second accounting: the twin
+    # applies the identical allocation without the swap and integrates
+    # the same core-seconds to any later time
+    twin.replicas[0].busy_until = 12.5
+    twin._apply(Decision(c=8, b=2, n=2, m="big"), now=10.0)
+    for r_sw, r_ns in zip(runner.replicas, twin.replicas):
+        r_sw.account(50.0)
+        r_ns.account(50.0)
+        assert r_sw.core_seconds == pytest.approx(r_ns.core_seconds)
+    assert twin.model_log == [(0.0, "big", 0.9)]   # no swap logged
+
+
+@pytest.mark.parametrize("cls", (FleetFastSimRunner, FleetExactRunner))
+def test_ladder_runner_validates_m0_and_cold_lat(cls):
+    lad = _two_rung_ladder()
+    sc = DegradingFleetScaler(PERF, ladder=lad, adaptation_interval=1.0)
+    with pytest.raises(KeyError):
+        cls(sc, PERF, DEFAULT_C, DEFAULT_B, n0=1, c0=8,
+            ladder=lad, m0="nope")
+    r = cls(sc, PERF, DEFAULT_C, DEFAULT_B, n0=1, c0=8, ladder=lad)
+    assert r.model == "big"                    # policy's resident rung
+    assert r._lat[(8, 2)] == pytest.approx(
+        float(lad.cost("big").latency(2, 8)))
+
+
+# --------------------------------------------------------------------------
+# engine identity under model swaps (the ISSUE 9 oracle bar)
+# --------------------------------------------------------------------------
+def _sig(rep):
+    decs = [(t, d.c, d.b, d.n, d.m, d.scale_up_delay, d.feasible)
+            for t, d in (rep.decisions or [])]
+    return (decs, rep.buckets, rep.n_requests, rep.n_violations,
+            rep.core_seconds, rep.p50, rep.p99, rep.core_timeline,
+            rep.accuracy_goodput, rep.mean_served_accuracy,
+            rep.model_swaps, rep.model_timeline)
+
+
+@pytest.mark.parametrize("name", DEGRADE_SCENARIOS)
+def test_degrade_engine_identity_with_swaps(name):
+    """Fast engine == exact gang loop on the degrade scenarios — model
+    swaps, drain penalties, accuracy metrics and all."""
+    batch, meta = build_scenario(name, duration=60, seed=3)
+    ladder = resolve_ladder(meta["ladder"])
+
+    def mk():
+        return DegradingFleetScaler(
+            PERF, adaptation_interval=meta["tick"],
+            budget_quantum=0.01, lam_quantum=0.5, ladder=ladder,
+            accuracy_floor=meta["accuracy_floor"])
+
+    kw = dict(n0=meta["n0"], c0=meta["c0"], tick=meta["tick"],
+              prior_rps=meta["expected_rps"], router=meta["router"])
+    p1, p2 = mk(), mk()
+    fast = FleetFastSimRunner(p1, PERF, DEFAULT_C, DEFAULT_B,
+                              ladder=ladder, m0=p1.model, **kw)
+    exact = FleetExactRunner(p2, PERF, DEFAULT_C, DEFAULT_B,
+                             ladder=ladder, m0=p2.model, **kw)
+    got = _sig(fast.run(batch, events=meta["fleet_events"]))
+    ref = _sig(exact.run(batch, events=meta["fleet_events"]))
+    assert got == ref
+    assert got[10] > 0, "scenario exercised no model swap"
+
+
+# --------------------------------------------------------------------------
+# scenarios + run_scenario plumbing
+# --------------------------------------------------------------------------
+def test_degrade_scenarios_registered():
+    for name in DEGRADE_SCENARIOS:
+        assert name in SCENARIOS
+        batch, meta = build_scenario(name, duration=60, seed=1)
+        assert meta["fleet"] is True and len(batch) > 0
+        assert meta["ladder"] == "default"
+        assert meta["accuracy_floor"] == pytest.approx(0.60)
+
+
+def test_run_scenario_rejects_ladder_on_non_fleet():
+    with pytest.raises(ValueError, match="fleet scenarios only"):
+        run_scenario("steady", duration=5, model_ladder="default")
+
+
+def test_run_scenario_degradation_reporting():
+    rep, stats = run_scenario("degrade-flash-overload", duration=45,
+                              seed=3)
+    assert stats["ladder"] == list(DEFAULT_LADDER_ARCHS[::-1]) or \
+        set(stats["ladder"]) == set(DEFAULT_LADDER_ARCHS)
+    assert stats["accuracy_floor"] == pytest.approx(0.60)
+    assert rep.accuracy_goodput > 0.0
+    assert 0.0 < rep.mean_served_accuracy <= 1.0
+    assert rep.model_timeline[0][0] == 0.0
+    # the floor fences smollm-135m out of the planner's reach
+    assert all(m != "smollm-135m" for _, m, _ in rep.model_timeline)
+
+
+def test_fixed_rung_policy_reports_accuracy():
+    rep, stats = run_scenario("degrade-flash-overload", duration=45,
+                              seed=3, policy="fixed-smollm-360m")
+    assert rep.policy == "fixed-smollm-360m"
+    assert rep.model_swaps == 0
+    assert rep.mean_served_accuracy == pytest.approx(0.64)
+    assert stats["ladder"] == ["smollm-360m"]
+    with pytest.raises(KeyError):
+        run_scenario("degrade-flash-overload", duration=5,
+                     policy="fixed-no-such-arch")

@@ -52,3 +52,45 @@ def test_telemetry_policy_injects_inflight_budgets():
     assert len(sc.decisions) == 1
     d = sc.decisions[0][1]
     assert d.c > 1
+
+
+def test_predictive_feed_reads_live_snapshot_not_heap():
+    """Regression: a deadline re-key leaves a stale duplicate in the raw
+    heap and a cancel leaves a dead tuple — ``PredictivePolicy._feed``
+    must observe each live request exactly once and never a cancelled
+    one (it reads the live-entry snapshot, not ``_heap``)."""
+    from repro.core.predictive import PredictivePolicy
+
+    class _CountingScaler(PredictiveSpongeScaler):
+        def __init__(self, perf):
+            super().__init__(perf)
+            self.fed = []
+
+        def observe_comm_latency(self, cl):
+            self.fed.append(cl)
+            super().observe_comm_latency(cl)
+
+    class _Sim:
+        def __init__(self, queue, completed):
+            self.queue = queue
+            self.monitor = type("M", (), {"completed": completed})()
+
+    q = EDFQueue()
+    # kept holds the earliest deadline so the lazy ``_fix_top`` never
+    # gets a chance to sweep the stale tuples buried beneath it
+    kept = Request.make(arrival=0.0, comm_latency=0.11, slo=1.0)
+    rekeyed = Request.make(arrival=2.0, comm_latency=0.22, slo=1.0)
+    doomed = Request.make(arrival=5.0, comm_latency=0.33, slo=1.0)
+    for r in (kept, rekeyed, doomed):
+        q.push(r)
+    # re-key: pushes a fresh heap tuple, the old one goes stale in place
+    assert q.update_deadline(rekeyed.id, rekeyed.deadline + 0.5)
+    # cancel: removes from _live but the heap tuple remains
+    assert q.cancel(doomed.id) is doomed
+    assert len(q._heap) > len(q)  # the bug's precondition: stale tuples
+
+    pol = PredictivePolicy(_CountingScaler(yolov5s_like()))
+    pol._feed(_Sim(q, completed=[]))
+    assert sorted(pol.scaler.fed) == [0.11, 0.22]  # once each, no doomed
+    pol._feed(_Sim(q, completed=[]))
+    assert sorted(pol.scaler.fed) == [0.11, 0.22]  # _seen dedup holds

@@ -22,9 +22,16 @@ SERVING_EXPORTS = {
 
 SOLVER_EXPORTS = {
     "DEFAULT_B", "DEFAULT_C", "DEFAULT_N", "JointMemoizedSolver",
-    "JointSolverTable", "MemoizedSolver", "SolverTable",
-    "TokenMemoizedSolver", "TokenSolverTable", "solve_bruteforce",
-    "solve_joint_bruteforce", "solve_pruned", "solve_token_bruteforce",
+    "JointSolverTable", "MemoizedSolver", "MultiModelMemoizedSolver",
+    "MultiModelSolverTable", "SolverTable", "TokenMemoizedSolver",
+    "TokenSolverTable", "solve_bruteforce", "solve_joint_bruteforce",
+    "solve_multimodel_bruteforce", "solve_pruned",
+    "solve_token_bruteforce",
+}
+
+DEGRADATION_EXPORTS = {
+    "DEFAULT_LADDER_ARCHS", "FULL_LADDER_ARCHS", "ModelLadder",
+    "ModelRung", "default_ladder", "fit_rung_cost", "resolve_ladder",
 }
 
 UNCERTAINTY_EXPORTS = {
@@ -64,6 +71,17 @@ def test_solver_public_surface():
         f"missing from repro.core.solver: {SOLVER_EXPORTS - names}")
 
 
+def test_degradation_public_surface():
+    import repro.core.degradation as degradation
+    names = {n for n in _public_names(degradation)
+             if n == n.upper() or n[:1].isupper()
+             or n in ("default_ladder", "fit_rung_cost",
+                      "resolve_ladder")}
+    assert names >= DEGRADATION_EXPORTS, (
+        f"missing from repro.core.degradation: "
+        f"{DEGRADATION_EXPORTS - names}")
+
+
 def test_serving_no_longer_reexports_shims():
     """The PR 1 deprecation, finished: the shim names are gone from the
     package surface and only reachable through their warning modules."""
@@ -75,11 +93,26 @@ def test_serving_no_longer_reexports_shims():
 
 def test_shim_modules_warn_on_import():
     import importlib
-    import repro.serving.simulator as sim_shim
-    import repro.serving.engine as eng_shim
-    for shim in (sim_shim, eng_shim):
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        import repro.serving.simulator as sim_shim
+        import repro.serving.engine as eng_shim
+        import repro.core.multidim as multidim_shim
+    for shim in (sim_shim, eng_shim, multidim_shim):
         with pytest.warns(DeprecationWarning):
             importlib.reload(shim)
+
+
+def test_multidim_no_longer_patches_spongescaler():
+    """The deprecated multidim module must not mutate ``SpongeScaler``
+    at import time (the historical ``decide_shared`` monkey-patch)."""
+    import importlib
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        import repro.core.multidim as multidim_shim
+        importlib.reload(multidim_shim)
+    from repro.core.scaler import SpongeScaler
+    assert not hasattr(SpongeScaler, "decide_shared")
 
 
 def test_shims_still_functional_behind_the_warning():

@@ -12,11 +12,14 @@ the latest entry regresses:
    the trajectory.
 2. **Throughput rows** — harness-recorded row lists
    (``[name, us_per_call, derived]``) whose derived string carries a
-   ``speedup=<x>x`` figure must stay at or above its floor: the
-   generic ``MIN_SPEEDUP`` (the repo's 10x fast-vs-exact bar,
-   mirroring ``benchmarks/throughput_bench.py``) or a stricter
-   per-row floor from ``ROW_FLOORS`` (``throughput_vector*`` rows —
-   the batched-tick vectorpath engine — must hold >=100x).
+   ``speedup=<x>x`` or ``acc_goodput_gain=<x>x`` figure must stay at
+   or above its floor: the generic ``MIN_SPEEDUP`` (the repo's 10x
+   fast-vs-exact bar, mirroring ``benchmarks/throughput_bench.py``)
+   or a per-row floor from ``ROW_FLOORS`` (``throughput_vector*``
+   rows — the batched-tick vectorpath engine — must hold >=100x;
+   ``degrade*`` rows — the (m, n, c, b) planner's accuracy-weighted
+   goodput vs the top fixed rung — must hold >=1x, i.e. the planner
+   never loses to the rung it degrades from).
 
 A missing trajectory file is a *notice*, not a failure — benches only
 record on machines that ran them; the gate protects whatever history
@@ -41,13 +44,16 @@ SAVINGS_KEYS = {
 }
 SAVINGS_REGRESSION = 0.10     # latest may trail the best by at most 10%
 MIN_SPEEDUP = 10.0            # fast-vs-exact bar (throughput_bench)
-# per-row speedup floors by row-name prefix: rows the generic bar is too
-# lax for.  The vectorized batched-tick engine (ISSUE 8) must hold
-# >=100x over the pre-refactor loop, not merely the 10x fast-path bar.
+# per-row floors by row-name prefix: rows the generic bar is wrong
+# for.  The vectorized batched-tick engine (ISSUE 8) must hold >=100x
+# over the pre-refactor loop, not merely the 10x fast-path bar; the
+# degradation planner (ISSUE 9) reports accuracy-weighted-goodput
+# gains over the top fixed rung, where breaking even is the bar.
 ROW_FLOORS = {
     "throughput_vector": 100.0,
+    "degrade": 1.0,
 }
-_SPEEDUP = re.compile(r"speedup=([0-9.]+)x")
+_SPEEDUP = re.compile(r"(?:speedup|acc_goodput_gain)=([0-9.]+)x")
 
 
 def _row_floor(name: str) -> float:

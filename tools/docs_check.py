@@ -30,7 +30,7 @@ DOCSTRING_MODULES = ["repro.serving.api", "repro.serving.scenarios",
                      "repro.serving.fastpath", "repro.core.cost_model",
                      "repro.serving.token_backend", "repro.serving.fleet",
                      "repro.serving.session", "repro.serving.tenancy",
-                     "repro.core.uncertainty"]
+                     "repro.core.uncertainty", "repro.core.degradation"]
 
 
 def check_links() -> list[str]:
