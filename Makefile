@@ -3,15 +3,28 @@ export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
 .PHONY: verify test-fast smoke perf-smoke fig4 bench throughput \
 	token-bench fleet-bench session-bench tenant-bench \
-	uncertainty-bench degrade-bench docs-check bench-gate help
+	uncertainty-bench degrade-bench docs-check bench-gate lint help
 
 # tier-1 verification (the ROADMAP contract) + the benchmark
-# regression gate over recorded BENCH_*.json trajectories
+# regression gate over recorded BENCH_*.json trajectories + the
+# repo-specific AST lint (docs/linting.md)
 # companions: `make docs-check` (doc gates) and `make throughput`
 # (the million-request control-plane benchmark) — see `make help`
 verify:
 	$(PY) -m pytest -x -q
 	$(PY) tools/bench_gate.py
+	$(PY) -m tools.spongelint src tools benchmarks
+
+# spongelint (inline-drift / determinism / scan-purity /
+# deprecation-hygiene — docs/linting.md) + the ruff F+I baseline
+# (pyproject.toml); ruff is skipped with a note when not installed
+lint:
+	$(PY) -m tools.spongelint src tools benchmarks
+	@if command -v ruff >/dev/null 2>&1; then \
+		ruff check src tests tools benchmarks; \
+	else \
+		echo "lint: ruff not installed here — CI runs it (pip install ruff)"; \
+	fi
 
 # the fast tier-1 subset: control plane, solvers, scenarios, fleet —
 # no model builds, no kernel interpret-mode sweeps (a couple of minutes)
@@ -105,6 +118,7 @@ help:
 	@echo "make tenant-bench - 200k+-request multi-tenant pool benchmark"
 	@echo "make uncertainty-bench - 100k+-request distribution-aware admission benchmark"
 	@echo "make degrade-bench - (m, n, c, b) planner vs fixed-model fleets"
+	@echo "make lint        - spongelint (AST contracts) + ruff baseline"
 	@echo "make docs-check  - doc links + serving-API docstring coverage"
 	@echo "make bench-gate  - regression gate over BENCH_*.json trajectories"
 	@echo "make bench       - full benchmark harness"

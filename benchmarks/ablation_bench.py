@@ -19,6 +19,7 @@ from repro.core.baselines import SpongePolicy, StaticPolicy
 # share-splitting policy (that is the point of the comparison)
 with warnings.catch_warnings():
     warnings.simplefilter("ignore", DeprecationWarning)
+    # spongelint: disable=deprecation-hygiene -- the ablation compares against the legacy policy
     from repro.core.multidim import MultiDimPolicy
 from repro.core.perf_model import yolov5s_like
 from repro.core.queueing import EDFQueue
@@ -98,7 +99,6 @@ def run() -> list[tuple[str, float, str]]:
     # --- overload ramp: the paper's multidimensional-scaling future work --
     print("\n== Overload ramp (20 -> 60 RPS at t=200): single vs multidim ==")
     reqs = []
-    rng = np.random.default_rng(0)
     from repro.network.latency import comm_latency
     for t_ in np.arange(0, 600, 1.0):
         rate = 20.0 if t_ < 200 else 60.0

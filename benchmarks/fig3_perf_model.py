@@ -15,7 +15,7 @@ import time
 
 import numpy as np
 
-from repro.core.perf_model import PerfModel, fit_table1, yolov5s_like
+from repro.core.perf_model import PerfModel, fit_table1
 
 
 def run() -> list[tuple[str, float, str]]:
@@ -36,7 +36,7 @@ def run() -> list[tuple[str, float, str]]:
     bs, cs = np.meshgrid(np.arange(1, 17), np.array([1, 2, 4, 8, 16]))
     rel = np.abs(fit.latency(bs, cs) - truth.latency(bs, cs)) \
         / truth.latency(bs, cs)
-    print(f"yolov5n-class (noisy profile + outliers, RANSAC): "
+    print("yolov5n-class (noisy profile + outliers, RANSAC): "
           f"r2={fit.r2:.3f} mean_rel_err={rel.mean()*100:.1f}%")
     rows.append(("fig3_yolov5n_relerr_pct", (time.perf_counter()-t0)*1e6,
                  f"{rel.mean()*100:.2f}"))
@@ -66,7 +66,7 @@ def run() -> list[tuple[str, float, str]]:
         coef, res, *_ = np.linalg.lstsq(A, ls_, rcond=None)
         pred = A @ coef
         r2 = 1 - ((ls_ - pred) ** 2).sum() / ((ls_ - ls_.mean()) ** 2).sum()
-        print(f"measured smollm-135m-reduced forward (CPU): linear "
+        print("measured smollm-135m-reduced forward (CPU): linear "
               f"batch->latency r2={r2:.3f} "
               f"(alpha={coef[0]*1e3:.2f}ms/item, beta={coef[1]*1e3:.2f}ms)")
         rows.append(("fig3_measured_linear_r2",

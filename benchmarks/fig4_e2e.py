@@ -56,7 +56,7 @@ def run() -> list[tuple[str, float, str]]:
     tpu_sav = 100 * (1 - res["sponge-tpu"]["avg_cores"] / s16["avg_cores"])
     print(f"violation reduction vs FA2: {ratio:.1f}x  (paper: >15x)")
     print(f"core saving vs static-16:   {saving:.1f}%  (paper: >20%)")
-    print(f"TPU power-of-two c-set:     viol "
+    print("TPU power-of-two c-set:     viol "
           f"{res['sponge-tpu']['violation_rate']*100:.2f}%, saving "
           f"{tpu_sav:.1f}% (allocation-quantization cost of the adaptation)")
     return [

@@ -78,7 +78,7 @@ def run(requests: int = 120_000, seed: int = 11
           f"{rep.n_cancelled:,} cancelled mid-queue in {live_s:.1f} s")
     print(f"  core-seconds: {rep.core_seconds:,.0f} (storm) vs "
           f"{rep0.core_seconds:,.0f} (no cancels) — withdrawn demand "
-          f"must not inflate provisioning")
+          "must not inflate provisioning")
     assert rep.n_requests + rep.n_cancelled >= MIN_REQUESTS
     assert rep.n_cancelled > 0
     assert rep.core_seconds <= rep0.core_seconds + 1e-9

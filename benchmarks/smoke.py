@@ -72,11 +72,11 @@ def run() -> list[tuple[str, float, str]]:
         assert all(it.result is not None for it in server.backend.results)
         rows.append((f"smoke_jax_{name}", (time.perf_counter() - t0) * 1e6,
                      f"viol={r.violation_rate*100:.2f};"
-                     f"max_replicas="
+                     "max_replicas="
                      f"{max(c for _, c in r.core_timeline)}"))
 
     dt = time.perf_counter() - t0
-    print(f"\n== smoke: ScenarioRunner on sim + jax backends "
+    print("\n== smoke: ScenarioRunner on sim + jax backends "
           f"({dt:.1f} s) ==")
     for name, _, derived in rows:
         print(f"  {name:18s} {derived}")

@@ -43,7 +43,7 @@ def run(n_requests: int = 101_000, jax_requests: int = 12,
     print(f"  TTFT p50/p99    : {rep.ttft_p50*1e3:.1f} / "
           f"{rep.ttft_p99*1e3:.1f} ms")
     print(f"  TBT violations  : {rep.tbt_violation_rate*100:.4f}% of "
-          f"decode tokens")
+          "decode tokens")
     print(f"  request viols   : {rep.violation_rate*100:.3f}%   "
           f"avg_cores={rep.avg_cores:.2f}")
     print(f"  engine          : {stats['events']:,} events "

@@ -54,7 +54,7 @@ def _one(label: str, n_requests: int, seed: int, **kw):
     print(f"{label:13s}: {rep.n_requests:,} served "
           f"(+{rep.n_cancelled:,} cancelled), "
           f"{stats['events']:,} events in {wall:.1f} s = {eps:,.0f} "
-          f"events/s")
+          "events/s")
     print(f"               violations={rep.violation_rate * 100:.3f}%  "
           f"core_seconds={rep.core_seconds:,.0f}  "
           f"ttft_p99={rep.ttft_p99:.3f}s")
@@ -78,7 +78,7 @@ def run(n_requests: int = 120_000, seed: int = 7) -> list:
           f"{aware.violation_rate * 100:.3f}%  core-seconds "
           f"{det.core_seconds:,.0f} -> {aware.core_seconds:,.0f} "
           f"({(1 - aware.core_seconds / det.core_seconds) * 100:.1f}% "
-          f"saved)")
+          "saved)")
 
     # poisson thinning undershoots the request target by a few percent
     assert total >= 0.9 * n_requests, total

@@ -20,13 +20,13 @@ from __future__ import annotations
 
 import math
 from dataclasses import dataclass, field
-from typing import List, Optional, Sequence
+from typing import List, Sequence
 
 from repro.core.perf_model import PerfModel
 from repro.core.queueing import EDFQueue
 from repro.core.scaler import SpongeScaler
 from repro.core.slo import Decision
-from repro.core.solver import DEFAULT_B, DEFAULT_C, solve_bruteforce
+from repro.core.solver import DEFAULT_B, solve_bruteforce
 
 
 class Policy:

@@ -26,7 +26,7 @@ swap).  Both knobs are explicit so studies can pin their own surfaces.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import List, Optional, Sequence, Tuple, Union
 
 from repro.core.cost_model import CostModel

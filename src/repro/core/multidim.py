@@ -27,12 +27,9 @@ from __future__ import annotations
 
 import math
 import warnings
-from dataclasses import dataclass, field
-from typing import Sequence
+from dataclasses import dataclass
 
-from repro.core.perf_model import PerfModel
 from repro.core.scaler import SpongeScaler
-from repro.core.solver import DEFAULT_B, DEFAULT_C
 
 warnings.warn(
     "repro.core.multidim is deprecated: the per-instance share-splitting "

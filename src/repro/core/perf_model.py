@@ -14,7 +14,6 @@ or from the dry-run roofline estimate per (c, b) executable — see
 """
 from __future__ import annotations
 
-import dataclasses
 from dataclasses import dataclass
 from typing import Iterable, Sequence
 

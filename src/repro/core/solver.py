@@ -68,7 +68,7 @@ from typing import List, Optional, Sequence, Union
 
 import numpy as np
 
-from repro.core.cost_model import CostModel, TokenCostModel, as_cost_model
+from repro.core.cost_model import CostModel, TokenCostModel
 from repro.core.perf_model import PerfModel
 from repro.core.slo import Decision
 

@@ -18,7 +18,7 @@ Two concrete executor substrates:
 from __future__ import annotations
 
 import time
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Any, Callable, Dict, Optional, Sequence
 
 from repro.core.perf_model import PerfModel

@@ -9,7 +9,7 @@ so the train examples show a genuinely decreasing loss.
 """
 from __future__ import annotations
 
-from typing import Iterator, Optional
+from typing import Iterator
 
 import numpy as np
 

@@ -22,7 +22,6 @@ import time
 import traceback
 
 import jax
-import numpy as np
 
 from repro.configs import INPUT_SHAPES, get_config, list_archs
 from repro.configs.base import InputShape, ModelConfig

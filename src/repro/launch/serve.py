@@ -47,7 +47,6 @@ from __future__ import annotations
 
 import argparse
 import json
-import time
 
 import numpy as np
 
@@ -78,12 +77,12 @@ def run_sim(args) -> dict:
         print(f"{k:10s} violations={v['violation_rate']*100:6.2f}%  "
               f"avg_cores={v['avg_cores']:6.2f}  p99={v['p99']:.3f}s")
     sp, fa = out["sponge"], out["fa2"]
-    print(f"SLO-violation reduction vs FA2: "
+    print("SLO-violation reduction vs FA2: "
           f"{fa['violation_rate']/max(sp['violation_rate'],1e-9):.1f}x "
-          f"(paper: >15x)")
-    print(f"CPU reduction vs static-16: "
+          "(paper: >15x)")
+    print("CPU reduction vs static-16: "
           f"{100*(1-sp['avg_cores']/out['static-16']['avg_cores']):.1f}% "
-          f"(paper: >20%)")
+          "(paper: >20%)")
     return out
 
 
@@ -121,7 +120,7 @@ def run_live(args) -> dict:
 def run_scenario_mode(args) -> dict:
     q = args.admission_quantile
     if q is not None and not (q == 0.0 or 0.0 < q < 1.0):
-        raise SystemExit(f"--admission-quantile must be in [0, 1) "
+        raise SystemExit("--admission-quantile must be in [0, 1) "
                          f"(0 disables the uncertainty path), got {q}")
     if args.engine == "jax":
         if q is not None or args.no_speculative:

@@ -9,12 +9,9 @@ Full (non-reduced) archs run on the production mesh via the same code path
 from __future__ import annotations
 
 import argparse
-import json
-import time
 
-import jax
 
-from repro.configs import get_config, list_archs
+from repro.configs import get_config
 from repro.data import synthetic_batches
 from repro.models import build_model
 from repro.train.loop import train_loop

@@ -7,7 +7,6 @@ optional mesh for the expert-parallel MoE path.
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
 from typing import Any, Optional
 
 import jax

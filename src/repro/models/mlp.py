@@ -2,9 +2,7 @@
 from __future__ import annotations
 
 import jax
-import jax.numpy as jnp
 
-from repro.configs.base import ModelConfig
 from repro.models.common import Array, dense_init, linear
 
 

@@ -24,13 +24,12 @@ from __future__ import annotations
 
 import math
 from functools import partial
-from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
-from repro.models.common import Array, dense_init, linear
+from repro.models.common import Array, dense_init
 from repro.models.mlp import init_mlp, mlp_fwd
 from repro.models.sharding import shard_map_compat
 

@@ -14,7 +14,6 @@ import jax
 import numpy as np
 from jax.sharding import PartitionSpec as P
 
-from repro.configs.base import ModelConfig
 
 FSDP = ("pod", "data")
 

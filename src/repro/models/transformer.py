@@ -9,9 +9,7 @@ the scan body and applied every ``shared_attn_every`` layers via
 """
 from __future__ import annotations
 
-import dataclasses
 from itertools import groupby
-from typing import Any, Optional
 
 import jax
 import jax.numpy as jnp
@@ -20,8 +18,7 @@ from repro.configs.base import ModelConfig
 from repro.models import attention as attn
 from repro.models import mamba2 as m2
 from repro.models import rwkv6 as rk
-from repro.models.common import (Array, dense_init, embed_init, linear,
-                                 rms_norm)
+from repro.models.common import linear, rms_norm
 from repro.models.mlp import init_mlp, mlp_fwd
 from repro.models.moe import init_moe, moe_fwd, moe_fwd_ep
 

@@ -15,7 +15,6 @@ generators never call the scalar ``at`` in a loop.
 """
 from __future__ import annotations
 
-import os
 from dataclasses import dataclass
 
 import numpy as np

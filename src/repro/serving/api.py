@@ -839,6 +839,51 @@ def calibrate_step_fns(fns: Dict[tuple[int, int], Callable],
                          robust=robust)
 
 
+def build_llm_step_fns(model, params, c_set: Sequence[int],
+                       b_set: Sequence[int], prompt_len: int,
+                       gen_tokens: int = 8):
+    """Executable table for short-generation LLM serving on the reduced
+    models: each entry prefills the prompt batch and decodes gen_tokens.
+
+    On TPU each (c, b) would be compiled on its c-chip submesh; on CPU the
+    same jitted fn backs every c (see ``JaxBackend``).
+    """
+    import jax
+    import jax.numpy as jnp
+
+    def make(b):
+        def fn(tokens):
+            logits, cache = model.prefill(params, {"tokens": tokens},
+                                          cache_len=prompt_len + gen_tokens)
+            def body(carry, _):
+                cache, tok = carry
+                lg, cache = model.decode_step(params, cache, tok)
+                nxt = jnp.argmax(
+                    lg[:, :model.cfg.vocab_size], axis=-1
+                ).astype(jnp.int32)[:, None]
+                return (cache, nxt), nxt[:, 0]
+            first = jnp.argmax(logits[:, :model.cfg.vocab_size],
+                               axis=-1).astype(jnp.int32)[:, None]
+            (_, _), toks = jax.lax.scan(body, (cache, first),
+                                        None, length=gen_tokens)
+            return toks.T  # (b, gen_tokens)
+        return jax.jit(fn)
+
+    fns = {}
+    for b in b_set:
+        jitted = make(b)
+        for c in c_set:
+            fns[(c, b)] = jitted
+    return fns
+
+
+def pad_tokens(payloads: List[np.ndarray], b: int) -> np.ndarray:
+    """Stack int32 token payloads to the batch bucket ``b``, repeating
+    the last entry as padding."""
+    x = np.stack(payloads + [payloads[-1]] * (b - len(payloads)))
+    return x.astype(np.int32)
+
+
 def make_live_server(arch: str = "smollm-135m-reduced", *,
                      c_set: Sequence[int] = (1, 2, 4, 8),
                      b_set: Sequence[int] = (1, 2, 4, 8),
@@ -851,14 +896,8 @@ def make_live_server(arch: str = "smollm-135m-reduced", *,
     calibrate the jitted (c, b) executable table, wire the control plane.
     Returns ``(server, model_config)``."""
     import jax
-    import warnings
     from repro.configs import get_config
     from repro.models import build_model
-    with warnings.catch_warnings():
-        # the shim module warns on import; its step-fn helpers are not
-        # deprecated — only the ServingEngine facade is
-        warnings.simplefilter("ignore", DeprecationWarning)
-        from repro.serving.engine import build_llm_step_fns, pad_tokens
     cfg = get_config(arch)
     model = build_model(cfg)
     params = model.init(jax.random.key(0))

@@ -28,11 +28,11 @@ from __future__ import annotations
 import warnings
 from typing import Callable, Dict, List, Sequence
 
-import numpy as np
 
 from repro.core.scaler import SpongeScaler
 from repro.core.slo import Decision, Request
-from repro.serving.api import JaxBackend, ScenarioRunner, ServedRequest
+from repro.serving.api import (JaxBackend, ScenarioRunner, ServedRequest,
+                               build_llm_step_fns, pad_tokens)
 
 warnings.warn(
     "repro.serving.engine is deprecated: construct through "
@@ -118,46 +118,3 @@ class ServingEngine:
             "decisions": len(self.decision_log),
             "report": report,
         }
-
-
-def build_llm_step_fns(model, params, c_set: Sequence[int],
-                       b_set: Sequence[int], prompt_len: int,
-                       gen_tokens: int = 8):
-    """Executable table for short-generation LLM serving on the reduced
-    models: each entry prefills the prompt batch and decodes gen_tokens.
-
-    On TPU each (c, b) would be compiled on its c-chip submesh; on CPU the
-    same jitted fn backs every c (see module docstring).
-    """
-    import jax
-    import jax.numpy as jnp
-
-    def make(b):
-        def fn(tokens):
-            logits, cache = model.prefill(params, {"tokens": tokens},
-                                          cache_len=prompt_len + gen_tokens)
-            def body(carry, _):
-                cache, tok = carry
-                lg, cache = model.decode_step(params, cache, tok)
-                nxt = jnp.argmax(
-                    lg[:, :model.cfg.vocab_size], axis=-1
-                ).astype(jnp.int32)[:, None]
-                return (cache, nxt), nxt[:, 0]
-            first = jnp.argmax(logits[:, :model.cfg.vocab_size],
-                               axis=-1).astype(jnp.int32)[:, None]
-            (_, _), toks = jax.lax.scan(body, (cache, first),
-                                        None, length=gen_tokens)
-            return toks.T  # (b, gen_tokens)
-        return jax.jit(fn)
-
-    fns = {}
-    for b in b_set:
-        jitted = make(b)
-        for c in c_set:
-            fns[(c, b)] = jitted
-    return fns
-
-
-def pad_tokens(payloads: List[np.ndarray], b: int) -> np.ndarray:
-    x = np.stack(payloads + [payloads[-1]] * (b - len(payloads)))
-    return x.astype(np.int32)

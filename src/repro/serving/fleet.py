@@ -74,6 +74,7 @@ from repro.core.solver import (DEFAULT_B, DEFAULT_C, DEFAULT_N,
                                JointMemoizedSolver)
 from repro.serving.api import (RunReport, build_array_report,
                                resolve_decision)
+from repro.serving.fastpath import build_bucket_array
 from repro.serving.workload import RequestBatch
 
 ROUTERS = ("least-loaded", "jsq", "edf-deadline")
@@ -519,12 +520,8 @@ class _FleetRunnerBase:
             # precomputed latency table: identical floats to perf.latency
             self._lat = {(c, b): float(perf.latency(b, c))
                          for c in self.c_set for b in self.b_set}
-        bmax = self.b_set[-1]
-        buckets = np.empty(bmax + 1, np.int64)
-        for x in range(bmax + 1):
-            buckets[x] = next((bb for bb in self.b_set if bb >= x), bmax)
-        self._bucket_arr = buckets
-        self._bmax = bmax
+        self._bucket_arr = build_bucket_array(self.b_set)
+        self._bmax = self.b_set[-1]
         self._rid = itertools.count()
         self.b = 1
         self.replicas: List[FleetReplica] = []

@@ -1061,7 +1061,7 @@ def _run_session_scenario(batch: RequestBatch, meta: dict, *, policy: str,
     from repro.serving.fastpath import FastSimRunner
     from repro.serving.session import drive_session_events
     if engine not in ("fast", "exact"):
-        raise ValueError(f"session scenarios run on the 'fast' or "
+        raise ValueError("session scenarios run on the 'fast' or "
                          f"'exact' engine (got {engine!r})")
     events = meta.get("session_events", ()) if mid_flight else ()
     common = dict(slo=meta["slo"], expected_rps=meta["expected_rps"],
@@ -1176,7 +1176,7 @@ def _run_fleet_scenario(batch: RequestBatch, meta: dict, *, policy: str,
         c0 = cores
     else:
         raise ValueError(
-            f"fleet scenarios run 'sponge', 'static-<cores>' or (with a "
+            "fleet scenarios run 'sponge', 'static-<cores>' or (with a "
             f"model ladder) 'fixed-<arch>' policies (got {policy!r})")
     cls = FleetFastSimRunner if engine == "fast" else FleetExactRunner
     lkw = ({} if run_ladder is None
@@ -1217,9 +1217,9 @@ def _run_tenant_scenario(meta: dict, *, policy: str, engine: str,
     import time
     from repro.serving.tenancy import TenantExactRunner, TenantFastRunner
     if policy != "sponge":
-        raise ValueError(f"multi-tenant scenarios run the sponge policy "
+        raise ValueError("multi-tenant scenarios run the sponge policy "
                          f"per tenant (got {policy!r}); the *pool* "
-                         f"policy is tenant_policy=...")
+                         "policy is tenant_policy=...")
     pool_policy = (tenant_policy if tenant_policy is not None
                    else meta.get("pool_policy", "greedy-marginal"))
     budget = int(pool_cores if pool_cores is not None
@@ -1273,7 +1273,7 @@ def _token_uncertainty(meta: dict, admission_quantile: Optional[float],
     if q == 0.0:
         return None
     if not 0.0 < q < 1.0:
-        raise ValueError(f"admission_quantile must be in [0, 1) "
+        raise ValueError("admission_quantile must be in [0, 1) "
                          f"(0 disables), got {q}")
     return UncertaintyConfig(dist=dist, admission_quantile=q,
                              class_quantiles=meta.get("class_quantiles", ()),

@@ -74,9 +74,7 @@ from typing import List, Optional
 import numpy as np
 
 from repro.core.baselines import SpongePolicy
-from repro.core.perf_model import PerfModel
 from repro.core.scaler import SpongeScaler
-from repro.core.solver import DEFAULT_B, DEFAULT_C
 from repro.serving.api import (RunReport, build_array_report,
                                resolve_decision)
 from repro.serving.fastpath import FastSimRunner
@@ -85,6 +83,7 @@ from repro.serving.workload import RequestBatch
 _INF = float("inf")
 
 
+# spongelint: inline-of repro.core.monitor.array_window_rate pin=48cc23b00a85
 def _lam_at(a: np.ndarray, ai: int, w0: int, now: float,
             window_s: float, prior: float) -> float:
     """:func:`repro.core.monitor.array_window_rate` with the window
@@ -307,6 +306,7 @@ class VectorSimRunner(FastSimRunner):
                 adv(nt, True, ai)
             if nt + 1e-12 >= sc._next_t:        # SpongeScaler.due
                 # λ — _lam_at inlined
+                # spongelint: inline-of repro.serving.vectorpath._lam_at pin=6a807a195429
                 if ai == w0:
                     obs = 0.0
                 elif ai - w0 == 1:
@@ -323,6 +323,10 @@ class VectorSimRunner(FastSimRunner):
                 wait0 = s.busy_until - nt
                 if wait0 < 0.0:
                     wait0 = 0.0
+                # the scaler's decide() arithmetic down to the memo
+                # solver's _quantize, scalarized:
+                # spongelint: inline-of repro.core.scaler.SpongeScaler.decide pin=23615dcd0615
+                # spongelint: inline-of repro.core.solver.MemoizedSolver.solve pin=f62550972488
                 lam_eff = lam * lh
                 lam_q = ceil(lam_eff / lq) * lq if lq > 0 \
                     else float(lam_eff)
@@ -380,9 +384,11 @@ class VectorSimRunner(FastSimRunner):
                     rcache[(d.c, d.b)] = cb = \
                         resolve_decision(self.c_set, d)
                 c, self.b = cb
-                if nt > s._last_t:              # _Slot.account
+                if nt > s._last_t:  # spongelint: inline-of repro.serving.fastpath._Slot.account
                     s.core_seconds += s.c * (nt - s._last_t)
                     s._last_t = nt
+                # single-slot resize from FastSimRunner._apply:
+                # spongelint: inline-of repro.serving.fastpath.FastSimRunner._apply pin=e4a54f71d7e5
                 if s.c != c:
                     s.c = c
                     if pen:

@@ -1,15 +1,12 @@
 """Training step/loop with pjit shardings."""
 from __future__ import annotations
 
-import dataclasses
 import time
 from dataclasses import dataclass
-from typing import Any, Callable, Optional
+from typing import Any, Callable
 
 import jax
-import jax.numpy as jnp
 
-from repro.configs.base import ModelConfig
 from repro.models.api import Model
 from repro.train.losses import train_loss
 from repro.train.optimizer import OptConfig, adamw_init, adamw_update

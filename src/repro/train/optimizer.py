@@ -7,9 +7,7 @@ MoE balancing) are excluded from AdamW and updated by the balance rule.
 """
 from __future__ import annotations
 
-import dataclasses
 from dataclasses import dataclass
-from typing import Any
 
 import jax
 import jax.numpy as jnp

@@ -17,7 +17,6 @@ import json
 from dataclasses import asdict, dataclass
 from typing import Optional
 
-from repro.utils.hlo_analysis import CollectiveStats, collective_stats
 
 PEAK_FLOPS = 197e12
 HBM_BW = 819e9

@@ -4,7 +4,7 @@ import os
 # devices.  Multi-device tests spawn subprocesses with their own XLA_FLAGS.
 os.environ.setdefault("JAX_PLATFORMS", "cpu")
 
-import jax
+import jax  # noqa: F401  -- imported early so the platform pin above sticks
 import numpy as np
 import pytest
 

@@ -1,0 +1,5 @@
+"""Malformed / unknown directives are themselves findings."""
+# spongelint: disable=not-a-rule
+X = 1
+# spongelint: frobnicate everything
+Y = 2

@@ -1,0 +1,8 @@
+"""Seeded deprecation-hygiene violations (fixture, not a test file)."""
+import repro.core.multidim
+from repro.serving import simulator
+from repro.serving.engine import ServingEngine
+
+
+def build():
+    return ServingEngine, simulator, repro.core.multidim

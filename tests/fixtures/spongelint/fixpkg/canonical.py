@@ -1,0 +1,12 @@
+"""Canonical function for the inline-drift fixtures."""
+
+
+def window_rate(count, span, prior):
+    """Canonical observed-rate blend (fixture)."""
+    if count == 0:
+        obs = 0.0
+    else:
+        obs = count / span
+    if prior <= 0:
+        return obs
+    return 0.5 * obs + 0.5 * prior

@@ -1,0 +1,12 @@
+"""A faithful alpha-renamed inline of fixpkg.canonical.window_rate."""
+
+
+def fast_loop(n, s, p):
+    # spongelint: inline-of fixpkg.canonical.window_rate stmts=3
+    if n == 0:
+        o = 0.0
+    else:
+        o = n / s
+    if p <= 0:
+        return o
+    return 0.5 * o + 0.5 * p

@@ -1,0 +1,17 @@
+"""Seeded scan-purity violations: the step closes over and mutates
+module state, and prints from inside the traced function."""
+import jax
+from jax import lax
+
+log = []
+
+
+def step(carry, x):
+    log.append(x)
+    print("tick")
+    return carry + x, x
+
+
+def run(xs):
+    out, _ = lax.scan(step, 0.0, xs)
+    return jax.jit(lambda y: y)(out)

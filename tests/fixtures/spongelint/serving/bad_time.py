@@ -1,0 +1,24 @@
+"""Seeded determinism violations (fixture — under a serving/ path)."""
+import random
+import time
+
+import numpy as np
+
+
+def now_badly():
+    return time.time()
+
+
+def jitter():
+    return random.random() + np.random.rand()
+
+
+def rng():
+    return np.random.default_rng()
+
+
+def total(vals):
+    acc = 0.0
+    for v in {1.0, 2.0, 3.0}:
+        acc += v
+    return acc + sum(x for x in set(vals))

@@ -1,0 +1,15 @@
+"""Determinism-clean twin of bad_time.py: telemetry clocks and seeded
+generators are legal in hot paths."""
+import time
+
+import numpy as np
+
+
+def timed():
+    t0 = time.perf_counter()
+    rng = np.random.default_rng(42)
+    vals = sorted([3.0, 1.0])
+    acc = 0.0
+    for v in vals:
+        acc += v
+    return acc + float(rng.standard_normal()) + (time.perf_counter() - t0)

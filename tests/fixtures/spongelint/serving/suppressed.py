@@ -1,0 +1,6 @@
+"""A deliberate wall-clock read carrying an explicit suppression."""
+import time
+
+
+def stamp():
+    return time.time()  # spongelint: disable=determinism -- label only, not scheduling

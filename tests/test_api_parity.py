@@ -8,7 +8,6 @@ PerfModel prediction, which makes the two event streams identical while
 the jitted table still executes for real.
 """
 import numpy as np
-import pytest
 
 from repro.core.baselines import FA2Policy, SpongePolicy
 from repro.core.perf_model import PerfModel

@@ -105,6 +105,29 @@ def test_degrade_gain_uses_break_even_floor_not_speedup_bar(tmp_path):
     assert problems == [], problems
 
 
+def test_short_trajectory_emits_named_notice(tmp_path):
+    """A trajectory with a single record passes the gate but surfaces
+    the named short-trajectory notice (it cannot regress *yet*)."""
+    _write(tmp_path, "uncertainty",
+           [_savings_entry("core_seconds_saved", 0.11)])
+    rows = [["scenario_fast", 12.3, "speedup=18.8x"]]
+    _write(tmp_path, "throughput",
+           [{"timestamp": "t", "commit": "c", "metrics": rows}])
+    problems, notices = bench_gate.run_gate(tmp_path)
+    assert problems == [], problems
+    short = [n for n in notices if "short-trajectory" in n]
+    assert any("BENCH_uncertainty.json" in n for n in short), notices
+    assert any("BENCH_throughput.json" in n for n in short), notices
+
+
+def test_two_record_trajectory_has_no_short_notice(tmp_path):
+    _write(tmp_path, "tenant", [_savings_entry("savings", 0.50),
+                                _savings_entry("savings", 0.48)])
+    _, notices = bench_gate.run_gate(tmp_path)
+    assert not any("short-trajectory" in n and "tenant" in n
+                   for n in notices), notices
+
+
 def test_unreadable_file_blocks(tmp_path):
     (tmp_path / "BENCH_tenant.json").write_text("{not json",
                                                 encoding="utf-8")

@@ -25,7 +25,7 @@ from repro.network.traces import synth_4g_trace
 from repro.serving.api import ScenarioRunner, SimBackend
 from repro.serving.fastpath import FastSimRunner
 from repro.serving.reference import ReferenceRunner
-from repro.serving.workload import RequestBatch, WorkloadGenerator
+from repro.serving.workload import WorkloadGenerator
 
 PERF = yolov5s_like()
 

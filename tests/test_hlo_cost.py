@@ -1,7 +1,6 @@
 """Trip-count-weighted HLO cost analysis vs XLA ground truth."""
 import jax
 import jax.numpy as jnp
-import numpy as np
 import pytest
 
 from repro.utils.hlo_analysis import collective_stats, shape_bytes

@@ -1,6 +1,5 @@
 """Network trace + comm-latency model properties (paper Fig. 1)."""
 import numpy as np
-import pytest
 from _hyp import given, settings, st  # guarded hypothesis import
 
 from repro.network.latency import comm_latency

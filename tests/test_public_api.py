@@ -78,7 +78,7 @@ def test_degradation_public_surface():
              or n in ("default_ladder", "fit_rung_cost",
                       "resolve_ladder")}
     assert names >= DEGRADATION_EXPORTS, (
-        f"missing from repro.core.degradation: "
+        "missing from repro.core.degradation: "
         f"{DEGRADATION_EXPORTS - names}")
 
 

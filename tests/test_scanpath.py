@@ -11,7 +11,6 @@ exercised.
 import numpy as np
 import pytest
 
-from repro.core.cost_model import TokenCostModel
 from repro.core.scaler import SpongeScaler
 from repro.core.solver import DEFAULT_B, DEFAULT_C
 from repro.serving.scanpath import (HAVE_JAX, ScanDecodeEngine,

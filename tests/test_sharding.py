@@ -7,8 +7,7 @@ from jax.sharding import PartitionSpec as P
 
 from repro.configs import get_config, list_archs
 from repro.models.api import init_cache, init_params
-from repro.models.sharding import (batch_specs, cache_specs, param_specs,
-                                   _fit_spec)
+from repro.models.sharding import cache_specs, param_specs, _fit_spec
 
 
 class FakeMesh:

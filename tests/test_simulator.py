@@ -1,5 +1,4 @@
 """Discrete-event simulator invariants + the paper's headline claims."""
-import numpy as np
 import pytest
 
 from repro.core.baselines import FA2Policy, SpongePolicy, StaticPolicy
@@ -87,7 +86,6 @@ def test_paper_headline_claims():
 def test_edf_priority_under_pressure():
     """With a starved server, tighter-deadline requests finish first."""
     from repro.core.slo import Request
-    trace = synth_4g_trace(30, seed=1)
     sim = ClusterSimulator(PERF, StaticPolicy(PERF, cores=1), (1,),
                            DEFAULT_B, c0=1)
     reqs = [Request.make(arrival=1.0, comm_latency=0.01 * i, slo=1.0 + 0.1 * i)

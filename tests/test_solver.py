@@ -1,6 +1,4 @@
 """Property tests (hypothesis) for the IP solver — the paper's Algorithm 1."""
-import numpy as np
-import pytest
 from _hyp import given, settings, st  # guarded hypothesis import
 
 from repro.core.perf_model import PerfModel, yolov5s_like

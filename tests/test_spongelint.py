@@ -1,0 +1,212 @@
+"""spongelint framework tests: every rule catches its seeded fixture
+violation, suppressions work, and the real tree is clean.
+
+The fixtures live in ``tests/fixtures/spongelint`` (not collected as
+tests; excluded from ruff).  The final tests are the PR's acceptance
+criteria: ``src/`` lints clean, and mutating the annotated inlined
+``_Slot.account`` block inside ``vectorpath`` makes the lint fail.
+"""
+from pathlib import Path
+
+from tools.spongelint import REPO, RULES, lint_file, lint_paths
+from tools.spongelint.__main__ import main
+from tools.spongelint.astnorm import alpha_equal, fingerprint
+from tools.spongelint.resolve import TargetResolver
+
+FIX = Path(__file__).resolve().parent / "fixtures" / "spongelint"
+
+
+def lint_fixture(name, select=None):
+    return lint_file(FIX / name, TargetResolver([FIX]), select=select)
+
+
+# -- registry ---------------------------------------------------------------
+def test_rule_registry():
+    assert set(RULES) == {"inline-drift", "determinism", "scan-purity",
+                          "deprecation-hygiene"}
+    for r in RULES.values():
+        assert r.summary
+
+
+# -- inline-drift -----------------------------------------------------------
+def test_faithful_inline_is_clean():
+    assert lint_fixture("good_inline.py") == []
+
+
+def test_drifted_inline_is_caught():
+    findings = lint_fixture("drifted_inline.py")
+    assert len(findings) == 1
+    f = findings[0]
+    assert f.rule == "inline-drift"
+    assert "drifted" in f.message
+    assert "fixpkg.canonical.window_rate" in f.message
+
+
+def test_alpha_equivalence_is_consistent_renaming():
+    import ast
+    canon = ast.parse("def f(a, b):\n    return a + b").body[0]
+    ok = ast.parse("return x + y", mode="exec").body
+    bad = ast.parse("return x + x", mode="exec").body
+    assert alpha_equal(ok, canon)
+    assert not alpha_equal(bad, canon)
+
+
+def test_pin_matches_and_breaks(tmp_path):
+    (tmp_path / "canon.py").write_text(
+        "def rate(n, s):\n    if n == 0:\n        return 0.0\n"
+        "    return n / s\n")
+    resolver = TargetResolver([tmp_path])
+    _, func = resolver.resolve("canon.rate")
+    pin = fingerprint(func)
+
+    good = tmp_path / "user_good.py"
+    good.write_text(
+        f"# spongelint: inline-of canon.rate pin={pin}\n"
+        "def mine(k, t):\n    return 0.0 if k == 0 else k / t\n")
+    assert lint_file(good, resolver) == []
+
+    stale = tmp_path / "user_stale.py"
+    stale.write_text(
+        "# spongelint: inline-of canon.rate pin=000000000000\n"
+        "def mine(k, t):\n    return 0.0 if k == 0 else k / t\n")
+    findings = lint_file(stale, resolver)
+    assert len(findings) == 1
+    assert findings[0].rule == "inline-drift"
+    assert "re-stamp" in findings[0].message
+
+
+def test_pin_survives_rename_and_docstring_edit(tmp_path):
+    v1 = "def rate(n, s):\n    '''doc one'''\n    return n / s\n"
+    v2 = "def rate(count, span):\n    '''doc two'''\n    return count / span\n"
+    v3 = "def rate(n, s):\n    s = s + 1\n    return n / s\n"
+    pins = []
+    for src in (v1, v2, v3):
+        (tmp_path / "canon.py").write_text(src)
+        _, func = TargetResolver([tmp_path]).resolve("canon.rate")
+        pins.append(fingerprint(func))
+    assert pins[0] == pins[1]          # alpha-rename + docstring: stable
+    assert pins[0] != pins[2]          # statement-level change: breaks
+
+
+def test_unresolvable_target_is_reported(tmp_path):
+    bad = tmp_path / "user.py"
+    bad.write_text("# spongelint: inline-of no.such.module.fn\nX = 1\n")
+    findings = lint_file(bad, TargetResolver([tmp_path]))
+    assert len(findings) == 1
+    assert "cannot resolve" in findings[0].message
+
+
+# -- determinism ------------------------------------------------------------
+def test_determinism_catches_each_seeded_violation():
+    findings = lint_fixture("serving/bad_time.py")
+    assert all(f.rule == "determinism" for f in findings)
+    msgs = "\n".join(f.message for f in findings)
+    assert "time.time" in msgs
+    assert "random.random" in msgs
+    assert "numpy.random.rand" in msgs
+    assert "without a seed" in msgs
+    assert "iteration over a set" in msgs
+    assert "comprehension over a set" in msgs
+    assert len(findings) == 6
+
+
+def test_determinism_allows_telemetry_clock_and_seeded_rng():
+    assert lint_fixture("serving/good_time.py") == []
+
+
+def test_determinism_scoped_to_hot_paths(tmp_path):
+    # same violations outside a serving/ or core/ path: out of scope
+    (tmp_path / "elsewhere.py").write_text(
+        "import time\n\ndef f():\n    return time.time()\n")
+    assert lint_file(tmp_path / "elsewhere.py",
+                     TargetResolver([tmp_path])) == []
+
+
+def test_suppression_silences_with_reason():
+    assert lint_fixture("serving/suppressed.py") == []
+
+
+def test_unknown_suppression_and_directive_are_findings():
+    findings = lint_fixture("bad_directive.py")
+    assert len(findings) == 2
+    assert all(f.rule == "bad-directive" for f in findings)
+
+
+# -- scan-purity ------------------------------------------------------------
+def test_scan_purity_catches_impure_step():
+    findings = lint_fixture("impure_scan.py")
+    assert all(f.rule == "scan-purity" for f in findings)
+    msgs = "\n".join(f.message for f in findings)
+    assert ".append" in msgs and "print" in msgs
+    assert len(findings) == 2
+
+
+def test_scan_purity_accepts_pure_step(tmp_path):
+    (tmp_path / "pure.py").write_text(
+        "from jax import lax\n\n"
+        "def step(carry, x):\n    return carry + x, carry\n\n"
+        "def run(xs):\n    return lax.scan(step, 0.0, xs)\n")
+    assert lint_file(tmp_path / "pure.py", TargetResolver([tmp_path])) == []
+
+
+# -- deprecation-hygiene ----------------------------------------------------
+def test_deprecation_catches_all_three_shims():
+    findings = lint_fixture("deprecated_import.py")
+    assert all(f.rule == "deprecation-hygiene" for f in findings)
+    msgs = "\n".join(f.message for f in findings)
+    assert "repro.serving.simulator" in msgs
+    assert "repro.serving.engine" in msgs
+    assert "repro.core.multidim" in msgs
+    assert len(findings) == 3
+
+
+def test_deprecation_exempts_test_files(tmp_path):
+    src = (FIX / "deprecated_import.py").read_text()
+    (tmp_path / "test_shims.py").write_text(src)
+    assert lint_file(tmp_path / "test_shims.py",
+                     TargetResolver([tmp_path])) == []
+
+
+# -- acceptance: the real tree ----------------------------------------------
+def test_src_tree_is_clean():
+    assert lint_paths([REPO / "src"]) == []
+
+
+def test_tools_and_benchmarks_are_clean():
+    assert lint_paths([REPO / "tools", REPO / "benchmarks"]) == []
+
+
+def test_mutating_annotated_inline_fails(tmp_path):
+    """Reordering the two statements of vectorpath's inlined
+    ``_Slot.account`` block must break the lint (acceptance criterion)."""
+    vp = (REPO / "src" / "repro" / "serving" / "vectorpath.py").read_text()
+    marker = "# spongelint: inline-of repro.serving.fastpath._Slot.account"
+    lines = vp.splitlines(keepends=True)
+    idx = next(i for i, ln in enumerate(lines) if marker in ln)
+    a, b = lines[idx + 1], lines[idx + 2]
+    assert "core_seconds" in a and "_last_t" in b
+    lines[idx + 1], lines[idx + 2] = b, a
+    mutated = tmp_path / "vectorpath_mutated.py"
+    mutated.write_text("".join(lines))
+    findings = lint_file(mutated, TargetResolver([REPO / "src", REPO]),
+                         select=["inline-drift"])
+    assert any(f.rule == "inline-drift" and "drifted" in f.message
+               for f in findings)
+
+
+# -- CLI --------------------------------------------------------------------
+def test_cli_exit_codes(capsys):
+    assert main(["--list-rules"]) == 0
+    assert main([str(FIX / "good_inline.py"), "--root", str(FIX)]) == 0
+    assert main([str(FIX / "drifted_inline.py"), "--root", str(FIX)]) == 1
+    out = capsys.readouterr()
+    assert "inline-drift" in out.out
+
+
+def test_cli_print_pin(capsys):
+    assert main(["--print-pin", "fixpkg.canonical.window_rate",
+                 "--root", str(FIX)]) == 0
+    pin = capsys.readouterr().out.strip()
+    _, func = TargetResolver([FIX]).resolve("fixpkg.canonical.window_rate")
+    assert pin == fingerprint(func)
+    assert main(["--print-pin", "no.such.thing", "--root", str(FIX)]) == 2

@@ -5,8 +5,7 @@ import numpy as np
 import pytest
 from _hyp import given, settings, st  # guarded hypothesis import
 
-from repro.core.cost_model import (Composition, FixedWorkCostModel,
-                                   TokenCostModel, as_cost_model)
+from repro.core.cost_model import Composition, TokenCostModel
 from repro.core.monitor import RateEstimator
 from repro.core.perf_model import yolov5s_like
 from repro.core.queueing import EDFQueue, TokenFastEDFQueue

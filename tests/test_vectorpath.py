@@ -22,7 +22,6 @@ from repro.core.solver import DEFAULT_B, DEFAULT_C, MemoizedSolver
 from repro.serving.fastpath import FastSimRunner
 from repro.serving.scenarios import build_scenario, run_scenario
 from repro.serving.vectorpath import VectorSimRunner
-from repro.serving.workload import RequestBatch
 
 PERF = yolov5s_like()
 PLAIN = ["steady", "diurnal", "flash-crowd", "network-replay", "mixed-slo"]
@@ -47,7 +46,6 @@ def _sig(rep, runner):
     """Everything the equivalence contract covers, floats unrounded."""
     decs = [(t, d.c, d.b, getattr(d, "n", 1), d.feasible)
             for t, d in (rep.decisions or [])]
-    nan = float("nan")
 
     def f(x):
         return "nan" if isinstance(x, float) and np.isnan(x) else x

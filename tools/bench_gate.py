@@ -84,6 +84,17 @@ def _load(path: Path):
     return entries
 
 
+def check_length(path: Path) -> list[str]:
+    """A trajectory with fewer than 2 records cannot regress *yet* —
+    emit the named ``short-trajectory`` notice so a wiped or freshly
+    seeded history is visible instead of silently passing the gate."""
+    entries = _load(path)
+    if len(entries) < 2:
+        return [f"{path.name}: short-trajectory ({len(entries)} record(s) "
+                "— regression gating needs at least 2)"]
+    return []
+
+
 def check_savings(path: Path, key: str) -> list[str]:
     """Latest savings must be within SAVINGS_REGRESSION of the best."""
     entries = _load(path)
@@ -132,6 +143,7 @@ def run_gate(root: Path) -> tuple[list[str], list[str]]:
             continue
         try:
             problems += check_savings(path, key)
+            notices += check_length(path)
         except (ValueError, json.JSONDecodeError) as e:
             problems.append(f"{path.name}: unreadable ({e})")
     for path in sorted(root.glob("BENCH_*.json")):
@@ -139,6 +151,7 @@ def run_gate(root: Path) -> tuple[list[str], list[str]]:
             continue
         try:
             problems += check_speedups(path)
+            notices += check_length(path)
         except (ValueError, json.JSONDecodeError) as e:
             problems.append(f"{path.name}: unreadable ({e})")
     return problems, notices
@@ -159,7 +172,7 @@ def main(argv=None) -> int:
         return 1
     n_checked = len(list(args.root.glob("BENCH_*.json")))
     print(f"bench-gate: OK ({n_checked} trajectories checked, "
-          f"{len(notices)} absent)")
+          f"{len(notices)} notice(s))")
     return 0
 
 

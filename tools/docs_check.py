@@ -30,7 +30,8 @@ DOCSTRING_MODULES = ["repro.serving.api", "repro.serving.scenarios",
                      "repro.serving.fastpath", "repro.core.cost_model",
                      "repro.serving.token_backend", "repro.serving.fleet",
                      "repro.serving.session", "repro.serving.tenancy",
-                     "repro.core.uncertainty", "repro.core.degradation"]
+                     "repro.core.uncertainty", "repro.core.degradation",
+                     "tools.spongelint"]
 
 
 def check_links() -> list[str]:
@@ -56,6 +57,7 @@ def check_links() -> list[str]:
 def check_docstrings() -> list[str]:
     problems = []
     sys.path.insert(0, str(REPO / "src"))
+    sys.path.insert(0, str(REPO))        # for the tools.* packages
     for modname in DOCSTRING_MODULES:
         try:
             mod = __import__(modname, fromlist=["_"])

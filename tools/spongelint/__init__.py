@@ -1,0 +1,182 @@
+"""spongelint — repo-specific static analysis for the Sponge codebase.
+
+The repo's core guarantee is that every fast engine replays the
+IP-derived decision stream of its reference engine bit-identically.
+The code backing that guarantee is full of *contracts in prose* —
+"inlined verbatim", "rules, verbatim", "pure ``(carry, xs)`` step" —
+each enforced only by runtime equivalence tests that catch drift after
+it changes behaviour.  spongelint proves those contracts at the AST
+level, at review time (see ``docs/linting.md`` for the rule catalog):
+
+* **inline-drift** — ``# spongelint: inline-of <target>`` markers on
+  every inlined copy; strict copies must alpha-match the canonical
+  function's body, transformed copies pin the canonical's normalized
+  fingerprint so changing the canonical forces re-verification;
+* **determinism** — no wall-clock reads, no unseeded global RNG, no
+  set-iteration feeding accumulation inside the ``serving``/``core``
+  hot paths (accumulation order is load-bearing for bit-identity);
+* **scan-purity** — functions handed to ``lax.scan``/``jax.jit`` must
+  not mutate enclosing state, perform I/O, or call non-whitelisted
+  host callbacks;
+* **deprecation-hygiene** — non-test code must not import the
+  deprecated ``serving.simulator`` / ``serving.engine`` /
+  ``core.multidim`` shims.
+
+Usage::
+
+    python -m tools.spongelint src [more paths...]
+    python -m tools.spongelint --list-rules
+    python -m tools.spongelint --print-pin repro.core.scaler.SpongeScaler.decide
+
+Per-line suppression: ``# spongelint: disable=<rule> -- reason``.
+Framework: stdlib ``ast``/``tokenize`` only, no dependencies.
+"""
+from __future__ import annotations
+
+import ast
+from dataclasses import dataclass, field
+from pathlib import Path
+from typing import Callable, Dict, Iterable, List, Optional, Sequence
+
+from tools.spongelint.markers import Directives, parse_directives
+from tools.spongelint.resolve import TargetResolver
+
+REPO = Path(__file__).resolve().parent.parent.parent
+DEFAULT_ROOTS = (REPO / "src", REPO)
+
+
+@dataclass(frozen=True)
+class Finding:
+    """One lint finding, file/line-anchored."""
+    path: str
+    line: int
+    col: int
+    rule: str
+    message: str
+
+    def render(self) -> str:
+        return f"{self.path}:{self.line}:{self.col}: " \
+               f"{self.rule}: {self.message}"
+
+    def sort_key(self):
+        return (self.path, self.line, self.col, self.rule)
+
+
+@dataclass
+class FileContext:
+    """Everything a rule needs about one source file."""
+    path: Path                        # absolute
+    rel: str                          # as reported in findings
+    source: str
+    tree: ast.Module
+    directives: Directives
+    resolver: TargetResolver
+
+    def finding(self, node_or_line, rule: str, message: str) -> Finding:
+        if isinstance(node_or_line, int):
+            line, col = node_or_line, 0
+        else:
+            line = getattr(node_or_line, "lineno", 0)
+            col = getattr(node_or_line, "col_offset", 0)
+        return Finding(self.rel, line, col, rule, message)
+
+    @property
+    def parts(self) -> tuple:
+        return self.path.parts
+
+
+RuleFn = Callable[[FileContext], Iterable[Finding]]
+RULES: Dict[str, "Rule"] = {}
+
+
+@dataclass
+class Rule:
+    """A registered rule: its suppression id, one-line summary, and
+    the check function run per file."""
+    name: str
+    summary: str
+    check: RuleFn
+
+
+def rule(name: str, summary: str):
+    """Register a rule function under ``name`` (the suppression id)."""
+    def deco(fn: RuleFn) -> RuleFn:
+        RULES[name] = Rule(name, summary, fn)
+        return fn
+    return deco
+
+
+def iter_py_files(paths: Sequence[Path]) -> List[Path]:
+    """Expand files/directories to a sorted list of ``.py`` files."""
+    out: List[Path] = []
+    for p in paths:
+        p = Path(p)
+        if p.is_dir():
+            out.extend(f for f in sorted(p.rglob("*.py"))
+                       if "__pycache__" not in f.parts)
+        elif p.suffix == ".py":
+            out.append(p)
+    return out
+
+
+def lint_file(path: Path, resolver: TargetResolver, *,
+              rel: Optional[str] = None,
+              select: Optional[Sequence[str]] = None) -> List[Finding]:
+    """Run every (selected) rule over one file, apply suppressions."""
+    path = Path(path).resolve()
+    if rel is None:
+        try:
+            rel = str(path.relative_to(Path.cwd()))
+        except ValueError:
+            rel = str(path)
+    source = path.read_text(encoding="utf-8")
+    try:
+        tree = ast.parse(source, filename=str(path))
+    except SyntaxError as e:
+        return [Finding(rel, e.lineno or 0, e.offset or 0, "parse-error",
+                        f"cannot parse: {e.msg}")]
+    directives = parse_directives(source)
+    ctx = FileContext(path=path, rel=rel, source=source, tree=tree,
+                      directives=directives, resolver=resolver)
+    findings: List[Finding] = [
+        ctx.finding(line, "bad-directive", msg)
+        for line, msg in directives.errors]
+    names = list(select) if select else list(RULES)
+    for name in names:
+        if name not in RULES:
+            raise KeyError(f"unknown rule {name!r}; known: {sorted(RULES)}")
+        findings.extend(RULES[name].check(ctx))
+    for line, rules in directives.suppressions.items():
+        unknown = rules - set(RULES) - {"all"}
+        for r in sorted(unknown):
+            findings.append(ctx.finding(
+                line, "bad-directive",
+                f"suppression names unknown rule {r!r}"))
+    kept = []
+    for f in findings:
+        sup = directives.suppressions.get(f.line, ())
+        if f.rule != "bad-directive" and (f.rule in sup or "all" in sup):
+            continue
+        kept.append(f)
+    return sorted(kept, key=Finding.sort_key)
+
+
+def lint_paths(paths: Sequence, *, roots: Optional[Sequence] = None,
+               select: Optional[Sequence[str]] = None) -> List[Finding]:
+    """Lint every ``.py`` file under ``paths``.
+
+    ``roots`` are the module-resolution roots for ``inline-of`` targets
+    (default: the repo's ``src/`` plus the repo root).
+    """
+    resolver = TargetResolver([Path(r) for r in (roots or DEFAULT_ROOTS)])
+    findings: List[Finding] = []
+    for f in iter_py_files([Path(p) for p in paths]):
+        findings.extend(lint_file(f, resolver, select=select))
+    return sorted(findings, key=Finding.sort_key)
+
+
+# importing the rule modules registers them; this sits at module bottom
+# so the modules can import the registry from the partially initialized
+# package without a cycle
+from tools.spongelint import rules as _rules  # noqa: E402,F401
+

@@ -1,0 +1,74 @@
+"""CLI: ``python -m tools.spongelint src [paths...]``.
+
+Exit status 0 when no findings, 1 when findings were reported, 2 on
+usage errors.  ``--print-pin`` stamps the normalized fingerprint used
+by pinned ``inline-of`` markers (see ``docs/linting.md``).
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+from pathlib import Path
+
+from tools.spongelint import (DEFAULT_ROOTS, RULES, lint_paths)
+from tools.spongelint.astnorm import fingerprint
+from tools.spongelint.resolve import ResolutionError, TargetResolver
+
+
+def main(argv=None) -> int:
+    parser = argparse.ArgumentParser(
+        prog="python -m tools.spongelint",
+        description="Sponge-specific AST lint: inline-drift, "
+                    "determinism, scan-purity, deprecation-hygiene.")
+    parser.add_argument("paths", nargs="*", type=Path,
+                        help="files or directories to lint")
+    parser.add_argument("--root", action="append", type=Path, default=[],
+                        metavar="DIR",
+                        help="module-resolution root for inline-of "
+                             "targets (repeatable; default: src/ and "
+                             "the repo root)")
+    parser.add_argument("--select", action="append", default=[],
+                        metavar="RULE",
+                        help="run only the named rule (repeatable)")
+    parser.add_argument("--list-rules", action="store_true",
+                        help="print the rule catalog and exit")
+    parser.add_argument("--print-pin", metavar="TARGET",
+                        help="print the normalized fingerprint of "
+                             "module.qualname, for pin= markers")
+    args = parser.parse_args(argv)
+
+    roots = args.root or list(DEFAULT_ROOTS)
+
+    if args.list_rules:
+        for name in sorted(RULES):
+            print(f"{name}: {RULES[name].summary}")
+        return 0
+
+    if args.print_pin:
+        try:
+            _, func = TargetResolver(roots).resolve(args.print_pin)
+        except (ResolutionError, OSError, SyntaxError) as e:
+            print(f"error: {e}", file=sys.stderr)
+            return 2
+        print(fingerprint(func))
+        return 0
+
+    if not args.paths:
+        parser.error("no paths given (try: python -m tools.spongelint src)")
+
+    for name in args.select:
+        if name not in RULES:
+            parser.error(f"unknown rule {name!r}; known: {sorted(RULES)}")
+
+    findings = lint_paths(args.paths, roots=roots,
+                          select=args.select or None)
+    for f in findings:
+        print(f.render())
+    if findings:
+        print(f"spongelint: {len(findings)} finding(s)", file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

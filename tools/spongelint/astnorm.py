@@ -1,0 +1,177 @@
+"""AST normalization for the inline-drift rule.
+
+Two fragments are *alpha-equivalent* when they have the same statement
+structure after consistently renaming local identifiers: ``nt``/``s``
+in an inlined copy may stand for ``now``/``self`` in the canonical
+function, but the statements, operators, attribute names, call
+keywords and constants must match exactly, in order.  The comparison
+works by canonicalizing both sides independently — every ``Name`` is
+renamed to ``ν0, ν1, …`` in first-occurrence order — and comparing the
+resulting dumps: alpha-equivalent fragments canonicalize to the same
+string, and a reordered, inserted or deleted statement cannot.
+
+What normalization removes (cosmetic, cannot change behaviour):
+
+* docstrings (the leading string expression of a module/class/function
+  body, when other statements follow);
+* annotations (``x: int = 1`` vs ``x = 1``) and type comments;
+* line/column information and expression context (Load/Store/Del).
+
+What it preserves (semantic, drift when changed):
+
+* statement order and structure, operators, constants;
+* attribute names (``self.core_seconds``), call keyword names,
+  imported module names;
+* the *pattern* of identifier use — ``a = a + b`` never matches
+  ``a = b + a``.
+
+:func:`fingerprint` hashes a canonical dump to the short hex digest
+used by ``pin=`` markers: a pin survives pure renames and comment or
+docstring edits in the canonical function, and breaks on any change to
+its statements — exactly the "re-verify the transformed copy" trigger
+the lint wants.
+"""
+from __future__ import annotations
+
+import ast
+import hashlib
+from typing import List, Sequence
+
+# identifier-valued AST fields that bind or reference *local* names and
+# therefore take part in alpha-renaming (everything else — attribute
+# names, call keywords, import sources — is compared verbatim)
+_RENAMED_FIELDS = {
+    (ast.FunctionDef, "name"), (ast.AsyncFunctionDef, "name"),
+    (ast.ClassDef, "name"), (ast.ExceptHandler, "name"),
+}
+
+
+class _Env:
+    """First-occurrence alpha-renaming environment."""
+
+    def __init__(self) -> None:
+        self._map: dict = {}
+
+    def rename(self, name: str) -> str:
+        if name not in self._map:
+            self._map[name] = f"ν{len(self._map)}"
+        return self._map[name]
+
+
+def _is_docstring(stmt: ast.stmt) -> bool:
+    return (isinstance(stmt, ast.Expr)
+            and isinstance(stmt.value, ast.Constant)
+            and isinstance(stmt.value.value, str))
+
+
+def strip_docstring(body: Sequence[ast.stmt]) -> List[ast.stmt]:
+    """Drop a leading docstring when other statements follow it."""
+    body = list(body)
+    if len(body) > 1 and _is_docstring(body[0]):
+        return body[1:]
+    return body
+
+
+def _canon(node, env: _Env, out: List[str]) -> None:
+    if node is None:
+        out.append("∅")
+        return
+    if isinstance(node, ast.Name):
+        out.append(f"N:{env.rename(node.id)}")
+        return
+    if isinstance(node, ast.arg):
+        out.append(f"a:{env.rename(node.arg)}")
+        return
+    if isinstance(node, ast.Attribute):
+        out.append("Attr(")
+        _canon(node.value, env, out)
+        out.append(f",{node.attr})")
+        return
+    if isinstance(node, ast.Constant):
+        out.append(f"C:{type(node.value).__name__}:{node.value!r}")
+        return
+    if isinstance(node, (ast.Load, ast.Store, ast.Del)):
+        return
+    if isinstance(node, ast.keyword):
+        # keyword names are part of the call contract — verbatim
+        out.append(f"kw:{node.arg or '**'}(")
+        _canon(node.value, env, out)
+        out.append(")")
+        return
+    if isinstance(node, ast.alias):
+        out.append(f"alias:{node.name}")
+        if node.asname:
+            out.append(f"as:{env.rename(node.asname)}")
+        return
+    if isinstance(node, (ast.Global, ast.Nonlocal)):
+        out.append(type(node).__name__ + "("
+                   + ",".join(env.rename(n) for n in node.names) + ")")
+        return
+    if isinstance(node, ast.AnnAssign):
+        # annotation is cosmetic; a value-less AnnAssign is a pure
+        # declaration and canonicalizes to its target alone
+        out.append("Ann(")
+        _canon(node.target, env, out)
+        out.append(",")
+        _canon(node.value, env, out)
+        out.append(")")
+        return
+    out.append(type(node).__name__ + "(")
+    for field, value in ast.iter_fields(node):
+        if field in ("type_comment", "annotation", "returns",
+                     "lineno", "col_offset"):
+            continue
+        if (type(node), field) in _RENAMED_FIELDS:
+            out.append(f"{field}={env.rename(value) if value else '∅'},")
+            continue
+        if field == "body" and isinstance(
+                node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                       ast.ClassDef, ast.Module)):
+            value = strip_docstring(value)
+        if isinstance(value, list):
+            out.append(f"{field}=[")
+            for item in value:
+                _canon(item, env, out)
+                out.append(",")
+            out.append("],")
+        elif isinstance(value, ast.AST):
+            out.append(f"{field}=")
+            _canon(value, env, out)
+            out.append(",")
+        else:
+            out.append(f"{field}={value!r},")
+    out.append(")")
+
+
+def canonical_dump(nodes) -> str:
+    """Canonicalize a node or statement sequence to a comparable string
+    (one fresh renaming environment per call)."""
+    env = _Env()
+    out: List[str] = []
+    if isinstance(nodes, (list, tuple)):
+        for n in nodes:
+            _canon(n, env, out)
+            out.append(";")
+    else:
+        _canon(nodes, env, out)
+    return "".join(out)
+
+
+def body_dump(func: ast.AST) -> str:
+    """Canonical dump of a function's body (docstring stripped) — what a
+    strict ``inline-of`` copy is compared against."""
+    if not isinstance(func, (ast.FunctionDef, ast.AsyncFunctionDef)):
+        raise TypeError(f"expected a function, got {type(func).__name__}")
+    return canonical_dump(strip_docstring(func.body))
+
+
+def fingerprint(func: ast.AST) -> str:
+    """Short stable hash of a function's normalized AST (arguments +
+    body, docstring and annotations stripped) for ``pin=`` markers."""
+    dump = canonical_dump(func)
+    return hashlib.sha256(dump.encode("utf-8")).hexdigest()[:12]
+
+
+def alpha_equal(stmts: Sequence[ast.stmt], func: ast.AST) -> bool:
+    """True when ``stmts`` alpha-matches the body of ``func``."""
+    return canonical_dump(list(stmts)) == body_dump(func)

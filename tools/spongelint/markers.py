@@ -1,0 +1,111 @@
+"""Comment directives: ``inline-of`` markers and suppressions.
+
+Grammar (one directive per comment, anywhere a comment is legal)::
+
+    # spongelint: inline-of <module.qualname> [pin=<hex>] [stmts=<N>]
+    # spongelint: disable=<rule>[,<rule>...]   [-- reason]
+
+``inline-of`` marks an inlined copy of a canonical function:
+
+* as a **standalone** comment it anchors to the next statement (with
+  ``stmts=N``, to that statement and its next ``N-1`` siblings);
+* as a **trailing** comment it anchors to the outermost statement that
+  starts on its line;
+* without ``pin=`` the anchored statements must alpha-match the
+  canonical function's body (strict verbatim-inline contract);
+* with ``pin=<hex>`` the copy is a documented *transformation* of the
+  canonical (hoisted loads, scalarized array ops): the pin is the
+  canonical's :func:`~tools.spongelint.astnorm.fingerprint`, so any
+  statement-level change to the canonical breaks the pin and forces
+  re-verification of the copy (``python -m tools.spongelint
+  --print-pin <target>`` prints the current value to re-stamp with).
+
+``disable=`` suppresses the named rules for the comment's own line
+(trailing form) or the next line (standalone form); everything after
+``--`` is a free-form reason.  Rule names must exist — a typo'd
+suppression is itself reported.
+"""
+from __future__ import annotations
+
+import io
+import re
+import tokenize
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Set, Tuple
+
+_DIRECTIVE = re.compile(r"#\s*spongelint:\s*(?P<body>.+?)\s*$")
+_INLINE_OF = re.compile(
+    r"^inline-of\s+(?P<target>[A-Za-z_][\w.]*)"
+    r"(?P<opts>(?:\s+\w+=\S+)*)\s*$")
+_DISABLE = re.compile(
+    r"^disable=(?P<rules>[\w,-]+)(?:\s+--\s*(?P<reason>.*))?$")
+_OPT = re.compile(r"(\w+)=(\S+)")
+
+
+@dataclass
+class InlineMarker:
+    """One parsed ``inline-of`` directive."""
+    line: int                    # 1-based line the comment sits on
+    standalone: bool             # comment-only line vs trailing
+    target: str                  # module.qualname of the canonical
+    pin: Optional[str] = None    # expected canonical fingerprint
+    stmts: int = 1               # statements covered (strict mode)
+
+
+@dataclass
+class Directives:
+    """Every spongelint directive found in one file."""
+    markers: List[InlineMarker] = field(default_factory=list)
+    # line -> rule names suppressed on that line
+    suppressions: Dict[int, Set[str]] = field(default_factory=dict)
+    # (line, message) pairs for malformed directives
+    errors: List[Tuple[int, str]] = field(default_factory=list)
+
+
+def parse_directives(source: str) -> Directives:
+    """Extract markers and suppressions from ``source`` (tokenize-based,
+    so directives inside string literals are never misread)."""
+    out = Directives()
+    try:
+        tokens = tokenize.generate_tokens(io.StringIO(source).readline)
+        comments = [(t.start[0], t.start[1], t.string, t.line)
+                    for t in tokens if t.type == tokenize.COMMENT]
+    except (tokenize.TokenError, SyntaxError, IndentationError):
+        return out
+    for line, col, text, raw_line in comments:
+        m = _DIRECTIVE.match(text)
+        if m is None:
+            continue
+        body = m.group("body")
+        standalone = raw_line[:col].strip() == ""
+        im = _INLINE_OF.match(body)
+        if im is not None:
+            marker = InlineMarker(line=line, standalone=standalone,
+                                  target=im.group("target"))
+            bad = False
+            for key, val in _OPT.findall(im.group("opts") or ""):
+                if key == "pin":
+                    marker.pin = val
+                elif key == "stmts":
+                    try:
+                        marker.stmts = int(val)
+                    except ValueError:
+                        bad = True
+                    if marker.stmts < 1:
+                        bad = True
+                else:
+                    bad = True
+            if bad:
+                out.errors.append(
+                    (line, f"malformed inline-of options: {body!r}"))
+            else:
+                out.markers.append(marker)
+            continue
+        dm = _DISABLE.match(body)
+        if dm is not None:
+            rules = {r for r in dm.group("rules").split(",") if r}
+            target_line = line if not standalone else line + 1
+            out.suppressions.setdefault(target_line, set()).update(rules)
+            continue
+        out.errors.append((line, f"unrecognized directive: {body!r}"))
+    return out

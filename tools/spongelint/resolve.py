@@ -1,0 +1,77 @@
+"""Static ``module.qualname`` → AST resolution for ``inline-of`` targets.
+
+No imports are executed: the module path is mapped to a source file
+under one of the resolution roots (longest importable prefix wins —
+``repro.serving.fastpath._Slot.account`` resolves the module
+``repro/serving/fastpath.py`` and walks the remaining ``_Slot.account``
+through the parsed class/function tree).  Parsed modules are cached per
+linter run.
+"""
+from __future__ import annotations
+
+import ast
+from pathlib import Path
+from typing import Dict, List, Optional, Sequence, Tuple
+
+
+class ResolutionError(LookupError):
+    """The target cannot be mapped to a function definition."""
+
+
+class TargetResolver:
+    """Resolve dotted targets against a list of source roots."""
+
+    def __init__(self, roots: Sequence[Path]):
+        self.roots = [Path(r) for r in roots]
+        self._trees: Dict[Path, ast.Module] = {}
+
+    def _parse(self, path: Path) -> ast.Module:
+        if path not in self._trees:
+            self._trees[path] = ast.parse(path.read_text(encoding="utf-8"),
+                                          filename=str(path))
+        return self._trees[path]
+
+    def _module_file(self, parts: List[str]
+                     ) -> Optional[Tuple[Path, List[str]]]:
+        """Longest prefix of ``parts`` that is a module file under a
+        root; returns ``(file, remaining_qualname_parts)``."""
+        for i in range(len(parts), 0, -1):
+            rel = Path(*parts[:i])
+            for root in self.roots:
+                mod = root / rel.with_suffix(".py")
+                if mod.is_file():
+                    return mod, parts[i:]
+                pkg = root / rel / "__init__.py"
+                if pkg.is_file():
+                    return pkg, parts[i:]
+        return None
+
+    def resolve(self, target: str) -> Tuple[Path, ast.FunctionDef]:
+        """Map ``module.qualname`` to ``(source_file, FunctionDef)``."""
+        parts = target.split(".")
+        hit = self._module_file(parts)
+        if hit is None:
+            raise ResolutionError(
+                f"no module file for {target!r} under roots "
+                f"{[str(r) for r in self.roots]}")
+        path, qual = hit
+        if not qual:
+            raise ResolutionError(
+                f"{target!r} names a module, not a function")
+        node: ast.AST = self._parse(path)
+        for name in qual:
+            body = getattr(node, "body", [])
+            nxt = next((s for s in body
+                        if isinstance(s, (ast.FunctionDef,
+                                          ast.AsyncFunctionDef,
+                                          ast.ClassDef))
+                        and s.name == name), None)
+            if nxt is None:
+                raise ResolutionError(
+                    f"{'.'.join(qual)!r} not found in {path.name}")
+            node = nxt
+        if not isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            raise ResolutionError(
+                f"{target!r} resolves to a {type(node).__name__}, "
+                "not a function")
+        return path, node

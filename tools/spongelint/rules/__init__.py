@@ -1,0 +1,3 @@
+"""Rule modules — importing this package registers every rule."""
+from tools.spongelint.rules import (deprecation, determinism,  # noqa: F401
+                                    inline_drift, scan_purity)

@@ -1,0 +1,78 @@
+"""deprecation-hygiene: non-test code must not import deprecated shims.
+
+``repro.serving.simulator``, ``repro.serving.engine`` and
+``repro.core.multidim`` are warn-on-import compatibility shims kept
+only so historical test suites and notebooks keep working.  New code
+reaching through them silently re-entrenches the old API and hides the
+DeprecationWarning behind ``warnings.catch_warnings`` blocks.  This
+rule flags any ``import`` of a deprecated module from non-test code.
+
+Exempt: files named ``test_*.py`` / ``conftest.py`` (the shims'
+regression tests must import them) and the shim modules themselves.
+A deliberate use (e.g. an ablation benchmark comparing against the
+legacy solver) carries an explicit suppression::
+
+    # spongelint: disable=deprecation-hygiene -- comparing legacy solver
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterable, List
+
+from tools.spongelint import FileContext, Finding, rule
+
+RULE = "deprecation-hygiene"
+
+DEPRECATED = {
+    "repro.serving.simulator":
+        "use repro.serving.fastpath / repro.serving.api instead",
+    "repro.serving.engine":
+        "use repro.serving.api (build_llm_step_fns, serve_*) instead",
+    "repro.core.multidim":
+        "use repro.core.solver (MemoizedSolver) instead",
+}
+# ``from repro.serving import engine`` style: parent package -> leaf names
+_PARENTS = {}
+for _mod in DEPRECATED:
+    _pkg, _, _leaf = _mod.rpartition(".")
+    _PARENTS.setdefault(_pkg, set()).add(_leaf)
+
+
+def _exempt(ctx: FileContext) -> bool:
+    name = ctx.path.name
+    if name.startswith("test_") or name == "conftest.py":
+        return True
+    # the shims themselves (and their re-export guards)
+    mod_key = "/".join(ctx.path.parts[-3:]).replace(".py", "") \
+        .replace("/", ".")
+    return any(mod_key.endswith(m.split(".", 1)[1]) for m in DEPRECATED)
+
+
+@rule(RULE, "non-test code must not import deprecated shim modules")
+def check(ctx: FileContext) -> Iterable[Finding]:
+    if _exempt(ctx):
+        return []
+    findings: List[Finding] = []
+    for node in ast.walk(ctx.tree):
+        if isinstance(node, ast.Import):
+            for a in node.names:
+                hit = next((m for m in DEPRECATED
+                            if a.name == m or a.name.startswith(m + ".")),
+                           None)
+                if hit:
+                    findings.append(ctx.finding(
+                        node, RULE, f"import of deprecated {hit}: "
+                        f"{DEPRECATED[hit]}"))
+        elif isinstance(node, ast.ImportFrom) and node.module:
+            if node.module in DEPRECATED:
+                findings.append(ctx.finding(
+                    node, RULE, f"import from deprecated {node.module}: "
+                    f"{DEPRECATED[node.module]}"))
+            elif node.module in _PARENTS:
+                for a in node.names:
+                    if a.name in _PARENTS[node.module]:
+                        findings.append(ctx.finding(
+                            node, RULE, "import of deprecated "
+                            f"{node.module}.{a.name}: "
+                            f"{DEPRECATED[f'{node.module}.{a.name}']}"))
+    return findings

@@ -1,0 +1,146 @@
+"""determinism: keep the hot paths replayable bit-for-bit.
+
+Every engine-identity contract in this repo (reference == fast ==
+vector == scan) assumes a run is a pure function of its workload and
+seed.  Inside the ``serving``/``core`` hot paths this rule forbids:
+
+* **wall-clock reads** — ``time.time`` / ``time.time_ns`` /
+  ``datetime.now`` and friends.  (``time.perf_counter`` /
+  ``time.monotonic`` stay legal: they feed duration *telemetry* like
+  ``Decision.solver_time``, which is excluded from the identity
+  contracts.)
+* **unseeded global RNG** — the module-level ``random.*`` functions
+  and legacy ``numpy.random.*`` global API mutate interpreter-global
+  state; replays must thread explicit seeded generators
+  (``np.random.default_rng(seed)`` / ``random.Random(seed)``).
+  Constructing a generator *without* a seed is flagged too.
+* **set iteration** — ``for x in {…}`` / ``set(…)``: with hash
+  randomization the iteration order varies per process, and float
+  accumulation order is load-bearing (see the solver's drain loops and
+  ``_Slot.account``); iterate a list or ``sorted(...)`` instead.
+
+Scope: files with a ``serving`` or ``core`` directory component.
+Suppress a deliberate use with ``# spongelint: disable=determinism``.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, Iterable, List
+
+from tools.spongelint import FileContext, Finding, rule
+
+RULE = "determinism"
+
+_WALL_CLOCK = {
+    "time.time", "time.time_ns",
+    "datetime.datetime.now", "datetime.datetime.utcnow",
+    "datetime.datetime.today", "datetime.date.today",
+}
+# numpy.random attributes that are generator *constructors*, not draws
+# from the global state
+_NP_RANDOM_OK = {"default_rng", "Generator", "RandomState",
+                 "SeedSequence", "BitGenerator", "PCG64", "Philox",
+                 "MT19937"}
+# constructors that must be given an explicit seed
+_NEEDS_SEED = {"numpy.random.default_rng", "numpy.random.RandomState",
+               "random.Random"}
+_RANDOM_CLASSES = {"Random", "SystemRandom"}
+
+
+def _alias_map(tree: ast.Module) -> Dict[str, str]:
+    """Local name -> dotted import source, for top-level and nested
+    imports alike (``np`` -> ``numpy``, ``time`` -> ``time``, …)."""
+    aliases: Dict[str, str] = {}
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Import):
+            for a in node.names:
+                local = a.asname or a.name.split(".")[0]
+                aliases[local] = a.name if a.asname else a.name.split(".")[0]
+        elif isinstance(node, ast.ImportFrom) and node.module \
+                and node.level == 0:
+            for a in node.names:
+                if a.name == "*":
+                    continue
+                aliases[a.asname or a.name] = f"{node.module}.{a.name}"
+    return aliases
+
+
+def _dotted(node: ast.AST, aliases: Dict[str, str]) -> str:
+    """Resolve ``np.random.rand`` to ``numpy.random.rand`` (empty string
+    when the chain does not bottom out in an imported name)."""
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if not isinstance(node, ast.Name):
+        return ""
+    base = aliases.get(node.id)
+    if base is None:
+        return ""
+    parts.append(base)
+    return ".".join(reversed(parts))
+
+
+def _is_set_expr(node: ast.AST) -> bool:
+    if isinstance(node, (ast.Set, ast.SetComp)):
+        return True
+    return (isinstance(node, ast.Call)
+            and isinstance(node.func, ast.Name)
+            and node.func.id in ("set", "frozenset"))
+
+
+def in_scope(ctx: FileContext) -> bool:
+    return "serving" in ctx.parts or "core" in ctx.parts
+
+
+@rule(RULE, "no wall-clock, unseeded global RNG, or set iteration in "
+            "serving/core hot paths")
+def check(ctx: FileContext) -> Iterable[Finding]:
+    if not in_scope(ctx):
+        return []
+    aliases = _alias_map(ctx.tree)
+    findings: List[Finding] = []
+    for node in ast.walk(ctx.tree):
+        if isinstance(node, ast.Call):
+            dotted = _dotted(node.func, aliases)
+            if not dotted:
+                continue
+            if dotted in _WALL_CLOCK:
+                findings.append(ctx.finding(
+                    node, RULE, f"wall-clock read {dotted}() in a hot "
+                    "path: decisions must be a function of virtual "
+                    "time only (perf_counter is fine for telemetry)"))
+            elif dotted.startswith("numpy.random."):
+                attr = dotted.split(".")[-1]
+                if attr not in _NP_RANDOM_OK:
+                    findings.append(ctx.finding(
+                        node, RULE, f"global numpy RNG {dotted}(): "
+                        "thread an explicit np.random.default_rng("
+                        "seed) instead"))
+            elif dotted.startswith("random.") \
+                    and dotted.split(".")[-1] not in _RANDOM_CLASSES \
+                    and dotted.count(".") == 1:
+                findings.append(ctx.finding(
+                    node, RULE, f"global stdlib RNG {dotted}(): thread "
+                    "an explicit random.Random(seed) instead"))
+            if dotted in _NEEDS_SEED and not node.args \
+                    and not node.keywords:
+                findings.append(ctx.finding(
+                    node, RULE, f"{dotted}() constructed without a "
+                    "seed: replays will not be reproducible"))
+        elif isinstance(node, (ast.For, ast.AsyncFor)):
+            if _is_set_expr(node.iter):
+                findings.append(ctx.finding(
+                    node, RULE, "iteration over a set in a hot path: "
+                    "order varies under hash randomization and float "
+                    "accumulation order is load-bearing — iterate a "
+                    "list or sorted(...)"))
+        elif isinstance(node, (ast.ListComp, ast.SetComp, ast.DictComp,
+                               ast.GeneratorExp)):
+            for gen in node.generators:
+                if _is_set_expr(gen.iter):
+                    findings.append(ctx.finding(
+                        node, RULE, "comprehension over a set in a hot "
+                        "path: order varies under hash randomization — "
+                        "iterate a list or sorted(...)"))
+    return findings

@@ -1,0 +1,116 @@
+"""inline-drift: machine-check every "inlined verbatim" contract.
+
+The fast engines inline canonical accounting/decision code into their
+hot loops (``vectorpath._run_ticks_fast`` carries ``_Slot.account``
+and the scaler's decide arithmetic; the session/fleet/tenant dispatch
+loops carry each other's "rules, verbatim").  Each such copy must be
+marked::
+
+    # spongelint: inline-of repro.serving.fastpath._Slot.account
+
+Strict markers (no ``pin=``): the marked statements must alpha-match
+the canonical function's body (see ``tools.spongelint.astnorm``) —
+reordering, inserting or deleting a statement in either the copy or
+the canonical fails the lint.
+
+Pinned markers (``pin=<hex>``): the copy is a documented transformation
+(hoisted loads, scalarized arithmetic) that cannot be AST-matched; the
+pin is the canonical function's normalized fingerprint.  Any
+statement-level change to the canonical breaks the pin, failing the
+lint until a human re-verifies the transformed copy and re-stamps
+(``python -m tools.spongelint --print-pin <target>``).
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterable, List, Optional
+
+from tools.spongelint import FileContext, Finding, rule
+from tools.spongelint.astnorm import (body_dump, canonical_dump,
+                                      fingerprint, strip_docstring)
+from tools.spongelint.markers import InlineMarker
+from tools.spongelint.resolve import ResolutionError
+
+RULE = "inline-drift"
+
+
+def _statement_lists(tree: ast.Module) -> List[List[ast.stmt]]:
+    """Every statement suite in the module (module body, function and
+    class bodies, branch suites) — the sibling groups markers index."""
+    suites: List[List[ast.stmt]] = []
+    for node in ast.walk(tree):
+        for field in ("body", "orelse", "finalbody"):
+            val = getattr(node, field, None)
+            if isinstance(val, list) and val \
+                    and all(isinstance(s, ast.stmt) for s in val):
+                suites.append(val)
+    return suites
+
+
+def _anchor(marker: InlineMarker, suites: List[List[ast.stmt]]
+            ) -> Optional[List[ast.stmt]]:
+    """The statements a marker covers, or None when nothing anchors."""
+    best = None          # (lineno, col, suite, index)
+    for suite in suites:
+        for i, stmt in enumerate(suite):
+            ln, col = stmt.lineno, stmt.col_offset
+            if marker.standalone:
+                ok = ln > marker.line
+            else:
+                ok = ln == marker.line
+            if not ok:
+                continue
+            key = (ln, col)
+            if best is None or key < best[0]:
+                best = (key, suite, i)
+    if best is None:
+        return None
+    _, suite, i = best
+    if i + marker.stmts > len(suite):
+        return None
+    return suite[i:i + marker.stmts]
+
+
+@rule(RULE, "annotated inlined copies must match their canonical source")
+def check(ctx: FileContext) -> Iterable[Finding]:
+    markers = ctx.directives.markers
+    if not markers:
+        return []
+    findings: List[Finding] = []
+    suites = _statement_lists(ctx.tree)
+    for m in markers:
+        try:
+            src_path, func = ctx.resolver.resolve(m.target)
+        except (ResolutionError, OSError, SyntaxError) as e:
+            findings.append(ctx.finding(
+                m.line, RULE, "cannot resolve inline-of target "
+                f"{m.target!r}: {e}"))
+            continue
+        if m.pin is not None:
+            actual = fingerprint(func)
+            if actual != m.pin:
+                findings.append(ctx.finding(
+                    m.line, RULE,
+                    f"canonical {m.target} changed (pin {m.pin}, now "
+                    f"{actual}): re-verify the transformed copy below, "
+                    "then re-stamp with `python -m tools.spongelint "
+                    f"--print-pin {m.target}`"))
+            continue
+        stmts = _anchor(m, suites)
+        if stmts is None:
+            findings.append(ctx.finding(
+                m.line, RULE, "inline-of marker anchors to no "
+                f"statement (stmts={m.stmts})"))
+            continue
+        if len(stmts) == 1 and isinstance(
+                stmts[0], (ast.FunctionDef, ast.AsyncFunctionDef)):
+            copy_dump = canonical_dump(strip_docstring(stmts[0].body))
+        else:
+            copy_dump = canonical_dump(stmts)
+        if copy_dump != body_dump(func):
+            findings.append(ctx.finding(
+                stmts[0], RULE,
+                f"inlined copy has drifted from {m.target} "
+                f"({src_path.name}:{func.lineno}): statements no longer "
+                "alpha-match the canonical body"))
+    return findings

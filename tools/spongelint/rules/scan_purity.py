@@ -1,0 +1,160 @@
+"""scan-purity: functions traced by ``lax.scan`` / ``jax.jit`` stay pure.
+
+The scan-path engine compiles its decode step once and replays it for
+every chunk; a traced function runs at *trace* time, so closure
+mutation, I/O, or host callbacks silently execute once (or never) and
+then disappear from the compiled computation.  This rule finds every
+function handed to ``lax.scan`` or ``jax.jit`` (positional argument,
+decorator, or lambda) and flags, inside it:
+
+* ``global`` / ``nonlocal`` declarations — closure mutation;
+* assignment to attributes, or to subscripts of names the function
+  does not bind itself — mutating enclosing state;
+* mutating method calls (``append`` / ``update`` / ``write`` / …) on
+  names the function does not bind itself;
+* I/O builtins (``print`` / ``open`` / ``input``);
+* host callbacks outside the whitelist (``jax.debug.print`` and
+  ``jax.debug.callback`` are allowed — they are trace-safe debugging
+  aids; ``io_callback`` / ``pure_callback`` / ``host_callback`` are
+  not, because the repo's scan step must stay device-only).
+
+Suppress a deliberate exception with
+``# spongelint: disable=scan-purity``.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, Iterable, List, Set
+
+from tools.spongelint import FileContext, Finding, rule
+from tools.spongelint.rules.determinism import _alias_map, _dotted
+
+RULE = "scan-purity"
+
+_TRACE_ENTRY = {"jax.lax.scan": 0, "jax.jit": 0}
+_IO_BUILTINS = {"print", "open", "input", "breakpoint"}
+_CALLBACK_WHITELIST = {"jax.debug.print", "jax.debug.callback"}
+_CALLBACK_BANNED = {
+    "jax.pure_callback", "jax.experimental.io_callback",
+    "jax.experimental.host_callback.call",
+    "jax.experimental.host_callback.id_tap", "jax.debug.breakpoint",
+}
+_MUTATORS = {"append", "extend", "insert", "remove", "pop", "clear",
+             "update", "setdefault", "add", "discard", "write",
+             "writelines", "sort", "reverse"}
+
+
+def _local_names(fn: ast.AST) -> Set[str]:
+    """Names the function binds itself: parameters plus store-targets."""
+    names: Set[str] = set()
+    for node in ast.walk(fn):
+        if isinstance(node, ast.arg):
+            names.add(node.arg)
+        elif isinstance(node, ast.Name) and isinstance(node.ctx, ast.Store):
+            names.add(node.id)
+        elif isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            names.add(node.name)
+    return names
+
+
+def _check_traced(ctx: FileContext, fn: ast.AST, label: str,
+                  aliases: Dict[str, str]) -> List[Finding]:
+    findings: List[Finding] = []
+    local = _local_names(fn)
+    for node in ast.walk(fn):
+        if isinstance(node, (ast.Global, ast.Nonlocal)):
+            findings.append(ctx.finding(
+                node, RULE, f"{label}: {type(node).__name__.lower()} "
+                "declaration mutates enclosing state inside a traced "
+                "function"))
+        elif isinstance(node, (ast.Assign, ast.AugAssign, ast.AnnAssign)):
+            targets = node.targets if isinstance(node, ast.Assign) \
+                else [node.target]
+            for t in targets:
+                if isinstance(t, ast.Attribute):
+                    findings.append(ctx.finding(
+                        node, RULE, f"{label}: attribute assignment "
+                        "mutates object state inside a traced function"))
+                elif isinstance(t, ast.Subscript) \
+                        and isinstance(t.value, ast.Name) \
+                        and t.value.id not in local:
+                    findings.append(ctx.finding(
+                        node, RULE, f"{label}: subscript assignment to "
+                        f"closed-over {t.value.id!r} inside a traced "
+                        "function"))
+        elif isinstance(node, ast.Call):
+            if isinstance(node.func, ast.Name) \
+                    and node.func.id in _IO_BUILTINS \
+                    and node.func.id not in local:
+                findings.append(ctx.finding(
+                    node, RULE, f"{label}: {node.func.id}() performs "
+                    "host I/O inside a traced function"))
+                continue
+            dotted = _dotted(node.func, aliases)
+            if dotted in _CALLBACK_BANNED or (
+                    dotted and "callback" in dotted
+                    and dotted not in _CALLBACK_WHITELIST):
+                findings.append(ctx.finding(
+                    node, RULE, f"{label}: host callback {dotted} is "
+                    "not whitelisted (allowed: "
+                    f"{', '.join(sorted(_CALLBACK_WHITELIST))})"))
+            elif isinstance(node.func, ast.Attribute) \
+                    and node.func.attr in _MUTATORS \
+                    and isinstance(node.func.value, ast.Name) \
+                    and node.func.value.id not in local \
+                    and node.func.value.id not in aliases:
+                findings.append(ctx.finding(
+                    node, RULE, f"{label}: .{node.func.attr}() on "
+                    f"closed-over {node.func.value.id!r} mutates "
+                    "enclosing state inside a traced function"))
+    return findings
+
+
+def _is_trace_deco(deco: ast.expr, aliases: Dict[str, str]) -> bool:
+    if _dotted(deco, aliases) == "jax.jit":
+        return True
+    if isinstance(deco, ast.Call):
+        if _dotted(deco.func, aliases) == "jax.jit":
+            return True
+        # functools.partial(jax.jit, ...) applied as a decorator
+        if _dotted(deco.func, aliases) == "functools.partial" \
+                and deco.args \
+                and _dotted(deco.args[0], aliases) == "jax.jit":
+            return True
+    return False
+
+
+@rule(RULE, "functions passed to lax.scan/jax.jit must not mutate "
+            "closures, do I/O, or call non-whitelisted callbacks")
+def check(ctx: FileContext) -> Iterable[Finding]:
+    aliases = _alias_map(ctx.tree)
+    defs: Dict[str, List[ast.AST]] = {}
+    for node in ast.walk(ctx.tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            defs.setdefault(node.name, []).append(node)
+
+    findings: List[Finding] = []
+    seen: Set[int] = set()
+
+    def visit(fn: ast.AST, label: str) -> None:
+        if id(fn) in seen:
+            return
+        seen.add(id(fn))
+        findings.extend(_check_traced(ctx, fn, label, aliases))
+
+    for node in ast.walk(ctx.tree):
+        if isinstance(node, ast.Call):
+            dotted = _dotted(node.func, aliases)
+            idx = _TRACE_ENTRY.get(dotted)
+            if idx is None or len(node.args) <= idx:
+                continue
+            arg = node.args[idx]
+            if isinstance(arg, ast.Lambda):
+                visit(arg, f"lambda traced by {dotted}")
+            elif isinstance(arg, ast.Name):
+                for fn in defs.get(arg.id, []):
+                    visit(fn, f"{arg.id} (traced by {dotted})")
+        elif isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            if any(_is_trace_deco(d, aliases) for d in node.decorator_list):
+                visit(node, f"{node.name} (decorated with jax.jit)")
+    return findings
